@@ -1,0 +1,64 @@
+"""Benchmark harness plumbing: wall-clock timing of jit'd callables on this
+CPU host plus derived model-level metrics.
+
+Wall-clock numbers on a CPU container do not reproduce the paper's V100
+throughput; what they DO establish (and what each benchmark asserts) is the
+*shape* of the paper's claims: matmul-form vs element-form op counts, the
+bandwidth-boundedness of reduction/scan, and the HLO-level ALU-mix proxy
+for the power results. Every benchmark prints a CSV block
+``name,<cols>`` followed by rows, and is one-to-one with a paper figure.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call of an already-jit'd fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def elems_per_sec(n_elems: int, seconds: float) -> float:
+    return n_elems / max(seconds, 1e-12)
+
+
+def hlo_op_mix(fn, *args) -> dict:
+    """Loop-aware op-mix from the compiled HLO (the paper's §6.3 proxy:
+    count matmul-form vs vector-ALU work)."""
+    import sys
+    sys.path.insert(0, "src")
+    from repro.launch.hlo_analysis import (ELEMWISE_1, _instr_flops,
+                                           parse_computations, analyse)
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    txt = compiled.as_text()
+    h = analyse(txt)
+    comps = parse_computations(txt)
+    dot_flops = 0.0
+    vpu_flops = 0.0
+    for comp in comps.values():
+        for instr in comp.instrs:
+            f = _instr_flops(instr, comp)
+            if instr.opcode in ("dot", "convolution"):
+                dot_flops += f
+            else:
+                vpu_flops += f
+    return {"total_flops": h["flops"], "dot_flops": dot_flops,
+            "vpu_flops": vpu_flops, "memory_bytes": h["memory_bytes"]}
+
+
+def print_csv(name: str, cols: list, rows: list) -> None:
+    print(f"\n# {name}")
+    print(",".join(cols))
+    for row in rows:
+        print(",".join(str(x) for x in row))

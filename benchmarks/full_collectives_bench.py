@@ -1,0 +1,42 @@
+"""Paper Figures 13/14: full (grid-level) reduction and scan vs input size.
+
+The device-level composition (tile scan -> tile-totals scan -> carry add,
+repro.core.tcu_scan's recursion) against XLA's native sum/cumsum, over
+input sizes 2^16..2^24.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import elems_per_sec, print_csv, time_fn
+
+
+def run() -> list:
+    import repro.core as core
+
+    rows = []
+    for log_n in range(16, 25, 2):
+        n = 1 << log_n
+        x = jax.random.normal(jax.random.PRNGKey(2), (n,))
+        cases = {
+            "tcu_full_reduce": lambda a: core.tcu_reduce(
+                a, formulation="tile"),
+            "base_full_reduce": jnp.sum,
+            "tcu_full_scan": core.tcu_scan,
+            "base_full_scan": jnp.cumsum,
+        }
+        for name, fn in cases.items():
+            t = time_fn(jax.jit(fn), x)
+            rows.append([name, n, f"{t * 1e6:.1f}",
+                         f"{elems_per_sec(n, t) / 1e9:.3f}"])
+    return rows
+
+
+def main() -> None:
+    print_csv("fig13_14_full_reduce_scan",
+              ["algo", "n", "us_per_call", "belems_s"], run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Figure 2/3: GEMM / GEMV throughput, matmul-unit vs vector path.
+
+On the V100 the paper contrasted cuBLAS-with-TCU vs without; the TPU-native
+analogue contrasts an MXU-shaped bf16 matmul (dims multiples of 128,
+f32 accumulation) against the same computation forced through a vector
+formulation (explicit multiply + sum — what the model code would do if the
+reduction were NOT expressed as a matmul). GEMV = the paper's 'wasteful but
+still winning' case: (M,K)x(K,128) with only one useful output column.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_csv, time_fn
+
+
+def run() -> list:
+    rows = []
+    for m, n, k in ((256, 256, 256), (1024, 1024, 1024),
+                    (2048, 2048, 2048)):
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, k),
+                              jnp.bfloat16)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.bfloat16)
+
+        mm = jax.jit(lambda x, y: jax.lax.dot_general(
+            x, y, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))
+        vec = jax.jit(lambda x, y: jnp.sum(
+            x[:, :, None].astype(jnp.float32)
+            * y[None, :, :].astype(jnp.float32), axis=1))
+        flops = 2 * m * n * k
+        cases = [("gemm_mxu", mm)]
+        if m <= 512:          # vector form materialises (M,K,N) — cap it
+            cases.append(("gemm_vector", vec))
+        for name, fn in cases:
+            t = time_fn(fn, a, b)
+            rows.append([name, f"{m}x{n}x{k}", f"{t * 1e6:.1f}",
+                         f"{flops / t / 1e9:.2f}"])
+
+        # GEMV via a K=128-padded GEMM (the paper's HGEMV trick)
+        v = jax.random.normal(jax.random.PRNGKey(2), (k, 1), jnp.bfloat16)
+        vp = jnp.pad(v, ((0, 0), (0, 127)))
+        gemv_pad = jax.jit(lambda x, y: jax.lax.dot_general(
+            x, y, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, :1])
+        gemv_vec = jax.jit(lambda x, y: jnp.einsum(
+            "mk,ko->mo", x.astype(jnp.float32), y.astype(jnp.float32)))
+        t1 = time_fn(gemv_pad, a, vp)
+        t2 = time_fn(gemv_vec, a, v)
+        gflops = 2 * m * k
+        rows.append(["gemv_padded_gemm", f"{m}x1x{k}", f"{t1 * 1e6:.1f}",
+                     f"{gflops / t1 / 1e9:.2f}"])
+        rows.append(["gemv_vector", f"{m}x1x{k}", f"{t2 * 1e6:.1f}",
+                     f"{gflops / t2 / 1e9:.2f}"])
+    return rows
+
+
+def main() -> None:
+    print_csv("fig2_3_gemm_gemv", ["algo", "shape", "us_per_call",
+                                   "gflops"], run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Run every benchmark (one per paper table/figure) and print CSV blocks.
+
+  python -m benchmarks.run            # all
+  python -m benchmarks.run fig10      # substring filter
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+
+BENCHES = [
+    ("fig2_3_gemm_gemv", "benchmarks.gemm_bench"),
+    ("fig10_segmented_reduce", "benchmarks.segmented_reduce_bench"),
+    ("fig11_small_segments", "benchmarks.small_segment_bench"),
+    ("fig12_segmented_scan", "benchmarks.segmented_scan_bench"),
+    ("fig13_14_full_reduce_scan", "benchmarks.full_collectives_bench"),
+    ("sec6_3_alu_mix_power_proxy", "benchmarks.alu_mix_bench"),
+    ("ssd_weighted_scan", "benchmarks.ssd_bench"),
+]
+
+
+def main() -> None:
+    pat = sys.argv[1] if len(sys.argv) > 1 else ""
+    t0 = time.time()
+    ran = 0
+    for name, module in BENCHES:
+        if pat and pat not in name:
+            continue
+        m = importlib.import_module(module)
+        t = time.time()
+        m.main()
+        print(f"# [{name}] {time.time() - t:.1f}s")
+        ran += 1
+    print(f"\n# {ran} benchmarks in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Figure 10: segmented reduction throughput vs segment size.
+
+Fixed-size input (2^24 elements on this CPU host; the paper used 2^30 on a
+V100), segment size swept over powers of two. Three contenders:
+
+  * ``tcu_tile``  — the paper-faithful tile algebra (repro.core, tile form)
+  * ``tcu_fused`` — the beyond-paper fused matmul form (default path)
+  * ``baseline``  — jnp.sum (XLA's native vector reduction = the CUB stand-in)
+
+Derived column ``belems_s`` = billions of half-precision-equivalent elements
+per second (the paper's y-axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import elems_per_sec, print_csv, time_fn
+
+TOTAL = 1 << 22
+
+
+def run(total: int = TOTAL) -> list:
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (total,), jnp.float32)
+    for log_seg in range(4, 19, 4):
+        seg = 1 << log_seg
+        segs = total // seg
+        xs = x.reshape(segs, seg)
+
+        import repro.core as core
+
+        fns = {
+            "tcu_tile": jax.jit(lambda a: core.tcu_segmented_reduce(
+                a, formulation="tile")),
+            "tcu_fused": jax.jit(lambda a: core.tcu_segmented_reduce(
+                a, formulation="fused")),
+            "baseline_sum": jax.jit(
+                lambda a: jnp.sum(a.astype(jnp.float32), axis=-1)),
+        }
+        for name, fn in fns.items():
+            t = time_fn(fn, xs)
+            rows.append([name, seg, segs, f"{t * 1e6:.1f}",
+                         f"{elems_per_sec(total, t) / 1e9:.3f}"])
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print_csv("fig10_segmented_reduce",
+              ["algo", "segment_size", "n_segments", "us_per_call",
+               "belems_s"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Figure 12: segmented scan throughput vs segment size.
+
+Contenders: the matmul-form scan (repro.core.tcu_scan) vs XLA's native
+``jnp.cumsum`` (the Thrust stand-in). Fixed 2^22-element input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import elems_per_sec, print_csv, time_fn
+
+TOTAL = 1 << 22
+
+
+def run(total: int = TOTAL) -> list:
+    import repro.core as core
+
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (total,), jnp.float32)
+    for log_seg in range(4, 19, 2):
+        seg = 1 << log_seg
+        segs = total // seg
+        xs = x.reshape(segs, seg)
+        fns = {
+            "tcu_scan": jax.jit(core.tcu_segmented_scan),
+            "baseline_cumsum": jax.jit(
+                lambda a: jnp.cumsum(a.astype(jnp.float32), axis=-1)),
+        }
+        for name, fn in fns.items():
+            t = time_fn(fn, xs)
+            rows.append([name, seg, segs, f"{t * 1e6:.1f}",
+                         f"{elems_per_sec(total, t) / 1e9:.3f}"])
+    return rows
+
+
+def main() -> None:
+    print_csv("fig12_segmented_scan",
+              ["algo", "segment_size", "n_segments", "us_per_call",
+               "belems_s"], run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Beyond-paper table: SSD (Mamba-2) chunked scan — the paper's weighted
+scan at model scale — vs the sequential recurrence, over sequence length.
+
+The chunked form is O(L/Q) matmul passes (all MXU work); the sequential
+form is O(L) vector steps. This is the integration point that makes the
+paper's technique land in two assigned architectures (mamba2, zamba2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import elems_per_sec, print_csv, time_fn
+
+
+def run() -> list:
+    from repro.core.ssd import ssd_chunked
+    from repro.kernels.ref import ssd_scan_ref
+
+    rows = []
+    b, h, p, g, n = 2, 4, 64, 1, 64
+    for log_l in (9, 11, 13):
+        L = 1 << log_l
+        ks = jax.random.split(jax.random.PRNGKey(log_l), 5)
+        x = 0.2 * jax.random.normal(ks[0], (b, L, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+        a = -jnp.exp(0.2 * jax.random.normal(ks[2], (h,)))
+        bb = jax.random.normal(ks[3], (b, L, g, n)) / jnp.sqrt(float(n))
+        cc = jax.random.normal(ks[4], (b, L, g, n)) / jnp.sqrt(float(n))
+
+        chunked = jax.jit(lambda *t: ssd_chunked(*t)[0])
+        seq = jax.jit(ssd_scan_ref)
+        t1 = time_fn(chunked, x, dt, a, bb, cc, iters=3)
+        t2 = time_fn(seq, x, dt, a, bb, cc, iters=3)
+        toks = b * L
+        rows.append(["ssd_chunked_matmul", L, f"{t1 * 1e3:.2f}",
+                     f"{elems_per_sec(toks, t1) / 1e3:.1f}"])
+        rows.append(["ssd_sequential", L, f"{t2 * 1e3:.2f}",
+                     f"{elems_per_sec(toks, t2) / 1e3:.1f}"])
+    return rows
+
+
+def main() -> None:
+    print_csv("ssd_weighted_scan", ["algo", "seq_len", "ms_per_call",
+                                    "ktok_s"], run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving example: wave-batched prefill + decode over the engine.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch mamba2-1.3b]
+
+Serves a reduced-config model with batched requests: batched prefill
+(last-position logits only), KV/SSM cache handoff, batched greedy decode.
+Works for every assigned architecture family (dense KV cache, MoE, SSM
+state cache, hybrid, enc-dec).
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro import configs
+from repro.models import build
+from repro.serving.engine import Request, demo_engine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=configs.all_arch_ids())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    mod = configs.get(args.arch)
+    bundle = build(mod.SMOKE)
+    engine = demo_engine(bundle, slots=args.slots, max_new=args.max_new)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        3, mod.SMOKE.vocab, size=int(rng.integers(8, 24)), dtype=np.int32))
+        for i in range(args.requests)]
+
+    t0 = time.time()
+    results = engine.run(reqs)
+    dt = time.time() - t0
+    total = sum(len(r.tokens) for r in results)
+    for r in results:
+        print(f"req {r.uid}: prompt={r.prompt_len} tokens "
+              f"-> {r.tokens[:10]}{'...' if len(r.tokens) > 10 else ''}")
+    print(f"\n{len(results)} requests, {total} new tokens, {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

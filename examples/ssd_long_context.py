@@ -1,0 +1,51 @@
+"""Sequence-parallel SSD: the paper's grid-level scan across devices.
+
+Run:  PYTHONPATH=src python examples/ssd_long_context.py
+
+Demonstrates the long_500k story at example scale: a Mamba-2 SSD layer's
+sequence dimension is sharded over a device mesh; each device computes its
+chunk with the matmul-form weighted scan, and the cross-device carry is the
+paper's scan-then-propagate (repro.core.dist_weighted_scan) — three
+triangular-matmul 'kernels' at tile, core, and mesh level.
+
+Uses 4 fake host devices (set before jax import) — the same code shards
+over the `data` axis of a real pod.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+from jax.sharding import PartitionSpec as P                     # noqa: E402
+
+from repro.core import dist_weighted_scan, tcu_weighted_scan    # noqa: E402
+
+
+def main() -> None:
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    seq = 1 << 16                      # 65k at example scale; 500k on pod
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, seq))
+    log_a = -jax.random.uniform(jax.random.PRNGKey(1), (2, seq)) * 0.01
+
+    def seq_parallel(xl, ll):
+        return dist_weighted_scan(xl, ll, "data")
+
+    sp = jax.jit(jax.shard_map(
+        seq_parallel, mesh=mesh,
+        in_specs=(P(None, "data"), P(None, "data")),
+        out_specs=P(None, "data")))
+
+    got = sp(x, log_a)
+    want = tcu_weighted_scan(x, log_a)          # single-device reference
+    err = float(jnp.max(jnp.abs(got - want)))
+    print(f"sequence-parallel SSD scan over 4 devices, seq={seq}")
+    print(f"max |seq-parallel - single-device| = {err:.2e}")
+    assert err < 1e-2
+    print("OK: the grid-level carry (paper Sec 5.3) is exact")
+
+
+if __name__ == "__main__":
+    main()

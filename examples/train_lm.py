@@ -1,0 +1,78 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on synthetic data, with checkpointing and resume.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is the (b)-deliverable end-to-end example: real config -> data
+pipeline -> jit'd train step (all reductions in matmul form) -> optimizer
+-> checkpoint/resume. On a TPU cluster the same loop runs the FULL configs
+via launch/train.py.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro.models import build
+from repro.models.layers import ModelConfig
+from repro.optim import OptConfig
+from repro.training import TrainConfig, init_train_state, make_train_step
+
+# ~100M params: 12L, d=768, llama-style
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense",
+    n_layers=12, d_model=768, vocab=32000,
+    n_heads=12, n_kv_heads=4, d_ff=2048, head_dim=64,
+    tie_embeddings=True, dtype=jax.numpy.float32, remat_policy="off",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    bundle = build(CFG_100M)
+    print(f"model: {bundle.n_params / 1e6:.1f}M params")
+    opt_cfg = OptConfig(peak_lr=6e-4, warmup_steps=30,
+                        decay_steps=args.steps)
+    state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg)
+    step_fn = jax.jit(make_train_step(bundle, opt_cfg),
+                      donate_argnums=(0,))
+
+    start = ckpt.latest_step(args.ckpt_dir) or 0
+    if start:
+        state = ckpt.restore(args.ckpt_dir, start, state)
+        print(f"resumed from step {start}")
+
+    data = SyntheticLMPipeline(DataConfig(
+        vocab=CFG_100M.vocab, seq_len=args.seq, global_batch=args.batch))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = data.device_batch(step)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % 20 == 0 or step == args.steps - 1:
+            tok_s = args.batch * args.seq * (step - start + 1) / (
+                time.time() - t0)
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({tok_s / 1e3:.1f}k tok/s)")
+        if (step + 1) % 100 == 0:
+            ckpt.save(args.ckpt_dir, step + 1, state)
+
+    ckpt.save(args.ckpt_dir, args.steps, state)
+    print(f"loss: {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"(synthetic data: memorisation curve)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Shared shape-cell definitions and input_specs machinery.
+
+Each arch module exposes:
+  FULL   : the published config (exact numbers from the assignment table)
+  SMOKE  : a reduced same-family config for CPU smoke tests
+  SHAPES : the applicable shape cells (with skip reasons for the rest)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell — weak-type-correct, shardable, no allocation —
+plus the logical axis names the dry-run uses to build in_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ModelConfig
+
+# (seq_len, global_batch, kind)
+SHAPE_TABLE = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# smoke-test shape (CPU, reduced configs)
+SMOKE_SEQ = 128
+SMOKE_BATCH = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    shape: str
+    seq: int
+    batch: int
+    kind: str
+    batch_specs: dict[str, Any]        # name -> ShapeDtypeStruct
+    batch_logical: dict[str, tuple]    # name -> logical axes
+    cache_batch: int = 0               # decode cells: cache batch size
+    cache_len: int = 0
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lm_cell(cfg: ModelConfig, shape: str) -> Cell:
+    seq, batch, kind = SHAPE_TABLE[shape]
+    stub = cfg.stub_tokens
+    if kind in ("train", "prefill"):
+        s_text = seq - stub
+        specs = {"tokens": sds((batch, s_text))}
+        logical = {"tokens": ("batch", None)}
+        if kind == "train":
+            specs["labels"] = sds((batch, s_text))
+            logical["labels"] = ("batch", None)
+        if stub:
+            specs["stub"] = sds((batch, stub, cfg.stub_dim), jnp.bfloat16)
+            logical["stub"] = ("batch", None, None)
+        return Cell(shape, seq, batch, kind, specs, logical)
+    # decode: one new token against a cache of length seq
+    specs = {"tokens": sds((batch, 1))}
+    logical = {"tokens": ("batch", None)}
+    return Cell(shape, seq, batch, kind, specs, logical,
+                cache_batch=batch, cache_len=seq)
+
+
+def encdec_cell(cfg: ModelConfig, shape: str) -> Cell:
+    seq, batch, kind = SHAPE_TABLE[shape]
+    half = seq // 2
+    if kind in ("train", "prefill"):
+        specs = {
+            "frames": sds((batch, half, cfg.d_model), jnp.bfloat16),
+            "tokens": sds((batch, half)),
+        }
+        logical = {"frames": ("batch", None, None), "tokens": ("batch", None)}
+        if kind == "train":
+            specs["labels"] = sds((batch, half))
+            logical["labels"] = ("batch", None)
+        return Cell(shape, seq, batch, kind, specs, logical)
+    specs = {"tokens": sds((batch, 1))}
+    logical = {"tokens": ("batch", None)}
+    return Cell(shape, seq, batch, kind, specs, logical,
+                cache_batch=batch, cache_len=seq)
+
+
+def make_cell(cfg: ModelConfig, shape: str) -> Cell:
+    if cfg.family == "encdec":
+        return encdec_cell(cfg, shape)
+    return lm_cell(cfg, shape)
+
+
+def smoke_batch(cfg: ModelConfig, kind: str = "train"):
+    """Concrete small inputs for the reduced config (CPU smoke tests)."""
+    rng = jax.random.PRNGKey(0)
+    b, s = SMOKE_BATCH, SMOKE_SEQ
+    stub = cfg.stub_tokens
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.random.normal(rng, (b, s, cfg.d_model),
+                                        jnp.float32).astype(cfg.dtype),
+            "tokens": jax.random.randint(rng, (b, s), 0, cfg.vocab),
+            "labels": jax.random.randint(rng, (b, s), 0, cfg.vocab),
+        }
+    out = {
+        "tokens": jax.random.randint(rng, (b, s - stub), 0, cfg.vocab),
+        "labels": jax.random.randint(rng, (b, s - stub), 0, cfg.vocab),
+    }
+    if stub:
+        out["stub"] = jax.random.normal(
+            rng, (b, stub, cfg.stub_dim), jnp.float32).astype(cfg.dtype)
+    return out

@@ -1,0 +1,26 @@
+"""h2o-danube-3-4b [dense] — 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+vocab=32000, llama+mistral mix with sliding-window attention (window 4096).
+[arXiv:2401.16818; unverified]
+"""
+import jax.numpy as jnp
+
+from repro.models.layers import ModelConfig
+
+FULL = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, vocab=32000,
+    n_heads=32, n_kv_heads=8, d_ff=10240, head_dim=120,
+    swa_window=4096, rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="danube3-smoke", family="dense",
+    n_layers=2, d_model=64, vocab=256,
+    n_heads=4, n_kv_heads=2, d_ff=128, head_dim=16,
+    swa_window=32, dtype=jnp.float32, remat_policy="off",
+)
+
+# SWA => sub-quadratic; long_500k decode uses a window-sized ring cache.
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SKIPS: dict = {}
+OPT_STATE_DTYPE = "float32"

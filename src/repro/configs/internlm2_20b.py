@@ -1,0 +1,24 @@
+"""internlm2-20b [dense] — 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92544. [arXiv:2403.17297; hf]
+"""
+import jax.numpy as jnp
+
+from repro.models.layers import ModelConfig
+
+FULL = ModelConfig(
+    name="internlm2-20b", family="dense",
+    n_layers=48, d_model=6144, vocab=92544,
+    n_heads=48, n_kv_heads=8, d_ff=16384, head_dim=128,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="internlm2-smoke", family="dense",
+    n_layers=2, d_model=64, vocab=256,
+    n_heads=4, n_kv_heads=2, d_ff=128, head_dim=16,
+    dtype=jnp.float32, remat_policy="off",
+)
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+SKIPS = {"long_500k": "pure full attention (GQA); skipped per the brief"}
+OPT_STATE_DTYPE = "float32"

@@ -1,0 +1,52 @@
+"""repro.core — the paper's contribution: matmul-form reduction and scan.
+
+Tile level  (paper: warp/WMMA fragment)  -> tiles.py constructors + reduce/scan
+Block level (paper: thread block)        -> multi-tile composition in reduce/scan
+Device/grid level (paper: multi-kernel)  -> distributed.py mesh collectives
+"""
+from repro.core.distributed import (
+    dist_exclusive_carry,
+    dist_reduce,
+    dist_scan,
+    dist_weighted_scan,
+)
+from repro.core.ragged import (
+    tcu_ragged_segment_reduce,
+    tcu_ragged_segment_scan,
+)
+from repro.core.reduce import tcu_reduce, tcu_segmented_reduce
+from repro.core.scan import (
+    tcu_scan,
+    tcu_segmented_scan,
+    tcu_weighted_scan,
+)
+from repro.core.tiles import (
+    DEFAULT_TILE,
+    l_matrix,
+    ones_matrix,
+    p_matrix,
+    segsum,
+    strict_u_matrix,
+    u_matrix,
+)
+
+__all__ = [
+    "DEFAULT_TILE",
+    "dist_exclusive_carry",
+    "dist_reduce",
+    "dist_scan",
+    "dist_weighted_scan",
+    "l_matrix",
+    "ones_matrix",
+    "p_matrix",
+    "segsum",
+    "strict_u_matrix",
+    "tcu_ragged_segment_reduce",
+    "tcu_ragged_segment_scan",
+    "tcu_reduce",
+    "tcu_scan",
+    "tcu_segmented_reduce",
+    "tcu_segmented_scan",
+    "tcu_weighted_scan",
+    "u_matrix",
+]

@@ -1,0 +1,91 @@
+"""Device-level ("grid-level", paper §4.3/§5.3) reduction and scan.
+
+The paper's grid level uses multiple kernel launches with partials in global
+memory. The TPU-native analogue is a mesh collective: within-device partials
+are produced by the tile/block levels (repro.core.reduce / .scan), and the
+cross-device combination is expressed with jax collectives inside
+``shard_map``. The scan follows the paper's *scan-then-propagate* strategy:
+
+  kernel 1: per-device segmented scan          -> local scan + local total
+  kernel 2: scan of the per-device totals      -> matmul-form over the axis
+  kernel 3: uniform add of the exclusive carry -> one fused add
+
+Kernel 2 is itself in matmul form: the gathered totals vector is hit with a
+strictly-lower-triangular ones matrix — the same L as the tile level, with
+the mesh axis playing the role of the tile row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import tcu_scan, tcu_weighted_scan
+
+
+def dist_reduce(x_local: jax.Array, axis_name: str) -> jax.Array:
+    """Grid-level full reduction: local matmul-form partials + psum."""
+    from repro.core.reduce import tcu_reduce
+
+    return jax.lax.psum(tcu_reduce(x_local), axis_name)
+
+
+def dist_exclusive_carry(local_total: jax.Array, axis_name: str) -> jax.Array:
+    """Exclusive scan of per-device totals over a mesh axis, matmul-form.
+
+    all_gather the totals (one scalar-ish leaf per device), multiply with the
+    strictly-lower triangular ones matrix, and select this device's row —
+    the paper's grid-level "scan of partials" with the matmul executing
+    redundantly-but-locally on every device (cheaper than a second collective
+    round for the axis sizes used here).
+    """
+    gathered = jax.lax.all_gather(local_total, axis_name)          # (ndev, ...)
+    ndev = gathered.shape[0]
+    idx = jax.lax.axis_index(axis_name)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ndev, ndev), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (ndev, ndev), 1)
+    l_mask = (rows > cols).astype(gathered.dtype)
+    flat = gathered.reshape(ndev, -1)
+    carries = l_mask @ flat                                        # (ndev, -1)
+    return carries[idx].reshape(gathered.shape[1:])
+
+
+def dist_scan(x_local: jax.Array, axis_name: str) -> jax.Array:
+    """Grid-level inclusive scan: the last axis of the *global* array is
+    sharded over ``axis_name``; returns the correctly-carried local shard."""
+    local = tcu_scan(x_local)
+    carry = dist_exclusive_carry(local[..., -1], axis_name)
+    return local + carry[..., None]
+
+
+def dist_weighted_scan(
+    x_local: jax.Array, log_a_local: jax.Array, axis_name: str
+) -> jax.Array:
+    """Grid-level decayed scan (sequence-parallel SSD carry propagation).
+
+    Local chunks compute their weighted scan and total decay; the cross-
+    device carry is the weighted exclusive scan of (totals, decays) over the
+    mesh axis, then propagated through each position's prefix decay.
+    """
+    acc = jnp.float32
+    local = tcu_weighted_scan(x_local, log_a_local)
+    total = local[..., -1]
+    log_decay = jnp.sum(log_a_local.astype(acc), axis=-1)
+
+    gathered_t = jax.lax.all_gather(total, axis_name)              # (ndev, ...)
+    gathered_d = jax.lax.all_gather(log_decay, axis_name)
+    ndev = gathered_t.shape[0]
+    idx = jax.lax.axis_index(axis_name)
+
+    # weighted exclusive scan over the device axis (leading), matmul-form
+    from repro.core.tiles import segsum
+
+    # move device axis last for segsum convenience
+    t = jnp.moveaxis(gathered_t, 0, -1)
+    d = jnp.moveaxis(gathered_d, 0, -1)
+    m = jnp.exp(segsum(d))
+    s = jnp.einsum("...ij,...j->...i", m, t)
+    excl = jnp.concatenate([jnp.zeros_like(s[..., :1]), s[..., :-1]], axis=-1)
+    carry = jnp.take(excl, idx, axis=-1)
+
+    prefix = jnp.cumsum(log_a_local.astype(acc), axis=-1)
+    return local + carry[..., None] * jnp.exp(prefix)

@@ -1,0 +1,70 @@
+"""Irregular (ragged) segmented reduction and scan, matmul-form.
+
+The paper handles irregular segments by padding to regular ones
+(footnote 4). The TPU-native generalisation is more direct: a ragged
+segmented reduction *is* a matrix multiplication against the segment
+one-hot matrix —
+
+    out[s] = sum_i 1[seg_id[i] == s] * x[i]     =     O^T @ x
+
+with ``O[i, s] = 1[seg_id[i] == s]`` built from a broadcasted-iota compare
+(the same constructor discipline as the P/U/L tiles; no gather/scatter, so
+it shards and differentiates trivially). The ragged scan composes the
+regular matmul-form scan with a segment-restart correction: within-segment
+prefix = global prefix minus the segment's preceding total, which is one
+more one-hot matmul.
+
+Cost: O(n * n_segments) MXU flops — the paper's GEMV trade ("resource and
+computation waste" tolerated because the matrix unit is otherwise idle);
+for n_segments <= a few thousand this stays memory-bound like everything
+else here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import tcu_scan
+
+
+def _onehot(seg_ids: jax.Array, n_segments: int, dtype) -> jax.Array:
+    """O[i, s] = 1[seg_ids[i] == s], built from iota (traceable)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (seg_ids.shape[-1],
+                                                n_segments), 1)
+    return (seg_ids[..., None] == cols).astype(dtype)
+
+
+def tcu_ragged_segment_reduce(x: jax.Array, seg_ids: jax.Array,
+                              n_segments: int) -> jax.Array:
+    """Sum ``x (..., n)`` into ``(..., n_segments)`` buckets by ``seg_ids``.
+
+    Matmul-form: ``out = x @ O`` — one MXU pass, no scatter.
+    """
+    o = _onehot(seg_ids, n_segments, jnp.float32)
+    return jax.lax.dot_general(
+        x.astype(jnp.float32), o,
+        (((x.ndim - 1,), (o.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def tcu_ragged_segment_scan(x: jax.Array, seg_ids: jax.Array,
+                            n_segments: int) -> jax.Array:
+    """Within-segment inclusive prefix sum for contiguous ragged segments.
+
+    ``y_i = sum_{j <= i, seg[j] == seg[i]} x_j`` — the global matmul-form
+    scan minus each segment's preceding total, where the preceding totals
+    are an exclusive ragged reduce re-broadcast through the one-hot
+    (two more matmuls; everything stays on the MXU).
+    """
+    xf = x.astype(jnp.float32)
+    global_scan = tcu_scan(xf)                               # (..., n)
+    o = _onehot(seg_ids, n_segments, jnp.float32)            # (n, S)
+    totals = jax.lax.dot_general(                            # (..., S)
+        xf, o, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # exclusive totals of *preceding* segments, then re-broadcast per elem
+    prior = tcu_scan(totals, exclusive=True)                 # (..., S)
+    offset = jax.lax.dot_general(                            # (..., n)
+        prior, o.T, (((prior.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return global_scan - offset

@@ -1,0 +1,149 @@
+"""Matmul-form scan / prefix-sum (the paper's Section 5), TPU-adapted.
+
+The paper's identity for a TxT tile A holding 256 (here 16384) elements
+row-major:
+
+    Scan(A) = A @ U  +  (L @ A) @ 1
+
+where ``A @ U`` scans each row, ``L @ A`` is the column-wise exclusive scan
+(whose row j holds the sums of all rows above j), and ``@ 1`` broadcasts
+those sums across the row. Tiles are chained with a scalar carry S
+(Algorithm 6). We additionally provide:
+
+* arbitrary-length inputs via *recursive* two-level composition
+  (scan tiles → scan the tile totals → add exclusive carries), which is the
+  paper's scan-then-propagate grid strategy applied within a device;
+* ``tcu_weighted_scan`` — the decayed generalisation
+  ``y_i = a_i * y_{i-1} + x_i`` obtained by replacing the triangular ones
+  masks with ``exp(segsum(log a))``; this is the bridge between the paper's
+  scan and Mamba-2's SSD (see kernels/ssd_scan.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiles import (
+    DEFAULT_TILE,
+    l_matrix,
+    ones_matrix,
+    segsum,
+    strict_u_matrix,
+    u_matrix,
+)
+
+
+def _accum_dtype(dtype) -> jnp.dtype:
+    return jnp.float32 if jnp.issubdtype(dtype, jnp.floating) else jnp.dtype(dtype)
+
+
+def _row_scan(x: jax.Array, tile: int, *, exclusive: bool = False) -> jax.Array:
+    """Scan the last axis (must equal ``tile``) via a triangular matmul."""
+    acc = _accum_dtype(x.dtype)
+    u = (strict_u_matrix if exclusive else u_matrix)(tile, x.dtype)
+    return jax.lax.dot_general(
+        x, u, (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=acc
+    )
+
+
+def tcu_scan(
+    x: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    exclusive: bool = False,
+) -> jax.Array:
+    """Inclusive (or exclusive) prefix sum along the last axis, matmul-form.
+
+    Strategy (scan-then-propagate, recursively):
+      1. pad the last axis to a tile multiple, view as (..., k, T);
+      2. row-scan every tile with one triangular matmul;
+      3. recursively scan the k tile-totals (a length-k problem);
+      4. add the *exclusive* totals back as per-tile carries.
+    Depth is ceil(log_T n): 2 levels cover 16K elements, 3 cover 2M.
+    """
+    acc = _accum_dtype(x.dtype)
+    n = x.shape[-1]
+    if n == 0:
+        return x.astype(acc)
+    if n <= tile:
+        t_eff = tile if n > 8 else n  # tiny inputs: exact-size triangle
+        rem = (-n) % t_eff
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, rem)]) if rem else x
+        out = _row_scan(xp, t_eff, exclusive=exclusive)
+        return out[..., :n]
+
+    rem = (-n) % tile
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, rem)]) if rem else x
+    k = xp.shape[-1] // tile
+    tiles = xp.reshape(*x.shape[:-1], k, tile)
+    scanned = _row_scan(tiles, tile)            # (..., k, T) inclusive per tile
+    totals = scanned[..., -1]                   # (..., k)
+    carries = tcu_scan(totals, tile=tile, exclusive=True)  # (..., k)
+    out = scanned + carries[..., None].astype(acc)
+    if exclusive:
+        excl = _row_scan(tiles, tile, exclusive=True)
+        out = excl + carries[..., None].astype(acc)
+    return out.reshape(*x.shape[:-1], k * tile)[..., :n]
+
+
+def tcu_segmented_scan(
+    x: jax.Array, *, tile: int = DEFAULT_TILE, exclusive: bool = False
+) -> jax.Array:
+    """Regular segmented scan: scans the last axis independently per segment
+    (leading axes index segments) — the paper's Scan_K."""
+    return tcu_scan(x, tile=tile, exclusive=exclusive)
+
+
+def tcu_weighted_scan(
+    x: jax.Array,
+    log_a: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+) -> jax.Array:
+    """Decayed scan ``y_i = a_i * y_{i-1} + x_i`` with ``a = exp(log_a)``.
+
+    Matmul-form: within a tile, ``y = M @ x`` with
+    ``M = exp(segsum(log_a))`` (lower-triangular, M[i,j] = prod a[j+1..i]).
+    Across tiles the carry chain generalises the paper's broadcast-S:
+    ``carry_{k} = A_k * carry_{k-1} + total_k`` where ``A_k`` is the tile's
+    total decay. The cross-tile recurrence is itself a weighted scan over k,
+    computed with the same tile algebra (one recursion level) — so the whole
+    thing is triangular matmuls end to end.
+    """
+    acc = _accum_dtype(x.dtype)
+    n = x.shape[-1]
+    if n <= tile:
+        m = jnp.exp(segsum(log_a.astype(acc)))
+        return jnp.einsum("...ij,...j->...i", m, x.astype(acc))
+
+    rem = (-n) % tile
+    if rem:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+        x = jnp.pad(x, pad)
+        log_a = jnp.pad(log_a, pad)  # log a = 0 → decay 1, harmless tail
+    k = x.shape[-1] // tile
+    xt = x.reshape(*x.shape[:-1], k, tile)
+    lat = log_a.reshape(*log_a.shape[:-1], k, tile)
+    m = jnp.exp(segsum(lat.astype(acc)))                     # (..., k, T, T)
+    intra = jnp.einsum("...ij,...j->...i", m, xt.astype(acc))  # per-tile scan
+    totals = intra[..., -1]                                   # (..., k)
+    tile_decay = jnp.sum(lat.astype(acc), axis=-1)            # log total decay
+    # cross-tile weighted scan of totals (length-k problem)
+    carry_in = _weighted_exclusive(totals, tile_decay)        # (..., k)
+    # propagate: y = intra + carry_in * cumdecay_within_tile
+    cum_in_tile = jnp.cumsum(lat.astype(acc), axis=-1)        # prefix log-decay
+    out = intra + carry_in[..., None] * jnp.exp(cum_in_tile)
+    return out.reshape(*out.shape[:-2], k * tile)[..., :n]
+
+
+def _weighted_exclusive(totals: jax.Array, log_decay: jax.Array) -> jax.Array:
+    """Exclusive weighted scan over the last axis: carry entering block i is
+    the *inclusive* weighted-scan state after block i-1 (carry_0 = 0).
+
+    Matmul-form: ``s = exp(segsum(log_decay)) @ totals`` gives the inclusive
+    states (s_i = sum_{j<=i} prod_{q=j+1..i} d_q * t_j); the exclusive carry
+    is s shifted right by one.
+    """
+    m = jnp.exp(segsum(log_decay))
+    s = jnp.einsum("...ij,...j->...i", m, totals)
+    return jnp.concatenate([jnp.zeros_like(s[..., :1]), s[..., :-1]], axis=-1)

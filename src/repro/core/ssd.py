@@ -1,0 +1,135 @@
+"""Chunked SSD (Mamba-2) in pure JAX — the paper's weighted tile scan.
+
+Structure per chunk of Q tokens (Q = 128, the MXU tile edge):
+
+  intra   Y₁ = ((C Bᵀ) ∘ M) (dt∘X)      M = exp(segsum(λ)) — weighted A·U
+  state   S  = (B ∘ w)ᵀ (dt∘X)           w = remaining-chunk decay
+  carry   Hₖ = exp(Σλ)·Hₖ₋₁ + Sₖ          the paper's Broadcast(R[last]) chain
+  inter   Y₂ = (C ∘ exp(Λ))·Hₖ₋₁
+
+The inter-chunk carry is a *weighted scan over chunks*, computed here with
+``jax.lax.scan`` (sequential per device — the TPU grid is sequential anyway)
+and across devices with ``repro.core.dist_weighted_scan``. The Pallas twin
+is kernels/ssd_scan.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiles import segsum
+
+CHUNK = 128
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "matmul_dtype"))
+def ssd_chunked(
+    x: jax.Array,    # (B, L, H, P)
+    dt: jax.Array,   # (B, L, H)   positive
+    a: jax.Array,    # (H,)        negative
+    b: jax.Array,    # (B, L, G, N)
+    c: jax.Array,    # (B, L, G, N)
+    *,
+    chunk: int = CHUNK,
+    matmul_dtype=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N)).
+
+    ``matmul_dtype`` casts the *operands* of the large intra-chunk einsums
+    (decay masks stay f32; accumulation stays f32 via
+    preferred_element_type). bf16 operands halve the HBM traffic of the
+    (B,k,H,Q,Q) mask products — the dominant tensors of the XLA path —
+    and match the MXU's native bf16-in/f32-acc mode. None keeps full f32
+    (the reference/tests path)."""
+    bsz, seqlen, nheads, hdim = x.shape
+    ngroups, nstate = b.shape[2], b.shape[3]
+    rem = (-seqlen) % chunk
+    if rem:
+        # zero-pad: decay exp(0)=1 and input 0 leave the carried state exact
+        padt = lambda t: jnp.pad(t, [(0, 0), (0, rem)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        y, h_last = ssd_chunked(padt(x), padt(dt), a, padt(b), padt(c),
+                                chunk=chunk, matmul_dtype=matmul_dtype)
+        return y[:, :seqlen], h_last
+    nchunks = seqlen // chunk
+    rep = nheads // ngroups
+    mm = (lambda t: t) if matmul_dtype is None else \
+        (lambda t: t.astype(matmul_dtype))
+    acc = jnp.float32
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    lam = dtf * af                                       # (B, L, H) log decays
+    xdt = xf * dtf[..., None]
+
+    # chunked views: (B, k, Q, ...)
+    xdt = xdt.reshape(bsz, nchunks, chunk, nheads, hdim)
+    lam = lam.reshape(bsz, nchunks, chunk, nheads)
+    bg = b.astype(jnp.float32).reshape(bsz, nchunks, chunk, ngroups, nstate)
+    cg = c.astype(jnp.float32).reshape(bsz, nchunks, chunk, ngroups, nstate)
+
+    lam_t = jnp.moveaxis(lam, -1, -2)                    # (B, k, H, Q)
+    m = jnp.exp(segsum(lam_t))                           # (B, k, H, Q, Q)
+    cum = jnp.cumsum(lam_t, axis=-1)                     # (B, k, H, Q) = Λ
+    total = cum[..., -1]                                 # (B, k, H)
+
+    # intra-chunk: cb (B,k,G,Q,Q) broadcast to heads within group
+    cb = jnp.einsum("bkqgn,bksgn->bkgqs", mm(cg), mm(bg),
+                    preferred_element_type=acc)
+    cb = jnp.repeat(cb, rep, axis=2)                     # (B,k,H,Q,Q)
+    y_intra = jnp.einsum("bkhqs,bkshp->bkqhp", mm(cb * m), mm(xdt),
+                         preferred_element_type=acc)     # (B,k,Q,H,P)
+
+    # chunk input states: S (B,k,H,P,N)
+    w = jnp.exp(total[..., None] - cum)                  # (B,k,H,Q)
+    bw = jnp.repeat(bg, rep, axis=3)                     # (B,k,Q,H,N)
+    s_chunk = jnp.einsum(
+        "bkqhn,bkqhp->bkhpn",
+        mm(bw * jnp.moveaxis(w, -1, -2)[..., None]), mm(xdt),
+        preferred_element_type=acc)
+
+    # inter-chunk recurrence over k (sequential weighted scan)
+    def step(h, inp):
+        s_k, tot_k = inp                                 # (B,H,P,N), (B,H)
+        h = jnp.exp(tot_k)[..., None, None] * h + s_k
+        return h, h
+
+    h0 = jnp.zeros((bsz, nheads, hdim, nstate), jnp.float32)
+    s_seq = jnp.moveaxis(s_chunk, 1, 0)                  # (k,B,H,P,N)
+    t_seq = jnp.moveaxis(total, 1, 0)                    # (k,B,H)
+    h_last, h_all = jax.lax.scan(step, h0, (s_seq, t_seq))
+    # states *entering* each chunk: shift right
+    h_prev = jnp.concatenate([h0[None], h_all[:-1]], axis=0)
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                  # (B,k,H,P,N)
+
+    cdec = jnp.repeat(cg, rep, axis=3) * jnp.exp(
+        jnp.moveaxis(cum, -1, -2))[..., None]            # (B,k,Q,H,N)
+    y_inter = jnp.einsum("bkqhn,bkhpn->bkqhp", mm(cdec), mm(h_prev),
+                         preferred_element_type=acc)
+
+    y = (y_intra + y_inter).reshape(bsz, seqlen, nheads, hdim)
+    return y.astype(x.dtype), h_last
+
+
+def ssd_decode_step(
+    state: jax.Array,   # (B, H, P, N) f32
+    x_t: jax.Array,     # (B, H, P)
+    dt_t: jax.Array,    # (B, H)
+    a: jax.Array,       # (H,)
+    b_t: jax.Array,     # (B, G, N)
+    c_t: jax.Array,     # (B, G, N)
+) -> tuple[jax.Array, jax.Array]:
+    """One recurrent step: h ← exp(a·dt)h + dt·b xᵀ;  y = c·h."""
+    bsz, nheads, hdim, nstate = state.shape
+    ngroups = b_t.shape[1]
+    rep = nheads // ngroups
+    dec = jnp.exp(dt_t.astype(jnp.float32) * a.astype(jnp.float32))
+    bf = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)   # (B,H,N)
+    cf = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    xdt = x_t.astype(jnp.float32) * dt_t.astype(jnp.float32)[..., None]
+    state = dec[..., None, None] * state + xdt[..., None] * bf[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, cf)
+    return y.astype(x_t.dtype), state

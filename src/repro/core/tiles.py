@@ -1,0 +1,80 @@
+"""Constructor matrices for the matmul-form reduction/scan algebra.
+
+The paper (Dakkak et al., ICS'19) expresses reduction and scan in terms of
+three constant matrices over a TxT tile:
+
+  P  : ones in row 0, zeros elsewhere.         P @ A   reduces each column of A.
+  U  : upper-triangular ones (incl. diagonal). A @ U   row-wise inclusive scan.
+  L  : strictly-lower-triangular ones.         L @ A   column-wise exclusive scan.
+
+On the V100 the tile is 16x16 (WMMA fragment); on TPU we default to the
+MXU-native 128. All constructors are traceable (built from iota, no host
+constants) so they can be materialised *inside* Pallas kernels without the
+constant-memory restrictions the paper had to work around (their Listing 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# MXU-native tile edge on TPU (the paper's "16").
+DEFAULT_TILE = 128
+
+
+def p_matrix(t: int = DEFAULT_TILE, dtype=jnp.float32) -> jax.Array:
+    """P: ones in the first row. ``P @ A`` sums each column of A."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    return (rows == 0).astype(dtype)
+
+
+def u_matrix(t: int = DEFAULT_TILE, dtype=jnp.float32) -> jax.Array:
+    """U: upper-triangular ones including the diagonal.
+
+    ``A @ U`` is a row-wise inclusive scan of A.
+    """
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    return (rows <= cols).astype(dtype)
+
+
+def strict_u_matrix(t: int = DEFAULT_TILE, dtype=jnp.float32) -> jax.Array:
+    """Strictly-upper-triangular ones. ``A @ sU`` is a row-wise exclusive scan."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    return (rows < cols).astype(dtype)
+
+
+def l_matrix(t: int = DEFAULT_TILE, dtype=jnp.float32) -> jax.Array:
+    """L: strictly-lower-triangular ones. ``L @ A`` column-wise exclusive scan."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    return (rows > cols).astype(dtype)
+
+
+def ones_matrix(t: int = DEFAULT_TILE, dtype=jnp.float32) -> jax.Array:
+    """The paper's all-ones broadcast matrix (their bold-1)."""
+    return jnp.ones((t, t), dtype)
+
+
+def segsum(log_a: jax.Array) -> jax.Array:
+    """Stable segment-sum: ``out[..., i, j] = sum(log_a[..., j+1:i+1])`` (tril).
+
+    This generalises the paper's L/U masks to *weighted* triangular masks:
+    ``exp(segsum(log a))`` is the decay matrix M with
+    ``M[i, j] = prod_{k=j+1..i} a_k`` for ``j <= i`` — the Mamba-2 / SSD
+    "1-semiseparable" matrix. With ``log_a == 0`` it degenerates to
+    ``tril(ones)`` = the paper's (L + I) mask. Entries above the diagonal
+    are ``-inf`` so that ``exp`` gives exact zeros.
+    """
+    t = log_a.shape[-1]
+    # cumulative sums along the last axis, prepended with 0
+    csum = jnp.cumsum(log_a, axis=-1)
+    csum = jnp.concatenate([jnp.zeros_like(csum[..., :1]), csum], axis=-1)
+    # out[i, j] = csum[i+1] - csum[j+1]  ... for j <= i
+    diff = csum[..., :, None] - csum[..., None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t + 1, t + 1), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t + 1, t + 1), 1)
+    mask = rows >= cols
+    out = jnp.where(mask, diff, -jnp.inf)
+    # drop the prepended row/col back to (t, t): M[i, j] over original indices
+    return out[..., 1:, 1:]

@@ -1,0 +1,89 @@
+"""Deterministic synthetic LM data pipeline, host-sharded.
+
+Determinism is the fault-tolerance contract: batch contents are a pure
+function of (seed, step, global example index), so a host that is replaced
+mid-run regenerates exactly its shard — no data-order drift on restart and
+no stateful shuffle buffer to checkpoint. Each host materialises only its
+addressable slice (``make_array_from_process_local_data``); a double-buffer
+prefetch thread hides generation latency behind the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    prefetch: int = 2
+
+
+def _philox_tokens(cfg: DataConfig, step: int, lo: int, hi: int) -> np.ndarray:
+    """Tokens for global examples [lo, hi) at ``step`` — pure function."""
+    rng = np.random.Generator(np.random.Philox(
+        key=cfg.seed, counter=[0, 0, step, 0]))
+    # skip-ahead is per-example so hosts draw disjoint, stable streams
+    all_tok = rng.integers(1, cfg.vocab, size=(cfg.global_batch,
+                                               cfg.seq_len + 1),
+                           dtype=np.int32)
+    return all_tok[lo:hi]
+
+
+class SyntheticLMPipeline:
+    """Iterator of sharded {"tokens","labels"} device batches."""
+
+    def __init__(self, cfg: DataConfig, sharding=None):
+        self.cfg = cfg
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=cfg.prefetch)
+        self._step = 0
+        self._thread: threading.Thread | None = None
+
+    def _host_range(self) -> tuple[int, int]:
+        n_proc = jax.process_count()
+        per = self.cfg.global_batch // n_proc
+        lo = jax.process_index() * per
+        return lo, lo + per
+
+    def host_batch(self, step: int) -> dict[str, np.ndarray]:
+        lo, hi = self._host_range()
+        tok = _philox_tokens(self.cfg, step, lo, hi)
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+    def device_batch(self, step: int):
+        hb = self.host_batch(step)
+        if self.sharding is None:
+            return {k: jax.numpy.asarray(v) for k, v in hb.items()}
+        return {
+            k: jax.make_array_from_process_local_data(self.sharding, v)
+            for k, v in hb.items()
+        }
+
+    def __iter__(self):
+        def worker():
+            s = self._step
+            while True:
+                self._q.put((s, self.device_batch(s)))
+                s += 1
+
+        if self._thread is None:
+            self._thread = threading.Thread(target=worker, daemon=True)
+            self._thread.start()
+        while True:
+            s, b = self._q.get()
+            yield s, b
+
+    def skip_to(self, step: int) -> None:
+        """Resume support: restart generation at ``step`` (pure function of
+        step, so this is just a counter)."""
+        if self._thread is not None:
+            raise RuntimeError("skip_to must be called before iteration")
+        self._step = step

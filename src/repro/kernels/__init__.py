@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; the public
+entry points (with CPU fallback + interpret-mode validation) live in
+``ops.py``:
+
+  tcu_reduce.py       matmul-form segmented reduction   (paper §4)
+  tcu_scan.py         matmul-form segmented scan        (paper §5)
+  fused_rmsnorm.py    RMSNorm with MXU Σx²              (paper §8 future work)
+  ssd_scan.py         Mamba-2 SSD = weighted tile scan  (beyond-paper)
+  flash_attention.py  blocked attention, matmul-form ℓ  (beyond-paper)
+"""
+from repro.kernels.ops import (
+    attention,
+    rmsnorm,
+    segmented_reduce,
+    segmented_scan,
+    ssd_scan,
+)
+
+__all__ = [
+    "attention",
+    "rmsnorm",
+    "segmented_reduce",
+    "segmented_scan",
+    "ssd_scan",
+]

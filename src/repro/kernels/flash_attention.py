@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: blocked (flash) attention with GQA + sliding window.
+
+Used for the 32k prefill shapes. Connection to the paper: the online-softmax
+denominator ``ℓ += rowsum(exp(S − m))`` is a matmul-form reduction
+(``p @ 1``, the paper's P-matrix trick), so the only VPU reduction left in
+the inner loop is the row-max (max has no matmul form — the paper's
+formulation is sum-only, see DESIGN §2).
+
+Grid: ``(B, Hq, Lq/BQ, Lk/BK)``, kv blocks innermost-sequential. GQA is
+handled by the k/v index maps (q head h reads kv head ``h // rep``) — no
+repeated-KV materialisation. Fully-masked kv blocks are skipped at block
+granularity (causal and sliding-window bounds).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = float(-1e30)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, nk: int, offs: int):
+    jk = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level visibility: q rows span [iq*bq, iq*bq+bq) (+offs in k space)
+    q_lo = iq * bq + offs
+    q_hi = q_lo + bq - 1
+    k_lo = jk * bk
+    k_hi = k_lo + bk - 1
+    visible = jnp.bool_(True)
+    if causal:
+        visible &= k_lo <= q_hi
+    if window is not None:
+        visible &= k_hi > q_lo - window
+
+    @pl.when(visible)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                     # (BQ, BK)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                          # (BQ,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])               # (BQ, BK)
+        corr = jnp.exp(m_prev - m_new)                # (BQ,)
+        # ℓ update: rowsum(p) in matmul form (p @ 1) — paper's P-reduction.
+        ones = jnp.ones((bk, LANES), jnp.float32)
+        psum = jax.lax.dot_general(
+            p, ones, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )                                             # (BQ, 128) replicated
+        l_ref[...] = corr[:, None] * l_ref[...] + psum
+        acc_ref[...] = corr[:, None] * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+
+    @pl.when(jk == nk - 1)
+    def _store():
+        l = l_ref[:, :1]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(
+    q: jax.Array,       # (B, Hq, Lq, D)
+    k: jax.Array,       # (B, Hkv, Lk, D)
+    v: jax.Array,       # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if lq % block_q or lk % block_k:
+        raise ValueError(f"seq lens {(lq, lk)} must tile {(block_q, block_k)}")
+    scale_v = scale if scale is not None else 1.0 / (d ** 0.5)
+    nk = lk // block_k
+    offs = lk - lq  # align sequence ends (prefill: 0; decode chunks: >0)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale_v, causal=causal, window=window,
+            bq=block_q, bk=block_k, nk=nk, offs=offs,
+        ),
+        grid=(bsz, hq, lq // block_q, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

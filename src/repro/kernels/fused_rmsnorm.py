@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: RMSNorm with a matmul-form Σx² reduction.
+
+This is the paper's future-work suggestion ("computation of variance in
+batch norm") applied to the norm all ten assigned archs actually use. The
+row reduction Σx² is fed through the MXU as ``(x∘x) @ 1`` — a P-matrix
+reduction with the all-ones RHS doubling as the lane broadcast (every output
+lane holds the sum, so no cross-lane shuffle is needed for the subsequent
+elementwise normalisation; the V100 version needed Listing-3 layout hacks
+for the same effect).
+
+Grid: rows/128; the full feature dim lives in one VMEM block
+(d ≤ 8192 ⇒ ≤ 4 MiB f32 per block, well under the 16 MiB VMEM budget).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+ROW_BLOCK = 128
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, d: int):
+    x = x_ref[...].astype(jnp.float32)               # (ROW_BLOCK, d)
+    ones = jnp.ones((d, LANES), jnp.float32)
+    # (x∘x) @ 1 : every lane of ssq holds Σ_d x²  (matmul-form reduce+bcast)
+    ssq = jax.lax.dot_general(
+        x * x, ones, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (ROW_BLOCK, 128)
+    rstd = jax.lax.rsqrt(ssq[:, :1] / d + eps)       # (ROW_BLOCK, 1)
+    w = w_ref[...].astype(jnp.float32)               # (1, d)
+    o_ref[...] = (x * rstd * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_rmsnorm(
+    x: jax.Array, w: jax.Array, *, eps: float = 1e-6, interpret: bool = False
+) -> jax.Array:
+    """RMSNorm rows of ``x (rows, d)`` by ``w (d,)``; rows % 128 == 0."""
+    rows, d = x.shape
+    if rows % ROW_BLOCK or d % LANES:
+        raise ValueError(f"shape {x.shape} must tile (128, 128)")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps, d=d),
+        grid=(rows // ROW_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="fused_rmsnorm",
+    )(x, w.reshape(1, d))

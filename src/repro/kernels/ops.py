@@ -1,0 +1,153 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run natively; everywhere
+else (this CPU container, tests) the pure-jnp references in ``ref.py`` are
+used, unless ``interpret=True`` forces the kernel body through the Pallas
+interpreter (how the kernels are validated on CPU). Wrappers own all
+padding/layout glue so kernels stay shape-strict and MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.fused_rmsnorm import fused_rmsnorm as _rmsnorm_kernel
+from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_kernel
+from repro.kernels.tcu_reduce import tcu_segmented_reduce_tn as _reduce_kernel
+from repro.kernels.tcu_scan import tcu_segmented_scan_tn as _scan_kernel
+
+LANES = 128
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_kernel(force: bool | None) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    if force is None:
+        return on_tpu(), False
+    return bool(force), not on_tpu()
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    rem = (-x.shape[axis]) % multiple
+    if not rem:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def segmented_reduce(x: jax.Array, *, use_pallas: bool | None = None) -> jax.Array:
+    """Sum over the last axis of ``x (..., n)`` -> f32 ``(...,)``."""
+    use, interp = _use_kernel(use_pallas)
+    if not use:
+        return ref.segmented_reduce_ref(x)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    flat = x.reshape(-1, n)
+    # col-major LoadTile: feed the kernel x^T, pad both dims to 128
+    xt = _pad_axis(_pad_axis(flat.T, 0, LANES), 1, LANES)
+    out = _reduce_kernel(xt, interpret=interp)
+    return out[: flat.shape[0]].reshape(lead)
+
+
+def segmented_scan(x: jax.Array, *, use_pallas: bool | None = None) -> jax.Array:
+    """Inclusive prefix-sum over the last axis -> f32, same shape."""
+    use, interp = _use_kernel(use_pallas)
+    if not use:
+        return ref.segmented_scan_ref(x)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    flat = _pad_axis(_pad_axis(x.reshape(-1, n), 0, LANES), 1, LANES)
+    out = _scan_kernel(flat, interpret=interp)
+    rows = int(jnp.prod(jnp.array(lead))) if lead else 1
+    return out[:rows, :n].reshape(*lead, n)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_fwd_dispatch(x, w, eps, impl):
+    use, interp = impl
+    if not use:
+        return ref.rmsnorm_ref(x, w, eps=eps)
+    lead, d = x.shape[:-1], x.shape[-1]
+    flat = _pad_axis(x.reshape(-1, d), 0, 128)
+    out = _rmsnorm_kernel(flat, w, eps=eps, interpret=interp)
+    rows = 1
+    for s in lead:
+        rows *= s
+    return out[:rows].reshape(*lead, d)
+
+
+def _rmsnorm_vjp_fwd(x, w, eps, impl):
+    return _rmsnorm_fwd_dispatch(x, w, eps, impl), (x, w)
+
+
+def _rmsnorm_vjp_bwd(eps, impl, res, g):
+    # backward through the reference formulation (numerically identical)
+    x, w = res
+    _, vjp = jax.vjp(lambda xx, ww: ref.rmsnorm_ref(xx, ww, eps=eps), x, w)
+    return vjp(g)
+
+
+_rmsnorm_fwd_dispatch.defvjp(_rmsnorm_vjp_fwd, _rmsnorm_vjp_bwd)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            use_pallas: bool | None = None) -> jax.Array:
+    """RMSNorm over the last axis (differentiable; Pallas fwd on TPU)."""
+    return _rmsnorm_fwd_dispatch(x, w, eps, _use_kernel(use_pallas))
+
+
+def ssd_scan(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)    positive step sizes
+    a: jax.Array,       # (H,)         negative decay rates
+    b: jax.Array,       # (B, L, G, N)
+    c: jax.Array,       # (B, L, G, N)
+    *,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Mamba-2 SSD scan -> (B, L, H, P) in the input dtype."""
+    use, interp = _use_kernel(use_pallas)
+    if not use:
+        return ref.ssd_scan_ref(x, dt, a, b, c)
+    bsz, seqlen, nheads, hdim = x.shape
+    ngroups, nstate = b.shape[2], b.shape[3]
+    rep = nheads // ngroups
+    # fold (B, H) and broadcast groups; pad P (lane dim) and L to 128
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    xdt = jnp.moveaxis(xdt, 2, 1).reshape(bsz * nheads, seqlen, hdim)
+    lam = (dt.astype(jnp.float32) * a.astype(jnp.float32))
+    lam = jnp.moveaxis(lam, 2, 1).reshape(bsz * nheads, seqlen)
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    bb = jnp.moveaxis(bb, 2, 1).reshape(bsz * nheads, seqlen, nstate)
+    cc = jnp.moveaxis(cc, 2, 1).reshape(bsz * nheads, seqlen, nstate)
+    xdt = _pad_axis(_pad_axis(xdt, 2, LANES), 1, LANES)
+    lam = _pad_axis(lam, 1, LANES)
+    bb = _pad_axis(_pad_axis(bb, 2, 8), 1, LANES)
+    cc = _pad_axis(_pad_axis(cc, 2, 8), 1, LANES)
+    y, _ = _ssd_kernel(xdt, lam, bb, cc, interpret=interp)
+    y = y[:, :seqlen, :hdim].reshape(bsz, nheads, seqlen, hdim)
+    return jnp.moveaxis(y, 1, 2).astype(x.dtype)
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    scale: float | None = None, use_pallas: bool | None = None,
+) -> jax.Array:
+    """Multi-head attention (B, Hq, Lq, D) x (B, Hkv, Lk, D) -> (B, Hq, Lq, D)."""
+    use, interp = _use_kernel(use_pallas)
+    lq, lk = q.shape[2], k.shape[2]
+    if not use or lq % 128 or lk % 128:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    return _flash_kernel(q, k, v, causal=causal, window=window, scale=scale,
+                         interpret=interp)

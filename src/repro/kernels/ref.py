@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret mode
+on CPU, real MXU on TPU) and the XLA fallback the models use on non-TPU
+backends. Keep them boring and obviously correct.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_reduce_ref(x: jax.Array) -> jax.Array:
+    """Sum over the last axis, f32 accumulation. x: (..., n) -> (...,)."""
+    return jnp.sum(x.astype(jnp.float32), axis=-1)
+
+
+def segmented_scan_ref(x: jax.Array) -> jax.Array:
+    """Inclusive prefix-sum over the last axis, f32 accumulation."""
+    return jnp.cumsum(x.astype(jnp.float32), axis=-1)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * w."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,       # (B, L, H, P)   inputs (already dt-weighted or raw)
+    dt: jax.Array,      # (B, L, H)      softplus'd step sizes, > 0
+    a: jax.Array,       # (H,)           negative state decay rates (A = -exp(A_log))
+    b: jax.Array,       # (B, L, G, N)   input projections (G groups broadcast over H)
+    c: jax.Array,       # (B, L, G, N)   output projections
+) -> jax.Array:
+    """Sequential reference of the Mamba-2 SSD recurrence.
+
+    state_{t} = exp(a * dt_t) * state_{t-1} + dt_t * b_t x_t^T
+    y_t       = c_t . state_t
+    Shapes follow Mamba-2: H heads, P head-dim, N state-dim, G kv-like groups
+    with H % G == 0 (heads within a group share B/C).
+    """
+    bsz, seqlen, nheads, hdim = x.shape
+    ngroups, nstate = b.shape[2], b.shape[3]
+    rep = nheads // ngroups
+    bf = jnp.repeat(b, rep, axis=2).astype(jnp.float32)      # (B, L, H, N)
+    cf = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a.astype(jnp.float32))             # (B, L, H)
+
+    def step(state, inp):
+        xt, bt, ct, dt_t, dec = inp                           # (B,H,P),(B,H,N)...
+        state = dec[..., None, None] * state + (
+            dt_t[..., None, None] * bt[..., None, :] * xt[..., :, None]
+        )                                                     # (B, H, P, N)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((bsz, nheads, hdim, nstate), jnp.float32)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(decay, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)             # (B, L, H, P)
+
+
+def flash_attention_ref(
+    q: jax.Array,       # (B, Hq, Lq, D)
+    k: jax.Array,       # (B, Hkv, Lk, D)
+    v: jax.Array,       # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Plain softmax attention with GQA head-group broadcast and optional
+    sliding window. Oracle for kernels/flash_attention.py."""
+    bq, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    s = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * s
+    lk = k.shape[2]
+    qpos = jnp.arange(lq)[:, None] + (lk - lq)   # align ends (decode-friendly)
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

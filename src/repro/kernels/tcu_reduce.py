@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: work-efficient matmul-form segmented reduction.
+
+Paper mapping (Dakkak et al. ICS'19, Alg. 3 / Fig. 7), TPU-adapted:
+
+* The paper loads tiles **column-major** so 16 segments occupy the 16 rows of
+  a WMMA fragment and one ``P @ A`` reduces all of them. Our analogue: the
+  wrapper feeds the kernel ``x`` transposed to ``(n, s)`` so one VMEM block
+  holds 128 elements (sublanes) x 128 segments (lanes) and one
+  ``P_8 @ A`` MXU pass reduces 128 segments at once.
+* The paper's work-efficient trick — accumulate ``V_i = P·A_i + V_{i-1}``
+  across tiles, one matmul each, collapsing only at the end — is the
+  sequential innermost grid dimension with a VMEM scratch accumulator.
+* The f32 scratch is (8, 128): the live data is the paper's "first row of V";
+  8 sublanes is the f32 minimum tile. The redundant 7 rows cost nothing
+  (the MXU streams M=8 in one pass) — reduction stays memory-bound, which is
+  the paper's central observation.
+
+Grid: ``(S/128, N/128)`` — segments parallel, chunks sequential (innermost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+SUBLANES = 8
+
+
+def _reduce_kernel(x_ref, o_ref, acc_ref, *, nchunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = x_ref[...]                                   # (128, 128) = [n, s]
+    # P @ A with P = ones in row 0: realised as an (8,128) ones LHS — every
+    # result row holds the column sums; row 0 is the paper's V row.
+    p = jnp.ones((SUBLANES, LANES), a.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        p, a, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == nchunks - 1)
+    def _store():
+        o_ref[...] = acc_ref[0, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tcu_segmented_reduce_tn(xt: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Reduce columns of ``xt``: (n, s) -> (s,). Both dims multiples of 128.
+
+    ``xt`` is the transposed segment matrix (the paper's col-major LoadTile).
+    """
+    n, s = xt.shape
+    if n % LANES or s % LANES:
+        raise ValueError(f"dims must be multiples of {LANES}, got {xt.shape}")
+    nchunks = n // LANES
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, nchunks=nchunks),
+        grid=(s // LANES, nchunks),
+        in_specs=[pl.BlockSpec((LANES, LANES), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((LANES,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="tcu_segmented_reduce",
+    )(xt)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: matmul-form segmented inclusive scan.
+
+Paper mapping (Dakkak et al. ICS'19, Alg. 6 / Fig. 9), TPU-adapted:
+
+* ``A @ U`` (U = upper-triangular ones) scans each row of a tile — one MXU
+  pass scans 128 segments x 128 elements.
+* The tile-to-tile carry ``S ← Broadcast(R[last])`` is one more matmul:
+  ``carry = R @ E`` with ``E[n, m] = 1 iff n == last`` replicates the last
+  column of R across all lanes (the paper's Broadcast(LastColumn(R)),
+  Algorithm 6 line 11 / footnote 5).
+* On the V100 the serial carry forced decoupled-lookback-style machinery at
+  scale; TPU Pallas grids are sequential per core, so the carry is simply a
+  VMEM scratch accumulator along the innermost grid dimension.
+
+Layout: row-major ``x (s, n)``; block (128, 128); grid (s/128, n/128) with
+chunks innermost-sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref, *, nchunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = x_ref[...]                                   # (128, 128) rows=segments
+    rows = jax.lax.broadcasted_iota(jnp.int32, (LANES, LANES), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (LANES, LANES), 1)
+    u = (rows <= cols).astype(a.dtype)               # upper-triangular ones
+    au = jax.lax.dot_general(
+        a, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + carry_ref[...]
+    o_ref[...] = au.astype(o_ref.dtype)
+
+    @pl.when(j != nchunks - 1)
+    def _carry():
+        # Broadcast(LastColumn(R)): E has ones only in the last row.
+        e = (rows == LANES - 1).astype(jnp.float32)
+        carry_ref[...] = jax.lax.dot_general(
+            au, e, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tcu_segmented_scan_tn(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Inclusive scan along the last axis: (s, n) -> (s, n) in f32.
+
+    Both dims must be multiples of 128 (wrapper pads); rows are independent
+    segments.
+    """
+    s, n = x.shape
+    if n % LANES or s % LANES:
+        raise ValueError(f"dims must be multiples of {LANES}, got {x.shape}")
+    nchunks = n // LANES
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, nchunks=nchunks),
+        grid=(s // LANES, nchunks),
+        in_specs=[pl.BlockSpec((LANES, LANES), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((LANES, LANES), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((LANES, LANES), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="tcu_segmented_scan",
+    )(x)

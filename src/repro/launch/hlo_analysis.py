@@ -1,0 +1,513 @@
+"""Loop-aware static analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, but our layer
+stacks are ``lax.scan`` loops — a 94-layer model would be under-counted 94x.
+This module re-derives the three roofline inputs from ``compiled.as_text()``
+with execution multipliers propagated through the call graph:
+
+  * ``flops``            dot/convolution (+1/elem elementwise, |in|/reduce)
+  * ``memory_bytes``     HBM-traffic model: Σ (operands + result) bytes over
+                         *materialising* ops — fusions count at the call
+                         site only (their internals live in registers/VMEM),
+                         which is exactly the fusion memory model XLA's own
+                         cost analysis uses.
+  * ``collective_bytes`` per collective kind. Convention (documented for
+                         the roofline): bytes = per-device result size
+                         (operand size for reduce-scatter), all-reduce
+                         counted 2x (reduce-scatter + all-gather phases);
+                         ring factor (n-1)/n is folded into the link
+                         bandwidth constant.
+
+Trip counts come from the ``backend_config known_trip_count`` that XLA
+attaches to rolled loops; a while without one is counted once (and
+reported in ``unknown_trip_whiles``).
+
+The HLO here is the per-device SPMD module, so every figure is *per chip* —
+matching the roofline denominators (chips x per-chip peak).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that don't touch HBM (control/aliasing/layout only)
+NON_MATERIAL = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota", "copy-start", "copy-done", "domain",
+    "opt-barrier", "add-dependency",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT )?%([\w.\-]+) = (.+)$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+): (\([^)]*\)|\w+\[[\d,]*\](?:\{[\d,]*\})?)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    body: str          # everything after the opcode
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    symbols: dict      # name -> type_str (params + defs)
+    param_names: list = dataclasses.field(default_factory=list)
+
+    @property
+    def root(self):
+        for i in self.instrs:
+            if i.is_root:
+                return i
+        return self.instrs[-1] if self.instrs else None
+
+    @property
+    def defs(self):
+        d = getattr(self, "_defs", None)
+        if d is None:
+            d = {i.name: i for i in self.instrs}
+            self._defs = d
+        return d
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        header = re.match(
+            r"^(?:ENTRY )?%?([\w.\-]+) \((.*)\) -> .* \{$", line)
+        if header:
+            name, params = header.group(1), header.group(2)
+            cur = Computation(name, [], {})
+            for pname, ptype in _PARAM_RE.findall(params):
+                cur.symbols[pname] = ptype
+                cur.param_names.append(pname)
+            comps[name] = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        split = _split_type_opcode(rest)
+        if split is None:
+            continue
+        type_str, opcode, body = split
+        cur.symbols[name] = type_str
+        cur.instrs.append(Instr(name, opcode, type_str, body,
+                                is_root=line.startswith("ROOT ")))
+    return comps
+
+
+def _split_type_opcode(rest: str):
+    """'<type> <opcode>(...' -> (type, opcode, 'opcode(...'). Tuple types may
+    contain `/*index=N*/` comments, so parens are matched by depth."""
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str = rest[:end + 1]
+        after = rest[end + 1:].lstrip()
+    else:
+        m = re.match(r"([\w\[\],]+(?:\{[^}]*\})?)\s+", rest)
+        if not m:
+            return None
+        type_str = m.group(1)
+        after = rest[m.end():]
+    om = re.match(r"([\w\-]+)\(", after)
+    if not om:
+        return None
+    return type_str, om.group(1), after
+
+
+def _trip_count(body: str) -> int | None:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', body)
+    return int(m.group(1)) if m else None
+
+
+def _callees(instr: Instr) -> list[tuple[str, str]]:
+    """-> [(kind, computation-name)]; kind in {fusion, while_body,
+    while_cond, apply, branch}."""
+    out = []
+    if instr.opcode == "fusion":
+        m = re.search(r"calls=%([\w.\-]+)", instr.body)
+        if m:
+            out.append(("fusion", m.group(1)))
+    elif instr.opcode == "while":
+        mb = re.search(r"body=%([\w.\-]+)", instr.body)
+        mc = re.search(r"condition=%([\w.\-]+)", instr.body)
+        if mb:
+            out.append(("while_body", mb.group(1)))
+        if mc:
+            out.append(("while_cond", mc.group(1)))
+    elif instr.opcode == "conditional":
+        for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                             r"(?:true|false)_computation=%([\w.\-]+))",
+                             instr.body):
+            names = m.group(1) or m.group(2) or ""
+            for n in re.findall(r"%([\w.\-]+)", names):
+                out.append(("branch", n))
+    else:
+        for m in re.finditer(r"(?:to_apply|comparator)=%([\w.\-]+)",
+                             instr.body):
+            out.append(("apply", m.group(1)))
+    return out
+
+
+def _operand_names(instr: Instr) -> list[str]:
+    # operands are inside the first (...) of the body
+    depth = 0
+    start = instr.body.find("(")
+    if start < 0:
+        return []
+    for i in range(start, len(instr.body)):
+        if instr.body[i] == "(":
+            depth += 1
+        elif instr.body[i] == ")":
+            depth -= 1
+            if depth == 0:
+                inner = instr.body[start + 1:i]
+                return re.findall(r"%([\w.\-]+)", inner)
+    return []
+
+
+ELEMWISE_1 = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "exponential-minus-one", "log-plus-one", "cosine", "sine", "floor",
+    "ceil", "round-nearest-afz", "sign", "clamp", "remainder", "atan2",
+    "logistic", "cbrt", "erf",
+}
+
+
+def _instr_flops(instr: Instr, comp: Computation) -> float:
+    if instr.opcode == "dot":
+        ops = _operand_names(instr)
+        if not ops:
+            return 0.0
+        lhs_type = comp.symbols.get(ops[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.body)
+        k = 1
+        if m and lhs_dims:
+            for d in m.group(1).split(","):
+                if d and int(d) < len(lhs_dims):
+                    k *= lhs_dims[int(d)]
+        return 2.0 * _shape_elems(instr.type_str) * k
+    if instr.opcode == "convolution":
+        ops = _operand_names(instr)
+        rhs_dims = _shape_dims(comp.symbols.get(ops[1], "")) if len(ops) > 1 \
+            else []
+        m = re.search(r"dim_labels=\w+_(\w+)->", instr.body)
+        k = 1
+        if m and rhs_dims:
+            labels = m.group(1)
+            for i, ch in enumerate(labels):
+                if ch != "o" and i < len(rhs_dims):   # all but output-feature
+                    k *= rhs_dims[i]
+        fgc = re.search(r"feature_group_count=(\d+)", instr.body)
+        if fgc and "i" in (m.group(1) if m else ""):
+            pass  # depthwise handled by i-dim == 1 in rhs
+        return 2.0 * _shape_elems(instr.type_str) * k
+    if instr.opcode in ELEMWISE_1 or instr.opcode == "convert":
+        return float(_shape_elems(instr.type_str))
+    if instr.opcode in ("reduce", "reduce-window"):
+        ops = _operand_names(instr)
+        if ops:
+            return float(_shape_elems(comp.symbols.get(ops[0], "")))
+    return 0.0
+
+
+SLICING_OPS = {"slice", "dynamic-slice", "gather"}
+
+
+def _written_bytes(instr: Instr, comp: Computation) -> int:
+    """Bytes written by ``instr``; a dynamic-update-slice writes only the
+    update region (the buffer is updated in place under XLA aliasing)."""
+    if instr.opcode == "dynamic-update-slice":
+        ops = _operand_names(instr)
+        if len(ops) > 1 and ops[1] in comp.symbols:
+            return _shape_bytes(comp.symbols[ops[1]])
+    return _shape_bytes(instr.type_str)
+
+
+_LOOKTHROUGH = {"convert", "bitcast", "copy"}
+
+
+def _uses_of(callee: Computation, name: str):
+    for ins in callee.instrs:
+        if name in _operand_names(ins):
+            yield ins
+
+
+def _param_read_bytes(callee: Computation, pname: str, full_bytes: int,
+                      _depth: int = 0) -> int:
+    """HBM bytes read from fusion parameter ``pname``: if every use slices
+    it, only the sliced regions stream in (this is how a scan body reads one
+    layer of a stacked parameter — the fix for the 200x over-count of
+    counting the full stacked buffer per iteration). A use that merely
+    passes the buffer through to the root tuple (loop-carried state) is
+    free — XLA aliases it in place; convert/bitcast chains around the
+    carry (the CPU backend's double-buffered 'wide' loops) are looked
+    through."""
+    if _depth > 4:
+        return full_bytes
+    sliced = 0
+    for ins in _uses_of(callee, pname):
+        ops = _operand_names(ins)
+        if ins.is_root and ins.opcode == "tuple":
+            continue                               # pass-through carry
+        if ins.opcode in SLICING_OPS and ops and ops[0] == pname:
+            sliced += _shape_bytes(ins.type_str)
+        elif ins.opcode == "dynamic-update-slice" and ops[0] == pname:
+            # in-place update: the unmodified region is not read
+            sliced += _written_bytes(ins, callee)
+        elif ins.opcode in _LOOKTHROUGH:
+            sliced += _param_read_bytes(callee, ins.name, full_bytes,
+                                        _depth + 1)
+            if sliced >= full_bytes:
+                return full_bytes
+        else:
+            return full_bytes
+    return sliced
+
+
+def _fusion_written_bytes(callee: Computation) -> int:
+    """Bytes a fusion writes: root-tuple elements that are raw parameter
+    pass-throughs cost nothing (aliased); dynamic-update-slice elements
+    cost their update region; everything else costs its full size."""
+    root = callee.root
+    if root is None:
+        return 0
+    pset = set(callee.param_names)
+
+    def elem_bytes(opn: str, depth: int = 0) -> int:
+        if opn in pset:
+            return 0                               # aliased pass-through
+        d = callee.defs.get(opn)
+        if d is None:
+            return _shape_bytes(callee.symbols.get(opn, ""))
+        if d.opcode == "dynamic-update-slice":
+            return _written_bytes(d, callee)
+        if d.opcode in _LOOKTHROUGH and depth < 4:
+            ops = _operand_names(d)
+            if ops:
+                return elem_bytes(ops[0], depth + 1)
+        return _shape_bytes(callee.symbols.get(opn, ""))
+
+    if root.opcode == "tuple":
+        return sum(elem_bytes(opn) for opn in _operand_names(root))
+    if root.opcode in _LOOKTHROUGH:
+        ops = _operand_names(root)
+        if ops:
+            return elem_bytes(ops[0])
+    return _written_bytes(root, callee)
+
+
+def _instr_memory_bytes(instr: Instr, comp: Computation,
+                        comps: dict) -> int:
+    if instr.opcode in NON_MATERIAL:
+        return 0
+    if instr.opcode in SLICING_OPS:
+        return 2 * _shape_bytes(instr.type_str)      # read slice + write
+    if instr.opcode == "dynamic-update-slice":
+        return 2 * _written_bytes(instr, comp)       # read update + write
+    if instr.opcode == "fusion":
+        m = re.search(r"calls=%([\w.\-]+)", instr.body)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is None:
+            return _shape_bytes(instr.type_str)
+        total = _fusion_written_bytes(callee)
+        for i, op in enumerate(_operand_names(instr)):
+            full = _shape_bytes(comp.symbols.get(op, ""))
+            if i < len(callee.param_names):
+                total += _param_read_bytes(callee, callee.param_names[i],
+                                           full)
+            else:
+                total += full
+        return total
+    total = _shape_bytes(instr.type_str)
+    for op in _operand_names(instr):
+        t = comp.symbols.get(op)
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+def _collective_bytes(instr: Instr, comp: Computation) -> int:
+    if instr.opcode == "all-reduce":
+        return 2 * _shape_bytes(instr.type_str)
+    if instr.opcode == "reduce-scatter":
+        ops = _operand_names(instr)
+        if ops and ops[0] in comp.symbols:
+            return _shape_bytes(comp.symbols[ops[0]])
+    return _shape_bytes(instr.type_str)
+
+
+def analyse(hlo_text: str) -> dict:
+    """-> {flops, memory_bytes, collective_bytes: {kind: bytes},
+    collective_total, unknown_trip_whiles, n_collectives}.
+
+    All values are per-device (the module is the SPMD per-device program).
+    """
+    comps = parse_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^ENTRY %?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        raise ValueError("no ENTRY computation found")
+
+    # propagate execution multipliers through the call graph
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # memory model: count HBM traffic only where buffers materialise
+    material: dict[str, bool] = {entry: True}
+    unknown_whiles = 0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        for instr in comp.instrs:
+            for kind, callee in _callees(instr):
+                if callee not in comps:
+                    continue
+                m = mult[cname]
+                is_material = material.get(cname, False)
+                if kind in ("while_body", "while_cond"):
+                    tc = _trip_count(instr.body)
+                    if tc is None:
+                        tc = 1
+                        if kind == "while_body":
+                            unknown_whiles += 1
+                    m *= tc
+                    child_material = is_material
+                elif kind == "fusion":
+                    child_material = False     # internals live in VMEM/regs
+                elif kind == "apply":
+                    child_material = False
+                else:                          # conditional branch
+                    child_material = is_material
+                mult[callee] += m
+                material[callee] = material.get(callee, False) or \
+                    child_material
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    flops = 0.0
+    mem = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    n_coll = 0
+    for cname in order:
+        comp = comps[cname]
+        m = mult[cname]
+        if m == 0:
+            continue
+        for instr in comp.instrs:
+            flops += m * _instr_flops(instr, comp)
+            if material.get(cname, False):
+                mem += m * _instr_memory_bytes(instr, comp, comps)
+            if instr.opcode in COLLECTIVES:
+                coll[instr.opcode] += m * _collective_bytes(instr, comp)
+                n_coll += int(m)
+
+    return {
+        "flops": flops,
+        "memory_bytes": mem,
+        "collective_bytes": dict(coll),
+        "collective_total": sum(coll.values()),
+        "n_collectives": n_coll,
+        "unknown_trip_whiles": unknown_whiles,
+    }
+
+
+def roofline_terms(analysis: dict, *, peak_flops: float, hbm_bw: float,
+                   ici_bw: float) -> dict:
+    """Three per-chip roofline terms in seconds (+ dominant term)."""
+    compute_s = analysis["flops"] / peak_flops
+    memory_s = analysis["memory_bytes"] / hbm_bw
+    collective_s = analysis["collective_total"] / ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+if __name__ == "__main__":
+    import sys
+
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyse(f.read()), indent=2))

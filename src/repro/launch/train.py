@@ -1,0 +1,147 @@
+"""Training driver: data-parallel + TP training with checkpoint/restart,
+straggler reporting, and deterministic resume.
+
+This is the end-to-end path the fault-tolerance story hangs off:
+
+  * periodic checkpointing (step- and wall-clock-triggered) with atomic
+    commit (checkpoint/ckpt.py);
+  * ``--resume auto`` restores the latest valid manifest and re-places it
+    under the *current* mesh's shardings — elastic restarts across
+    different chip counts;
+  * per-step wall time is logged; steps slower than ``straggler_factor x``
+    the running median are flagged (on a multi-host cluster this feeds the
+    host-replacement loop);
+  * data order is a pure function of (seed, step), so replacing a host
+    never drifts the global batch (data/pipeline.py).
+
+On this CPU container it runs the reduced smoke configs; on a real cluster
+the same file runs the FULL configs (the mesh/rules scale with
+``jax.device_count()``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import ckpt
+from repro.configs.common import SMOKE_BATCH, SMOKE_SEQ
+from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro.models import build
+from repro.optim import OptConfig
+from repro.parallel.sharding import Rules, use_rules
+from repro.training import TrainConfig, init_train_state, make_train_step
+
+
+def build_mesh_and_rules(tp: int):
+    n = jax.device_count()
+    dp = n // tp
+    mesh = jax.make_mesh((dp, tp), ("data", "model"))
+    table = {"batch": ("data",), "heads": "model", "kv_heads": "model",
+             "ff": "model", "e_ff": "model", "experts": "model",
+             "vocab": "model", "inner": "model", "inner_all": "model",
+             "ssm_heads": "model", "embed": None, "layers": None,
+             "moe_groups": ("data",), "exp_slots": "model",
+             "exp_cap": None, "kv_seq": None}
+    rules = Rules(table=table, fsdp="data" if dp > 1 else None,
+                  axis_sizes={"data": dp, "model": tp})
+    return mesh, rules
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--config", choices=("smoke", "full"), default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=SMOKE_BATCH * 2)
+    ap.add_argument("--seq", type=int, default=SMOKE_SEQ)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-every-s", type=float, default=600.0)
+    ap.add_argument("--resume", choices=("auto", "none"), default="auto")
+    ap.add_argument("--straggler-factor", type=float, default=1.5)
+    ap.add_argument("--straggler-report", default=None,
+                    help="jsonl path for per-step timing records")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    mod = configs.get(args.arch)
+    cfg = mod.SMOKE if args.config == "smoke" else mod.FULL
+    bundle = build(cfg)
+    mesh, rules = build_mesh_and_rules(args.tp)
+    opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps),
+                        decay_steps=args.steps)
+    train_cfg = TrainConfig(microbatches=args.microbatches)
+
+    with use_rules(rules), mesh:
+        state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg,
+                                 train_cfg)
+        step_fn = jax.jit(make_train_step(bundle, opt_cfg, train_cfg),
+                          donate_argnums=(0,))
+
+        start = 0
+        if args.resume == "auto":
+            latest = ckpt.latest_step(args.ckpt_dir)
+            if latest is not None:
+                state = ckpt.restore(args.ckpt_dir, latest, state)
+                start = latest
+                print(f"resumed from step {latest}")
+
+        data = SyntheticLMPipeline(DataConfig(
+            vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+        data.skip_to(start)
+
+        times: list[float] = []
+        last_ckpt_t = time.time()
+        for step in range(start, args.steps):
+            batch = data.device_batch(step)
+            if cfg.stub_tokens:
+                batch["stub"] = jnp.zeros(
+                    (args.batch, cfg.stub_tokens, cfg.stub_dim), cfg.dtype)
+            if cfg.family == "encdec":
+                batch = {"frames": jnp.zeros(
+                    (args.batch, args.seq, cfg.d_model), cfg.dtype),
+                    "tokens": batch["tokens"], "labels": batch["labels"]}
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            times.append(dt)
+
+            med = float(np.median(times[-50:]))
+            straggle = len(times) > 5 and dt > args.straggler_factor * med
+            if args.straggler_report:
+                with open(args.straggler_report, "a") as f:
+                    f.write(json.dumps({"step": step, "dt": dt,
+                                        "median": med,
+                                        "straggler": straggle}) + "\n")
+            if straggle:
+                print(f"[straggler] step {step}: {dt:.3f}s vs median "
+                      f"{med:.3f}s")
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dt:.3f}s")
+
+            due_steps = (step + 1) % args.ckpt_every == 0
+            due_time = time.time() - last_ckpt_t > args.ckpt_every_s
+            if due_steps or due_time or step == args.steps - 1:
+                path = ckpt.save(args.ckpt_dir, step + 1, state)
+                last_ckpt_t = time.time()
+                print(f"checkpointed -> {path}")
+
+    print(f"done: {args.steps - start} steps, "
+          f"median step {np.median(times):.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model zoo: one scanned decoder-only implementation (dense/moe/ssm/
+hybrid/vlm) plus an encoder-decoder; all consuming repro.core's matmul-form
+reduce/scan through RMSNorm, MoE routing, SSD, and attention."""
+from repro.models.layers import ModelConfig
+from repro.models.lm import Bundle, build_lm
+
+
+def build(cfg: ModelConfig) -> Bundle:
+    if cfg.family == "encdec":
+        from repro.models.encdec import build_encdec
+
+        return build_encdec(cfg)
+    return build_lm(cfg)
+
+
+__all__ = ["Bundle", "ModelConfig", "build"]

@@ -1,0 +1,176 @@
+"""Encoder-decoder LM (Seamless-M4T-style backbone).
+
+The audio frontend is a stub per the brief: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d) — the w2v-BERT-style frontend
+output — and the transformer backbone (bidirectional encoder + causal
+decoder with cross-attention) is fully modeled. Decode caches precomputed
+cross-attention K/V (standard seq2seq serving layout).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import (
+    PSpec,
+    cross_entropy,
+    embed_tokens,
+    rmsnorm,
+    unembed,
+)
+from repro.models.lm import Bundle, _positions, _remat
+from repro.parallel.sharding import logical_constraint
+
+
+def encdec_pspec(cfg: L.ModelConfig):
+    d, v = cfg.d_model, cfg.vocab
+    ne, nd = cfg.enc_layers, cfg.n_layers
+    return {
+        "embed": PSpec((v, d), ("vocab", "embed"), "normal"),
+        "head": PSpec((v, d), ("vocab", "embed"), "normal"),
+        "enc": {
+            "ln1": PSpec((ne, d), ("layers", "embed"), "ones"),
+            "attn": L.attn_pspec(cfg, n=ne),
+            "ln2": PSpec((ne, d), ("layers", "embed"), "ones"),
+            "mlp": L.mlp_pspec(cfg, n=ne),
+        },
+        "enc_norm": PSpec((d,), ("embed",), "ones"),
+        "dec": {
+            "ln1": PSpec((nd, d), ("layers", "embed"), "ones"),
+            "attn": L.attn_pspec(cfg, n=nd),
+            "lnx": PSpec((nd, d), ("layers", "embed"), "ones"),
+            "xattn": L.attn_pspec(cfg, n=nd),
+            "ln2": PSpec((nd, d), ("layers", "embed"), "ones"),
+            "mlp": L.mlp_pspec(cfg, n=nd),
+        },
+        "final_norm": PSpec((d,), ("embed",), "ones"),
+    }
+
+
+def encode(params, cfg: L.ModelConfig, frames):
+    """frames (B, S_enc, d) -> encoder memory (B, S_enc, d)."""
+    h = frames.astype(cfg.dtype)
+    b, s, _ = h.shape
+    positions = _positions(b, s)
+
+    def body(hh, lp):
+        a_in = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        a_out, _ = L.attn_apply(lp["attn"], cfg, a_in, positions=positions,
+                                causal=False)
+        hh = hh + a_out
+        m_in = rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+        hh = hh + L.mlp_apply(lp["mlp"], cfg, m_in)
+        return logical_constraint(hh, "batch", None, "embed"), None
+
+    body = _remat(body, cfg.remat_policy)
+    h, _ = jax.lax.scan(body, h, params["enc"])
+    return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: L.ModelConfig, tokens, memory,
+                 collect_cache=False):
+    h = embed_tokens(params["embed"], tokens)
+    b, s, _ = h.shape
+    positions = _positions(b, s)
+
+    def body(hh, lp):
+        a_in = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        a_out, kv = L.attn_apply(lp["attn"], cfg, a_in, positions=positions)
+        hh = hh + a_out
+        x_in = rmsnorm(hh, lp["lnx"], cfg.norm_eps)
+        x_out, xkv = L.attn_apply(lp["xattn"], cfg, x_in, kv=memory)
+        hh = hh + x_out
+        m_in = rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+        hh = hh + L.mlp_apply(lp["mlp"], cfg, m_in)
+        hh = logical_constraint(hh, "batch", None, "embed")
+        return hh, (kv, xkv) if collect_cache else None
+
+    body = _remat(body, cfg.remat_policy)
+    h, caches = jax.lax.scan(body, h, params["dec"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(h, params["head"]), caches
+
+
+def encdec_loss(params, cfg: L.ModelConfig, batch):
+    memory = encode(params, cfg, batch["frames"])
+    logits, _ = decode_train(params, cfg, batch["tokens"], memory)
+    return cross_entropy(logits, batch["labels"])
+
+
+def encdec_cache_pspec(cfg: L.ModelConfig, batch: int, smax: int):
+    """smax split evenly between encoder memory and decoder self cache."""
+    s_enc = s_dec = smax // 2
+    nd, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    log = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {
+        "self_k": PSpec((nd, batch, s_dec, hkv, dh), log, "zeros"),
+        "self_v": PSpec((nd, batch, s_dec, hkv, dh), log, "zeros"),
+        "cross_k": PSpec((nd, batch, s_enc, hkv, dh), log, "zeros"),
+        "cross_v": PSpec((nd, batch, s_enc, hkv, dh), log, "zeros"),
+        "pos": PSpec((), (), "zeros", jnp.int32),
+    }
+
+
+def encdec_prefill(params, cfg: L.ModelConfig, batch):
+    memory = encode(params, cfg, batch["frames"])
+    logits, caches = decode_train(params, cfg, batch["tokens"], memory,
+                                  collect_cache=True)
+    (sk, sv), (xk, xv) = caches
+    cache = {"self_k": sk, "self_v": sv, "cross_k": xk, "cross_v": xv,
+             "pos": jnp.int32(batch["tokens"].shape[1])}
+    return logits, cache
+
+
+def encdec_decode(params, cfg: L.ModelConfig, cache, batch):
+    tokens = batch["tokens"]
+    h = embed_tokens(params["embed"], tokens)
+    pos = cache["pos"]
+    s_enc = cache["cross_k"].shape[2]
+
+    def step(hh, xs):
+        lp, sk, sv, xk, xv = xs
+        c = {"k": sk, "v": sv, "pos": pos}
+        a_in = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        a_out, c = L.attn_decode(lp["attn"], cfg, a_in, c)
+        hh = hh + a_out
+        x_in = rmsnorm(hh, lp["lnx"], cfg.norm_eps)
+        # cross attention against fixed memory K/V (no rope, all valid)
+        b = hh.shape[0]
+        dh, hq, hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+        q = jnp.einsum("bsd,dh->bsh", x_in, lp["xattn"]["wq"]).reshape(
+            b, 1, hq, dh)
+        from repro.models.xla_attention import decode_attention
+        o = decode_attention(q, xk, xv, jnp.int32(s_enc))
+        x_out = jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, hq * dh),
+                           lp["xattn"]["wo"])
+        hh = hh + x_out
+        m_in = rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+        hh = hh + L.mlp_apply(lp["mlp"], cfg, m_in)
+        return hh, (c["k"], c["v"])
+
+    h, (ks, vs) = jax.lax.scan(
+        step, h, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache)
+    new_cache.update({"self_k": ks, "self_v": vs, "pos": pos + 1})
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(h, params["head"]), new_cache
+
+
+def build_encdec(cfg: L.ModelConfig) -> Bundle:
+    pspec = encdec_pspec(cfg)
+    from repro.models.common import count_pspec_params
+
+    return Bundle(
+        cfg=cfg,
+        params_pspec=pspec,
+        loss=lambda p, b: encdec_loss(p, cfg, b),
+        prefill=lambda p, b: encdec_prefill(p, cfg, b),
+        decode=lambda p, c, b: encdec_decode(p, cfg, c, b),
+        cache_pspec=lambda bsz, smax: encdec_cache_pspec(cfg, bsz, smax),
+        n_params=count_pspec_params(pspec),
+        n_active_params=count_pspec_params(pspec),
+    )

@@ -1,0 +1,494 @@
+"""Layer implementations: GQA attention, SwiGLU MLP, token-choice MoE,
+Mamba-2 (SSD) mixer. All functional: ``<layer>_pspec(cfg)`` declares params,
+``<layer>_apply(params, cfg, x, ...)`` computes, ``<layer>_decode`` steps a
+cache. MoE routing runs its count/offset computation through the paper's
+matmul-form reduce/scan (repro.core) — the stream-compaction use-case the
+paper cites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reduce import tcu_segmented_reduce
+from repro.core.scan import tcu_scan
+from repro.core.ssd import ssd_chunked, ssd_decode_step
+from repro.models.common import PSpec, rmsnorm, rope, swiglu
+from repro.models.xla_attention import chunked_attention, decode_attention
+from repro.parallel.sharding import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# config
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    swa_window: int | None = None
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # dispatch granularity: "grouped" keeps routing/dispatch local to
+    # token groups aligned with the data axis (GShard-style); "global"
+    # is the naive whole-batch sort (13-16x flop inflation + TB-scale
+    # collectives under GSPMD — kept as the measured baseline)
+    moe_impl: str = "grouped"
+    moe_groups: int = 32
+    # SSM (Mamba-2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    conv_kernel: int = 4
+    expand: int = 2
+    ssd_chunk: int = 128           # intra-chunk tile (M traffic scales L*Q)
+    # hybrid (Zamba2-style shared attention block)
+    shared_attn_every: int = 0
+    # enc-dec
+    enc_layers: int = 0
+    # modality stub (vlm/audio): prefix embeddings fed past the frontend
+    stub_tokens: int = 0
+    stub_dim: int = 0
+    # numerics / execution
+    dtype: Any = jnp.bfloat16
+    remat_policy: str = "none"     # none | dots | offload-ready
+    scan_layers: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def attn_pspec(cfg: ModelConfig, n: int | None = None, d_in: int | None = None):
+    """Stacked attention params for ``n`` layers (None -> cfg.n_layers)."""
+    nl = cfg.n_layers if n is None else n
+    d = d_in or cfg.d_model
+    dh, hq, hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    lead = (nl,) if nl else ()
+    ll = ("layers",) if nl else ()
+    return {
+        "wq": PSpec(lead + (d, hq * dh), ll + ("embed", "heads")),
+        "wk": PSpec(lead + (d, hkv * dh), ll + ("embed", "kv_heads")),
+        "wv": PSpec(lead + (d, hkv * dh), ll + ("embed", "kv_heads")),
+        # wo always projects back to the residual width (d_in may differ,
+        # e.g. Zamba2's shared block consumes concat(h, embeddings))
+        "wo": PSpec(lead + (hq * dh, cfg.d_model), ll + ("heads", "embed")),
+    }
+
+
+def attn_apply(p, cfg: ModelConfig, x, *, positions=None, causal=True,
+               window=None, kv=None):
+    """x (B,S,d) -> (out (B,S,d), (k, v) for caching).
+
+    ``kv`` overrides the self-attention K/V source (cross-attention)."""
+    b, s, _ = x.shape
+    dh, hq, hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, hq, dh)
+    src = x if kv is None else kv
+    sk = src.shape[1]
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"]).reshape(b, sk, hkv, dh)
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"]).reshape(b, sk, hkv, dh)
+    if positions is not None and kv is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, "kv_heads", None)
+    o = chunked_attention(q, k, v, causal=causal and kv is None,
+                          window=window)
+    o = o.reshape(b, s, hq * dh)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k, v)
+
+
+def attn_decode(p, cfg: ModelConfig, x, cache, *, window=None):
+    """x (B,1,d); cache dict {k,v: (B,Smax,Hkv,Dh), pos: ()} -> out, cache."""
+    b = x.shape[0]
+    dh, hq, hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    pos = cache["pos"]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, hq, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, 1, hkv, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, 1, hkv, dh)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    smax = cache["k"].shape[1]
+    slot = pos % smax if window is not None else pos  # ring buffer for SWA
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if window is None:
+        o = decode_attention(q, kc, vc, pos + 1)
+    else:
+        # ring cache: all entries valid once warm; mask handled by recency
+        valid = jnp.minimum(pos + 1, smax)
+        o = decode_attention(q, kc, vc, valid)  # positions are ring-local
+    o = o.reshape(b, 1, hq * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, {"k": kc, "v": vc, "pos": pos + 1}
+
+
+def attn_cache_pspec(cfg: ModelConfig, n_layers: int, batch: int, smax: int):
+    cap = min(smax, cfg.swa_window) if cfg.swa_window else smax
+    shp = (n_layers, batch, cap, cfg.n_kv_heads, cfg.dh)
+    log = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": PSpec(shp, log, "zeros"),
+        "v": PSpec(shp, log, "zeros"),
+        "pos": PSpec((), (), "zeros", jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+
+
+def mlp_pspec(cfg: ModelConfig, n: int | None = None):
+    nl = cfg.n_layers if n is None else n
+    lead = (nl,) if nl else ()
+    ll = ("layers",) if nl else ()
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": PSpec(lead + (d, f), ll + ("embed", "ff")),
+        "w_gate": PSpec(lead + (d, f), ll + ("embed", "ff")),
+        "w_out": PSpec(lead + (f, d), ll + ("ff", "embed")),
+    }
+
+
+def mlp_apply(p, cfg: ModelConfig, x):
+    return swiglu(x, p["w_in"], p["w_gate"], p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, sort-based capacity dispatch)
+
+
+def moe_pspec(cfg: ModelConfig, n: int | None = None):
+    nl = cfg.n_layers if n is None else n
+    lead = (nl,) if nl else ()
+    ll = ("layers",) if nl else ()
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    return {
+        "router": PSpec(lead + (d, e), ll + ("embed", None), "normal"),
+        "w_in": PSpec(lead + (e, d, f), ll + ("experts", "embed", "e_ff")),
+        "w_gate": PSpec(lead + (e, d, f), ll + ("experts", "embed", "e_ff")),
+        "w_out": PSpec(lead + (e, f, d), ll + ("experts", "e_ff", "embed")),
+    }
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """Token-choice top-k with capacity; counts/offsets via the paper's
+    matmul-form reduce + exclusive scan. Returns (y, aux_loss)."""
+    if cfg.moe_impl == "grouped":
+        return moe_apply_grouped(p, cfg, x)
+    return moe_apply_global(p, cfg, x)
+
+
+def moe_apply_grouped(p, cfg: ModelConfig, x):
+    """Group-local token-choice top-k MoE (GShard-style capacity groups).
+
+    Tokens are split into ``moe_groups`` groups whose leading dim maps onto
+    the data mesh axis, so the routing sort, the capacity-buffer scatter,
+    and the combine gather are all *local* to a data shard. The only
+    cross-chip communication left is the expert-partial combine (a psum
+    over the model axis — the same all-reduce TP already pays for dense
+    MLPs) plus FSDP weight gathers. Per-(group, expert) counts and
+    capacity offsets run through the paper's matmul-form reduce and
+    exclusive scan.
+
+    Versus ``moe_apply_global`` (whole-batch sort): the v0 dry-run measured
+    13-16x per-chip flop inflation (capacity buffer replicated over data)
+    and TB-scale scatter all-reduces; grouping removes both structurally.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    t = b * s
+    import math
+
+    g = math.gcd(t, cfg.moe_groups)
+    tg = t // g
+    n = tg * k                                  # routed slots per group
+    xg = x.reshape(g, tg, d)
+    xg = logical_constraint(xg, "moe_groups", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                   # (g, tg, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    e_flat = logical_constraint(top_i.reshape(g, n), "moe_groups", None)
+    w_flat = logical_constraint(top_w.reshape(g, n), "moe_groups", None)
+    order = jnp.argsort(e_flat, axis=-1)                     # per-group sort
+    order = logical_constraint(order, "moe_groups", None)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    e_sorted = logical_constraint(e_sorted, "moe_groups", None)
+
+    # per-(group, expert) counts: matmul-form reduction of the one-hot
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.float32)    # (g, n, e)
+    counts = tcu_segmented_reduce(jnp.moveaxis(onehot, -1, -2))  # (g, e)
+    # capacity offsets: matmul-form exclusive scan over experts
+    offsets = tcu_scan(counts, exclusive=True)               # (g, e)
+    rank = jnp.arange(n)[None, :] - jnp.take_along_axis(
+        offsets, e_sorted, axis=-1).astype(jnp.int32)
+
+    cap = max(8, int(cfg.capacity_factor * n / e + 127) // 128 * 128)
+    keep = rank < cap
+    slot = jnp.where(keep, e_sorted * cap + rank, e * cap)   # e*cap = drop
+    slot = logical_constraint(slot, "moe_groups", None)
+    tok_idx = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.arange(n)[None], (g, n)), order, axis=-1) // k
+    tok_idx = logical_constraint(tok_idx, "moe_groups", None)
+
+    # All dispatch data movement is vmapped over the group dim: the
+    # resulting gathers carry explicit batch dims, which GSPMD partitions
+    # shard-locally (the explicit arange-index form measured 1e12+ bytes
+    # of involuntary all-reduce per layer). Dispatch is formulated as a
+    # slot->token GATHER (tokens are already expert-sorted), not a
+    # token->slot scatter: scatter lowering materialises full-buffer u32
+    # index maps (~20% of the HBM traffic in the v2 measurement).
+    pos = offsets[..., None].astype(jnp.int32) + \
+        jnp.arange(cap, dtype=jnp.int32)[None, None, :]      # (g, e, cap)
+    valid = jnp.arange(cap)[None, None, :] < \
+        jnp.minimum(counts, cap)[..., None]                  # (g, e, cap)
+    posc = jnp.minimum(pos, n - 1).reshape(g, e * cap)
+    tok_for_slot = jax.vmap(lambda tb, pb: tb[pb])(tok_idx, posc)
+    hbuf = jax.vmap(lambda xb, ib: xb[ib])(xg, tok_for_slot)  # (g, e*cap, d)
+    hbuf = hbuf * valid.reshape(g, e * cap, 1).astype(x.dtype)
+    # shard the flat slot dim over model so each TP shard gathers only its
+    # experts' slots (replicating here cost a 10.7 GB/layer f32 all-gather
+    # of grad_h on the backward pass in the v3 measurement)
+    hbuf = logical_constraint(hbuf, "moe_groups", "exp_slots", None)
+    h = hbuf.reshape(g, e, cap, d)
+    # NOTE (measured, kept for the record): sharding the capacity dim over
+    # model here ("exp_slots") instead of exp_cap helps nothing for qwen3
+    # (no-op: "experts" owns the axis) and HURTS grok (x 120s -> 226s: the
+    # cap-sharded FFN must gather the f-sharded expert weights, which
+    # costs more than the grad all-reduce it removes). grok's structural
+    # fix would be 2-D expert sharding (EP8 x TP2) on a factored mesh
+    # axis — out of scope for the fixed (data=16, model=16) mesh.
+    h = logical_constraint(h, "moe_groups", "experts", "exp_cap", None)
+    up = jnp.einsum("gecd,edf->gecf", h, p["w_in"])
+    gate = jnp.einsum("gecd,edf->gecf", h, p["w_gate"])
+    act = jax.nn.silu(gate) * up          # native-dtype silu (see swiglu)
+    act = logical_constraint(act, "moe_groups", "experts", "exp_cap",
+                             "e_ff")
+    y = jnp.einsum("gecf,efd->gecd", act, p["w_out"])
+    y = logical_constraint(y, "moe_groups", "experts", "exp_cap", None)
+
+    yflat = logical_constraint(y.reshape(g, e * cap, d),
+                               "moe_groups", None, None)
+    y_tok = jax.vmap(lambda yb, sb: yb[sb])(
+        yflat, jnp.minimum(slot, e * cap - 1))               # (g, n, d)
+    y_tok = logical_constraint(y_tok, "moe_groups", None, None)
+    w_sorted = jnp.take_along_axis(w_flat, order, axis=-1)
+    contrib = y_tok * (w_sorted * keep.astype(jnp.float32)
+                       )[..., None].astype(y.dtype)
+    out = jax.vmap(
+        lambda cb, ib: jnp.zeros((tg, d), x.dtype).at[ib].add(cb))(
+        contrib, tok_idx)
+    out = logical_constraint(out, "moe_groups", None, None)
+
+    # switch-style load-balance aux: E * <f_e, p_e> (mean over groups)
+    frac = counts / jnp.maximum(
+        jnp.sum(counts, axis=-1, keepdims=True), 1.0)        # (g, e)
+    mean_p = jnp.mean(probs, axis=1)                         # (g, e)
+    aux = e * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+    return out.reshape(b, s, d), aux
+
+
+def moe_apply_global(p, cfg: ModelConfig, x):
+    """Whole-batch sort dispatch (the measured v0 baseline; see
+    moe_apply_grouped for why this does not shard)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                   # (t, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    e_flat = top_i.reshape(t * k)
+    w_flat = top_w.reshape(t * k)
+    order = jnp.argsort(e_flat)                              # stable
+    e_sorted = e_flat[order]
+
+    # per-expert counts: matmul-form reduction of the one-hot assignment
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.float32)    # (t*k, e)
+    counts = tcu_segmented_reduce(onehot.T)                  # (e,)
+    # capacity offsets: matmul-form exclusive scan (stream compaction)
+    offsets = tcu_scan(counts, exclusive=True)               # (e,)
+    rank = jnp.arange(t * k) - jnp.take(offsets, e_sorted).astype(jnp.int32)
+
+    cap = max(8, int(cfg.capacity_factor * t * k / e + 127) // 128 * 128)
+    keep = rank < cap
+    slot = jnp.where(keep, e_sorted * cap + rank, e * cap)
+
+    xin = jnp.take(xf, order // k, axis=0)                   # (t*k, d)
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].set(xin, mode="drop")
+    h = buf.reshape(e, cap, d)
+    h = logical_constraint(h, "experts", "exp_cap", None)
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_in"])
+    gate = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    act = logical_constraint(act, "experts", "exp_cap", "e_ff")
+    y = jnp.einsum("ecf,efd->ecd", act, p["w_out"])
+    y = logical_constraint(y, "experts", "exp_cap", None)
+
+    y_sorted = jnp.take(y.reshape(e * cap, d), jnp.minimum(slot, e * cap - 1),
+                        axis=0)
+    w_sorted = jnp.take(w_flat, order)
+    contrib = y_sorted * (w_sorted * keep.astype(jnp.float32))[:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[order // k].add(contrib)
+
+    # switch-style load-balance aux: E * <f_e, p_e>
+    frac = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_p)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 mixer
+
+
+def mamba_pspec(cfg: ModelConfig, n: int | None = None):
+    nl = cfg.n_layers if n is None else n
+    lead = (nl,) if nl else ()
+    ll = ("layers",) if nl else ()
+    d, di = cfg.d_model, cfg.d_inner
+    g, ns, hh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * ns
+    return {
+        "in_proj": PSpec(lead + (d, 2 * di + 2 * g * ns + hh),
+                         ll + ("embed", "inner_all")),
+        "conv_w": PSpec(lead + (cfg.conv_kernel, conv_dim),
+                        ll + (None, "inner_all"), "fan_in"),
+        "conv_b": PSpec(lead + (conv_dim,), ll + ("inner_all",), "zeros"),
+        "dt_bias": PSpec(lead + (hh,), ll + ("ssm_heads",), "dt_bias",
+                         jnp.float32),
+        "a_log": PSpec(lead + (hh,), ll + ("ssm_heads",), "a_log",
+                       jnp.float32),
+        "d_skip": PSpec(lead + (hh,), ll + ("ssm_heads",), "ones",
+                        jnp.float32),
+        "norm_w": PSpec(lead + (di,), ll + ("inner",), "ones"),
+        "out_proj": PSpec(lead + (di, d), ll + ("inner", "embed")),
+    }
+
+
+def _split_inproj(cfg: ModelConfig, zxbcdt):
+    di, g, ns, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * ns]
+    dt = zxbcdt[..., di + di + 2 * g * ns:]
+    assert dt.shape[-1] == hh
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv. xbc (B,S,C), w (K,C) -> (B,S,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],       # (K, 1, C) HIO
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba_apply(p, cfg: ModelConfig, x, *, collect_cache: bool = False):
+    """x (B,S,d) -> (out (B,S,d), cache-or-None). Full-sequence path."""
+    b, s, d = x.shape
+    di, g, ns = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    hh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_inproj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(b, s, hh, hp)
+    bmat = xbc[..., di:di + g * ns].reshape(b, s, g, ns)
+    cmat = xbc[..., di + g * ns:].reshape(b, s, g, ns)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xs = logical_constraint(xs, "batch", None, "ssm_heads", None)
+    # big-einsum operands in the compute dtype (f32 masks + accumulation
+    # stay; see core/ssd.py)
+    y, state = ssd_chunked(xs, dt, a, bmat, cmat, chunk=cfg.ssd_chunk,
+                           matmul_dtype=cfg.dtype)
+    y = y + p["d_skip"][:, None].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    cache = None
+    if collect_cache:
+        # conv cache = last K-1 *raw* mixer inputs; state (B,H,P,N) from SSD
+        cache = {"conv": xbc_raw[:, -(cfg.conv_kernel - 1):], "state": state}
+    return out, cache
+
+
+def mamba_cache_pspec(cfg: ModelConfig, n_layers: int, batch: int):
+    di, g, ns = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    hh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * g * ns
+    return {
+        "conv": PSpec((n_layers, batch, cfg.conv_kernel - 1, conv_dim),
+                      ("layers", "batch", None, "inner_all"), "zeros"),
+        "state": PSpec((n_layers, batch, hh, hp, ns),
+                       ("layers", "batch", "ssm_heads", None, None), "zeros",
+                       jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, x, cache):
+    """x (B,1,d); cache {conv (B,K-1,C), state (B,H,P,N)}."""
+    b = x.shape[0]
+    di, g, ns = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    hh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_raw = _split_inproj(cfg, zxbcdt)
+    hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)],
+                           axis=1)                        # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc_t = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xbc_t = xbc_t.astype(x.dtype)
+    xs = xbc_t[..., :di].reshape(b, hh, hp)
+    bmat = xbc_t[..., di:di + g * ns].reshape(b, g, ns)
+    cmat = xbc_t[..., di + g * ns:].reshape(b, g, ns)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd_decode_step(cache["state"], xs, dt, a, bmat, cmat)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": hist[:, 1:], "state": state}

@@ -1,0 +1,412 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid / vlm
+families. One scanned-homogeneous-stack implementation parameterised by
+``ModelConfig``; heterogeneous archs (Zamba2 hybrid) compose scanned groups
+with a shared attention block.
+
+Everything is functional: params are PSpec trees (materialise with
+``init_params`` for smoke tests, ``shape_structs`` for the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import (
+    PSpec,
+    cross_entropy,
+    embed_tokens,
+    rmsnorm,
+    unembed,
+)
+from repro.parallel.sharding import logical_constraint
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def _remat(fn, policy: str):
+    if policy == "off":
+        return fn
+    if policy == "none":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(policy)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bundle:
+    """Everything the launcher/trainer/server needs for one architecture."""
+
+    cfg: L.ModelConfig
+    params_pspec: Any
+    loss: Callable          # (params, batch) -> scalar
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    decode: Callable        # (params, cache, batch) -> (logits, cache)
+    cache_pspec: Callable   # (batch_size, max_len) -> PSpec tree
+    n_params: int = 0
+    n_active_params: int = 0
+    # serving-prefill: unembed only the last position (B, 1, vocab) —
+    # avoids the (B, S, vocab) logits buffer at 32k prefill
+    prefill_last: Callable = None
+
+
+# ---------------------------------------------------------------------------
+# parameter declaration
+
+
+def lm_pspec(cfg: L.ModelConfig):
+    d, v = cfg.d_model, cfg.vocab
+    p: dict[str, Any] = {
+        "embed": PSpec((v, d), ("vocab", "embed"), "normal"),
+        "final_norm": PSpec((d,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = PSpec((v, d), ("vocab", "embed"), "normal")
+    if cfg.stub_tokens:
+        p["stub_proj"] = PSpec((cfg.stub_dim, d), (None, "embed"))
+
+    if cfg.family in ("dense", "vlm"):
+        p["blocks"] = {
+            "ln1": PSpec((cfg.n_layers, d), ("layers", "embed"), "ones"),
+            "attn": L.attn_pspec(cfg),
+            "ln2": PSpec((cfg.n_layers, d), ("layers", "embed"), "ones"),
+            "mlp": L.mlp_pspec(cfg),
+        }
+    elif cfg.family == "moe":
+        p["blocks"] = {
+            "ln1": PSpec((cfg.n_layers, d), ("layers", "embed"), "ones"),
+            "attn": L.attn_pspec(cfg),
+            "ln2": PSpec((cfg.n_layers, d), ("layers", "embed"), "ones"),
+            "moe": L.moe_pspec(cfg),
+        }
+    elif cfg.family == "ssm":
+        p["blocks"] = {
+            "ln": PSpec((cfg.n_layers, d), ("layers", "embed"), "ones"),
+            "mamba": L.mamba_pspec(cfg),
+        }
+    elif cfg.family == "hybrid":
+        p["blocks"] = {
+            "ln": PSpec((cfg.n_layers, d), ("layers", "embed"), "ones"),
+            "mamba": L.mamba_pspec(cfg),
+        }
+        # Zamba2-style shared transformer block over concat(h, embeddings)
+        p["shared"] = {
+            "ln_in": PSpec((2 * d,), ("embed",), "ones"),
+            "attn": L.attn_pspec(cfg, n=0, d_in=2 * d),
+            "ln_mlp": PSpec((d,), ("embed",), "ones"),
+            "mlp": L.mlp_pspec(cfg, n=0),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _positions(b, s, offset=0):
+    return offset + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+def _dense_block(lp, cfg, h, positions, collect_kv=False):
+    a_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+    a_out, kv = L.attn_apply(lp["attn"], cfg, a_in, positions=positions,
+                             window=cfg.swa_window)
+    h = h + a_out
+    m_in = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        m_out, aux = L.moe_apply(lp["moe"], cfg, m_in)
+    else:
+        m_out, aux = L.mlp_apply(lp["mlp"], cfg, m_in), jnp.float32(0)
+    h = h + m_out
+    h = logical_constraint(h, "batch", None, "embed")
+    return h, aux, (kv if collect_kv else None)
+
+
+def _mamba_block(lp, cfg, h, collect_cache=False):
+    m_in = rmsnorm(h, lp["ln"], cfg.norm_eps)
+    out, cache = L.mamba_apply(lp["mamba"], cfg, m_in,
+                               collect_cache=collect_cache)
+    h = h + out
+    return logical_constraint(h, "batch", None, "embed"), cache
+
+
+def _shared_block(sp, cfg, h, emb0, positions, cache=None):
+    """Zamba2 shared attention+MLP; input concat(h, emb0) (B,S,2d)."""
+    cat = jnp.concatenate([h, emb0], axis=-1)
+    a_in = rmsnorm(cat, sp["ln_in"], cfg.norm_eps)
+    if cache is None:
+        a_out, kv = L.attn_apply(sp["attn"], cfg, a_in, positions=positions)
+    else:
+        a_out, kv = L.attn_decode(sp["attn"], cfg, a_in, cache)
+    h = h + a_out
+    m_in = rmsnorm(h, sp["ln_mlp"], cfg.norm_eps)
+    h = h + L.mlp_apply(sp["mlp"], cfg, m_in)
+    return logical_constraint(h, "batch", None, "embed"), kv
+
+
+def _embed_input(params, cfg, batch):
+    """tokens (+ optional stub embeddings) -> (h (B,S,d), emb copy)."""
+    tokens = batch["tokens"]
+    h = embed_tokens(params["embed"], tokens)
+    if cfg.stub_tokens:
+        stub = batch["stub"].astype(h.dtype)              # (B, P, stub_dim)
+        prefix = jnp.einsum("bpe,ed->bpd", stub, params["stub_proj"])
+        h = jnp.concatenate([prefix, h], axis=1)
+    return h
+
+
+def lm_apply(params, cfg: L.ModelConfig, batch, *, collect_cache=False,
+             last_only=False):
+    """Full-sequence forward. Returns (logits, aux, cache-or-None).
+
+    ``last_only`` unembeds just the final position — the serving-prefill
+    path (only the next-token logits are needed), which avoids
+    materialising the (B, S, vocab) logits tensor at 32k prefill."""
+    h = _embed_input(params, cfg, batch)
+    b, s, _ = h.shape
+    positions = _positions(b, s)
+    emb0 = h
+    aux_total = jnp.float32(0)
+    kv_stack = None
+    mamba_cache = None
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            hh, aux = carry
+            hh, a, kv = _dense_block(lp, cfg, hh, positions,
+                                     collect_kv=collect_cache)
+            return (hh, aux + a), kv
+
+        body = _remat(body, cfg.remat_policy)
+        (h, aux_total), kv_stack = jax.lax.scan(body, (h, aux_total),
+                                                params["blocks"])
+    elif cfg.family == "ssm":
+        def body(hh, lp):
+            return _mamba_block(lp, cfg, hh, collect_cache=collect_cache)
+
+        body = _remat(body, cfg.remat_policy)
+        h, mamba_cache = jax.lax.scan(body, h, params["blocks"])
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        shared_kvs, mamba_caches = [], []
+
+        def body(hh, lp):
+            return _mamba_block(lp, cfg, hh, collect_cache=collect_cache)
+
+        body = _remat(body, cfg.remat_policy)
+        for gi in range(n_groups):
+            grp = jax.tree.map(lambda x: x[gi * every:(gi + 1) * every],
+                               params["blocks"])
+            h, mc = jax.lax.scan(body, h, grp)
+            mamba_caches.append(mc)
+            h, kv = _shared_block(params["shared"], cfg, h, emb0, positions)
+            shared_kvs.append(kv)
+        if collect_cache:
+            kv_stack = (
+                jnp.stack([k for k, _ in shared_kvs]),
+                jnp.stack([v for _, v in shared_kvs]),
+            )
+            mamba_cache = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs), *mamba_caches)
+    else:
+        raise ValueError(cfg.family)
+
+    if last_only:
+        h = h[:, -1:]
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(h, head)
+
+    cache = None
+    if collect_cache:
+        cache = _build_cache_from_kv(cfg, kv_stack, b, s)
+        if mamba_cache is not None:
+            cache["mamba"] = mamba_cache
+    return logits, aux_total, cache
+
+
+def lm_loss(params, cfg: L.ModelConfig, batch):
+    logits, aux, _ = lm_apply(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.stub_tokens:                     # loss only over the text tail
+        logits = logits[:, -labels.shape[1]:]
+    loss = cross_entropy(logits, labels)
+    return loss + MOE_AUX_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# caches / decode
+
+
+def _n_cache_layers(cfg):
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.shared_attn_every   # shared-attn uses
+    return cfg.n_layers
+
+
+def lm_cache_pspec(cfg: L.ModelConfig, batch: int, smax: int):
+    cache: dict[str, Any] = {"pos": PSpec((), (), "zeros", jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache["attn"] = L.attn_cache_pspec(cfg, cfg.n_layers, batch, smax)
+        del cache["attn"]["pos"]
+    elif cfg.family == "ssm":
+        cache["mamba"] = L.mamba_cache_pspec(cfg, cfg.n_layers, batch)
+    elif cfg.family == "hybrid":
+        cache["mamba"] = L.mamba_cache_pspec(cfg, cfg.n_layers, batch)
+        cache["attn"] = L.attn_cache_pspec(cfg, _n_cache_layers(cfg), batch,
+                                           smax)
+        del cache["attn"]["pos"]
+    return cache
+
+
+def _build_cache_from_kv(cfg, kv_stack, b, s):
+    """Assemble a decode cache from prefill K/V (prefill path)."""
+    cache: dict[str, Any] = {"pos": jnp.int32(s)}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid") and kv_stack is not None:
+        k, v = kv_stack                                  # (L, B, S, Hkv, Dh)
+        if cfg.swa_window and cfg.swa_window < s:
+            # ring layout: position p lives at slot p % window; the last
+            # `window` positions in natural order need a roll of S % window
+            k = jnp.roll(k[:, :, -cfg.swa_window:], s % cfg.swa_window,
+                         axis=2)
+            v = jnp.roll(v[:, :, -cfg.swa_window:], s % cfg.swa_window,
+                         axis=2)
+        cache["attn"] = {
+            "k": logical_constraint(k, "layers", "batch", "kv_seq",
+                                    "kv_heads", None),
+            "v": logical_constraint(v, "layers", "batch", "kv_seq",
+                                    "kv_heads", None),
+        }
+    return cache
+
+
+def lm_decode(params, cfg: L.ModelConfig, cache, batch):
+    """One decode step. batch {"tokens": (B, 1)} -> (logits, new cache)."""
+    tokens = batch["tokens"]
+    h = embed_tokens(params["embed"], tokens)            # (B, 1, d)
+    b = h.shape[0]
+    pos = cache["pos"]
+    emb0 = h
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def step(hh, xs):
+            lp, kc, vc = xs
+            c = {"k": kc, "v": vc, "pos": pos}
+            a_in = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+            a_out, c = L.attn_decode(lp["attn"], cfg, a_in, c,
+                                     window=cfg.swa_window)
+            hh = hh + a_out
+            m_in = rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                m_out, _ = L.moe_apply(lp["moe"], cfg, m_in)
+            else:
+                m_out = L.mlp_apply(lp["mlp"], cfg, m_in)
+            return hh + m_out, (c["k"], c["v"])
+
+        h, (ks, vs) = jax.lax.scan(
+            step, h, (params["blocks"], cache["attn"]["k"],
+                      cache["attn"]["v"]))
+        new_cache["attn"] = {"k": ks, "v": vs}
+    elif cfg.family == "ssm":
+        def step(hh, xs):
+            lp, conv, state = xs
+            m_in = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            out, c = L.mamba_decode(lp["mamba"], cfg, m_in,
+                                    {"conv": conv, "state": state})
+            return hh + out, (c["conv"], c["state"])
+
+        h, (convs, states) = jax.lax.scan(
+            step, h, (params["blocks"], cache["mamba"]["conv"],
+                      cache["mamba"]["state"]))
+        new_cache["mamba"] = {"conv": convs, "state": states}
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+
+        def step(hh, xs):
+            lp, conv, state = xs
+            m_in = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            out, c = L.mamba_decode(lp["mamba"], cfg, m_in,
+                                    {"conv": conv, "state": state})
+            return hh + out, (c["conv"], c["state"])
+
+        convs, states, ks, vs = [], [], [], []
+        for gi in range(n_groups):
+            sl = slice(gi * every, (gi + 1) * every)
+            grp = jax.tree.map(lambda x: x[sl], params["blocks"])
+            h, (cv, st) = jax.lax.scan(
+                step, h, (grp, cache["mamba"]["conv"][sl],
+                          cache["mamba"]["state"][sl]))
+            c = {"k": cache["attn"]["k"][gi], "v": cache["attn"]["v"][gi],
+                 "pos": pos}
+            h, c = _shared_decode(params["shared"], cfg, h, emb0, c)
+            convs.append(cv); states.append(st)
+            ks.append(c["k"]); vs.append(c["v"])
+        new_cache["mamba"] = {"conv": jnp.concatenate(convs),
+                              "state": jnp.concatenate(states)}
+        new_cache["attn"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    new_cache["pos"] = pos + 1
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(h, head), new_cache
+
+
+def _shared_decode(sp, cfg, h, emb0, cache):
+    cat = jnp.concatenate([h, emb0], axis=-1)
+    a_in = rmsnorm(cat, sp["ln_in"], cfg.norm_eps)
+    a_out, cache = L.attn_decode(sp["attn"], cfg, a_in, cache)
+    h = h + a_out
+    m_in = rmsnorm(h, sp["ln_mlp"], cfg.norm_eps)
+    h = h + L.mlp_apply(sp["mlp"], cfg, m_in)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# bundle
+
+
+def build_lm(cfg: L.ModelConfig) -> Bundle:
+    pspec = lm_pspec(cfg)
+
+    def loss(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def prefill(params, batch):
+        logits, _, cache = lm_apply(params, cfg, batch, collect_cache=True)
+        return logits, cache
+
+    def prefill_last(params, batch):
+        logits, _, cache = lm_apply(params, cfg, batch, collect_cache=True,
+                                    last_only=True)
+        return logits, cache
+
+    def decode(params, cache, batch):
+        return lm_decode(params, cfg, cache, batch)
+
+    def cache_pspec(batch: int, smax: int):
+        return lm_cache_pspec(cfg, batch, smax)
+
+    from repro.models.common import count_pspec_params
+
+    n = count_pspec_params(pspec)
+    n_active = n
+    if cfg.family == "moe":
+        moe_total = count_pspec_params(pspec["blocks"]["moe"])
+        per_expert = moe_total // cfg.n_experts
+        n_active = n - moe_total + per_expert * cfg.experts_per_tok \
+            + count_pspec_params(pspec["blocks"]["moe"]["router"])
+    return Bundle(cfg=cfg, params_pspec=pspec, loss=loss, prefill=prefill,
+                  decode=decode, cache_pspec=cache_pspec, n_params=n,
+                  n_active_params=n_active, prefill_last=prefill_last)

@@ -1,0 +1,150 @@
+"""Memory-bounded attention in pure XLA (the dry-run / CPU path).
+
+Same blocked online-softmax computation as kernels/flash_attention.py, but
+expressed with ``lax.scan`` so it lowers on any backend and shards under
+GSPMD (batch over data, heads over model). Used by every model for training
+and prefill; the Pallas kernel takes over on real TPUs.
+
+GQA is computed in grouped layout (B, Hkv, rep, ...) — no repeated-KV
+materialisation. Sliding-window attention slices the KV window per q-chunk
+(flops proportional to the window, not the full sequence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(-1e30)
+
+
+def _group(q, hkv):
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "q_chunk",
+                              "kv_chunk"),
+)
+def chunked_attention(
+    q: jax.Array,   # (B, Sq, Hq, D)
+    k: jax.Array,   # (B, Sk, Hkv, D)
+    v: jax.Array,   # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_chunk: int = 256,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    offs = sk - sq  # align sequence ends
+    q_chunk = min(q_chunk, sq)
+    nq = sq // q_chunk
+
+    qg = _group(q, hkv)                                   # (B,Sq,Hkv,rep,D)
+    qc = qg.reshape(b, nq, q_chunk, hkv, rep, d)
+    qc = jnp.moveaxis(qc, 1, 0)                           # (nq,B,Cq,Hkv,rep,D)
+
+    if window is not None and window < sk:
+        # SWA: per q-chunk, slice kv to [qlo-window, qlo+Cq) (padded front)
+        wlen = window + q_chunk
+        kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+        def q_step(_, iq):
+            qi = qc[iq].astype(jnp.float32)               # (B,Cq,Hkv,rep,D)
+            qlo = iq * q_chunk + offs
+            ks = jax.lax.dynamic_slice_in_dim(kp, qlo, wlen, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, qlo, wlen, axis=1)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qi,
+                           ks.astype(jnp.float32)) * sc
+            qpos = qlo + jnp.arange(q_chunk)[:, None]
+            kpos = qlo - window + jnp.arange(wlen)[None, :]
+            mask = (kpos <= qpos) & (kpos > qpos - window) & (kpos >= 0)
+            s = jnp.where(mask, s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhrqk,bkhd->bqhrd", p, vs.astype(jnp.float32))
+            return None, o
+
+        _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+    else:
+        nk = max(sk // kv_chunk, 1)
+        ck = sk // nk
+        kc = jnp.moveaxis(k.reshape(b, nk, ck, hkv, d), 1, 0)
+        vc = jnp.moveaxis(v.reshape(b, nk, ck, hkv, d), 1, 0)
+
+        def q_step(_, iq):
+            qi = qc[iq].astype(jnp.float32)               # (B,Cq,Hkv,rep,D)
+            qlo = iq * q_chunk + offs
+
+            def kv_step(carry, jk):
+                m, l, acc = carry
+                ks = kc[jk].astype(jnp.float32)           # (B,Ck,Hkv,D)
+                vs = vc[jk].astype(jnp.float32)
+                s = jnp.einsum("bqhrd,bkhd->bhrqk", qi, ks) * sc
+                qpos = qlo + jnp.arange(q_chunk)[:, None]
+                kpos = jk * ck + jnp.arange(ck)[None, :]
+                mask = jnp.ones((q_chunk, ck), jnp.bool_)
+                if causal:
+                    mask = mask & (kpos <= qpos)
+                s = jnp.where(mask, s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                # rowsum(p) in matmul form (p @ 1) — the paper's P-matrix
+                # reduction; on TPU this rides the MXU with the s/p dots
+                psum = jax.lax.dot_general(
+                    p, jnp.ones((ck,), jnp.float32),
+                    (((p.ndim - 1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                l_new = corr * l + psum
+                acc_new = corr[..., None] * acc + jnp.einsum(
+                    "bhrqk,bkhd->bhrqd", p, vs)
+                return (m_new, l_new, acc_new), None
+
+            m0 = jnp.full((b, hkv, rep, q_chunk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, hkv, rep, q_chunk), jnp.float32)
+            a0 = jnp.zeros((b, hkv, rep, q_chunk, d), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+            l = jnp.where(l > 0, l, 1.0)
+            o = acc / l[..., None]                        # (B,Hkv,rep,Cq,D)
+            return None, jnp.moveaxis(o, 3, 1)            # (B,Cq,Hkv,rep,D)
+
+        _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+
+    out = jnp.moveaxis(out, 0, 1)                         # (B,nq,Cq,Hkv,rep,D)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, Hq, D)
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, D)
+    cur_len: jax.Array,  # () int32 — number of valid cache positions
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    b, s, hkv, d = k_cache.shape
+    hq = q.shape[2]
+    rep = hq // hkv
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, 1, hkv, rep, d).astype(jnp.float32)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg,
+                        k_cache.astype(jnp.float32)) * sc
+    kpos = jnp.arange(s)[None, None, None, None, :]
+    valid = kpos < cur_len
+    if window is not None:
+        valid = valid & (kpos >= cur_len - window)
+    logits = jnp.where(valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)

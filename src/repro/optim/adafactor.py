@@ -1,0 +1,80 @@
+"""Adafactor (factored second moment) for the ≥300B configs.
+
+Memory per param: 4B (f32 canonical) + 2B (bf16 momentum) + ~0 (factored v)
+vs AdamW's 12B — the difference between grok-1-314b fitting 256x16 GB and
+not (DESIGN §5 and the napkin math in EXPERIMENTS §Dry-run).
+
+Factoring follows Shazeer & Stern: for a leaf (..., n, m) keep row/col
+second-moment EMAs (..., n) and (..., m); 0/1-D leaves keep a full v.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptConfig, global_norm, lr_at
+
+
+def init_adafactor_state(params, cfg: OptConfig):
+    def factor(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.state_dtype),
+                          params),
+        "v": jax.tree.map(factor, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, opt_state, params, cfg: OptConfig):
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b2 = cfg.b2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = b2 * v["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * v["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.mean(vr, axis=-1, keepdims=True)[..., None] + cfg.eps)
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            vfull = b2 * v["v"] + (1 - b2) * g2
+            denom = jnp.sqrt(vfull) + cfg.eps
+            v_new = {"v": vfull}
+        u = g / denom
+        # RMS update clipping (Adafactor §7) then bf16 momentum
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u
+        p_new = p - lr * (m_new + cfg.weight_decay * p)
+        return p_new, m_new.astype(cfg.state_dtype), v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    vt = jax.tree.structure(params)
+    flat_v = vt.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        {"m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+         "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+         "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

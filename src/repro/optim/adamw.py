@@ -1,0 +1,86 @@
+"""AdamW with configurable moment dtypes + warmup-cosine schedule.
+
+Self-contained (no optax). Canonical params are f32; the ≥100B configs run
+bf16 first/second moments (DESIGN §5) to fit 256x16 GB under ZeRO-3. The
+global-norm clip reduction runs through the paper's matmul-form reduce
+(``repro.core.tcu_reduce``) — a Σx² that XLA places on the MXU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reduce import tcu_reduce
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32     # m/v dtype (bf16 for ≥100B archs)
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    """sqrt(Σ Σx²) with per-leaf Σx² in matmul form (paper's reduction)."""
+    sq = [tcu_reduce(jnp.square(g.astype(jnp.float32)))
+          for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(sq)))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    """-> (new_params, new_opt_state, metrics). params/grads f32."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        p_new = p - lr * (update + cfg.weight_decay * p)
+        return p_new, m_new.astype(cfg.state_dtype), v_new.astype(cfg.state_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

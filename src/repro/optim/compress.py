@@ -1,0 +1,35 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+bf16 compression with stochastic rounding + per-leaf error feedback: the
+pod-level gradient all-reduce (slow DCN link between pods) moves half the
+bytes; the quantisation error is carried to the next step so the expected
+update is unbiased. Off by default; enabled per-config for multi-pod runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stochastic_round_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
+    """f32 -> bf16 with stochastic rounding (unbiased)."""
+    xi = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.randint(key, x.shape, 0, 1 << 16, jnp.uint32)
+    rounded = (xi + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32).astype(
+        jnp.bfloat16)
+
+
+def compress_grads(grads, error_buf, key):
+    """-> (bf16 grads to all-reduce, new error buffer)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    ebuf = jax.tree.leaves(error_buf) if error_buf is not None \
+        else [jnp.zeros_like(l) for l in leaves]
+    keys = jax.random.split(key, len(leaves))
+    comp, errs = [], []
+    for g, e, k in zip(leaves, ebuf, keys):
+        corrected = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q = stochastic_round_bf16(corrected, k)
+        comp.append(q)
+        errs.append((corrected - q.astype(jnp.float32)).astype(g.dtype))
+    return jax.tree.unflatten(treedef, comp), jax.tree.unflatten(treedef, errs)

@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    Rules,
+    current_rules,
+    logical_constraint,
+    set_rules,
+    spec_for,
+    use_rules,
+)
+
+__all__ = [
+    "Rules",
+    "current_rules",
+    "logical_constraint",
+    "set_rules",
+    "spec_for",
+    "use_rules",
+]

@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules (GSPMD NamedSharding flavoured).
+
+Every parameter / activation dimension carries a *logical* name; a ``Rules``
+table maps logical names to mesh axes. The same model code then runs
+
+  * unsharded on the CPU smoke-test path (empty rules),
+  * TP+DP on the single-pod ``(data=16, model=16)`` mesh,
+  * TP+DP+pod-DP on the multi-pod ``(pod=2, data=16, model=16)`` mesh,
+
+by swapping rule tables only. Divisibility is checked against concrete dim
+sizes: a logical rule that does not divide the dimension degrades to
+replication (how 4-or-8 kv-head / 8-expert archs live on a 16-way model
+axis, see DESIGN §5).
+
+FSDP (ZeRO-3): when ``rules.fsdp`` is set, parameters additionally shard
+their largest not-yet-sharded dimension over the data axis; XLA inserts the
+per-layer all-gather (fwd) / reduce-scatter (bwd) this implies.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical-name -> mesh-axis (or tuple of axes) mapping."""
+
+    table: Mapping[str, str | tuple[str, ...] | None] = dataclasses.field(
+        default_factory=dict
+    )
+    # shard params' largest free dim over this axis (ZeRO-3); None = off
+    fsdp: str | None = None
+    # mesh axis sizes, used for divisibility checks
+    axis_sizes: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    def axes_for(self, name: str):
+        return self.table.get(name)
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return self.axis_sizes.get(axes, 1)
+        size = 1
+        for a in axes:
+            size *= self.axis_sizes.get(a, 1)
+        return size
+
+
+# ---------------------------------------------------------------------------
+# active rules (thread-local so tests can nest)
+
+_state = threading.local()
+
+
+def set_rules(rules: Rules | None) -> None:
+    _state.rules = rules
+
+
+def current_rules() -> Rules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None):
+    prev = current_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+# ---------------------------------------------------------------------------
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[str | None],
+    *,
+    rules: Rules | None = None,
+    fsdp_ok: bool = False,
+) -> P:
+    """Build a PartitionSpec for ``shape`` from logical dim names.
+
+    Rules that do not divide the concrete dim are dropped (replicated).
+    With ``fsdp_ok`` and ``rules.fsdp``, the largest still-unsharded dim
+    that the fsdp axis divides is additionally sharded over it.
+    """
+    rules = rules if rules is not None else current_rules()
+    if rules is None:
+        return P(*([None] * len(shape)))
+    assert len(shape) == len(logical), (shape, logical)
+    out: list = []
+    used_axes: set[str] = set()
+    for dim, name in zip(shape, logical):
+        axes = rules.axes_for(name) if name else None
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax_tuple = tuple(a for a in ax_tuple if a not in used_axes)
+        size = rules.axis_size(ax_tuple)
+        if size > 1 and dim % size == 0:
+            out.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+            used_axes.update(ax_tuple)
+        else:
+            out.append(None)
+    if fsdp_ok and rules.fsdp and rules.fsdp not in used_axes:
+        fs = rules.axis_sizes.get(rules.fsdp, 1)
+        if fs > 1:
+            # largest unsharded dim divisible by the fsdp axis
+            cands = [
+                (dim, i) for i, (dim, s) in enumerate(zip(shape, out))
+                if s is None and dim % fs == 0
+            ]
+            if cands:
+                _, i = max(cands)
+                out[i] = rules.fsdp
+    return P(*out)
+
+
+def logical_constraint(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op without rules/mesh."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = spec_for(x.shape, logical, rules=rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        return x
+
+
+def param_sharding_tree(shapes_tree, logical_tree, mesh, rules: Rules):
+    """Map (ShapeDtypeStruct tree, logical tree) -> NamedSharding tree."""
+    from jax.sharding import NamedSharding
+
+    def one(sds, logical):
+        spec = spec_for(sds.shape, logical, rules=rules, fsdp_ok=True)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, shapes_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(i, (str, type(None))) for i in x))
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))

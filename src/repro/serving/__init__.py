@@ -1,0 +1,10 @@
+from repro.serving.engine import (
+    Request,
+    Result,
+    ServeConfig,
+    ServingEngine,
+    demo_engine,
+)
+
+__all__ = ["Request", "Result", "ServeConfig", "ServingEngine",
+           "demo_engine"]

@@ -1,0 +1,154 @@
+"""Batched serving engine: wave-batched prefill + batched greedy/sampled
+decode over a fixed slot grid.
+
+Design (TPU-adapted):
+  * a fixed number of decode *slots* (the jit'd prefill/decode steps each
+    have one static shape — no recompile churn);
+  * requests are admitted in waves of up to ``slots``; prompts are
+    left-padded to the wave's prompt length so the whole wave shares the
+    cache position counter (the cache pytree carries one scalar ``pos``);
+  * every engine tick decodes all live slots in one batched call — the TCU
+    reduce/scan primitives inside the model (softmax, RMSNorm, SSD) do the
+    per-token math;
+  * finished sequences are masked (their sampled tokens ignored) until the
+    wave retires.
+
+For the multi-chip case the cache pytree is sharded with the same logical
+rules as the dry-run decode cells; the engine code is sharding-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import init_params
+from repro.models.lm import Bundle
+from repro.training.train_lib import make_serve_step
+
+_SEQ_CACHE_KEYS = ("k", "v", "self_k", "self_v")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4                  # concurrent sequences (static batch)
+    max_new: int = 32               # decode budget per wave
+    eos_token: int = 2
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: list                    # generated ids (up to EOS)
+    prompt_len: int
+
+
+def _pad_cache_seq(cache, extra: int):
+    """Grow the sequence axis of every KV leaf by ``extra`` slots."""
+    def pad(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        if name in _SEQ_CACHE_KEYS and hasattr(leaf, "ndim") and \
+                leaf.ndim >= 3:
+            pw = [(0, 0)] * leaf.ndim
+            pw[2] = (0, extra)      # (L, B, S, H, D): S is axis 2
+            return jnp.pad(leaf, pw)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+class ServingEngine:
+    """Wave-batched engine over a Bundle: ``run(requests)`` drains a list,
+    ``serve_wave`` handles one admitted wave."""
+
+    def __init__(self, bundle: Bundle, params, cfg: ServeConfig):
+        self.bundle = bundle
+        self.cfg = cfg
+        self.params = params
+        prefill, decode = make_serve_step(bundle)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+        self._rng = jax.random.PRNGKey(0)
+        self.queue: deque[Request] = deque()
+        self.results: list[Result] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.cfg.greedy:
+            return np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self._rng, sub = jax.random.split(self._rng)
+        return np.asarray(jax.random.categorical(
+            sub, logits[:, -1] / self.cfg.temperature))
+
+    def serve_wave(self, wave: list[Request]) -> list[Result]:
+        nb = self.cfg.slots
+        plen = max(len(r.prompt) for r in wave)
+        tokens = np.zeros((nb, plen), np.int32)
+        for i, r in enumerate(wave):                # left-pad prompts
+            tokens[i, plen - len(r.prompt):] = r.prompt
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(tokens)})
+        cache = _pad_cache_seq(cache, self.cfg.max_new)
+        nxt = self._sample(logits)
+
+        out = [[int(nxt[i])] for i in range(nb)]
+        done = np.array([int(nxt[i]) == self.cfg.eos_token
+                         for i in range(nb)])
+        for _ in range(self.cfg.max_new - 1):
+            if done[:len(wave)].all():
+                break
+            step_tok = jnp.asarray(nxt.reshape(nb, 1), jnp.int32)
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": step_tok})
+            nxt = self._sample(logits)
+            for i in range(nb):
+                if not done[i]:
+                    out[i].append(int(nxt[i]))
+                    done[i] |= int(nxt[i]) == self.cfg.eos_token
+        results = []
+        for i, r in enumerate(wave):
+            toks = out[i]
+            if self.cfg.eos_token in toks:
+                toks = toks[:toks.index(self.cfg.eos_token)]
+            results.append(Result(uid=r.uid, tokens=toks,
+                                  prompt_len=len(r.prompt)))
+        return results
+
+    def run(self, requests: list[Request]) -> list[Result]:
+        for r in requests:
+            self.submit(r)
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.cfg.slots, len(self.queue)))]
+            while len(wave) < self.cfg.slots:   # pad wave with dummies
+                wave.append(wave[-1])
+            uids = set()
+            res = []
+            for r in self.serve_wave(wave):
+                if r.uid not in uids:
+                    uids.add(r.uid)
+                    res.append(r)
+            self.results.extend(res)
+        return sorted(self.results, key=lambda r: r.uid)
+
+
+def demo_engine(bundle: Bundle, *, slots: int = 4, max_new: int = 16,
+                seed: int = 0) -> ServingEngine:
+    params = init_params(jax.random.PRNGKey(seed), bundle.params_pspec,
+                         bundle.cfg.dtype)
+    return ServingEngine(bundle, params, ServeConfig(slots=slots,
+                                                     max_new=max_new))

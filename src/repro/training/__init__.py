@@ -1,0 +1,15 @@
+from repro.training.train_lib import (
+    TrainConfig,
+    init_train_state,
+    make_serve_step,
+    make_train_step,
+    train_state_pspecs,
+)
+
+__all__ = [
+    "TrainConfig",
+    "init_train_state",
+    "make_serve_step",
+    "make_train_step",
+    "train_state_pspecs",
+]

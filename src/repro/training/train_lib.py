@@ -1,0 +1,204 @@
+"""Training step construction: mixed precision, grad accumulation, ZeRO.
+
+State layout (a pytree the dry-run lowers and the checkpointer saves):
+
+    {"params": f32 master weights, "opt": {"m","v","step"}, "rng": key}
+
+Mixed precision: master params are f32; the loss casts to the model compute
+dtype (bf16 on TPU) at step entry, so grads flow f32 <- bf16 automatically.
+Under ZeRO-3 rules the cast copy is what gets all-gathered per layer — bf16
+bytes on the wire, half the f32 cost (this is the standard
+reduce-scatter/all-gather decomposition; XLA inserts it from the shardings).
+
+Gradient accumulation: ``microbatches > 1`` splits the per-step batch on the
+leading axis and folds the grads with a ``lax.scan`` — memory for one
+microbatch's activations only, identical numerics (mean of means).
+
+Gradient compression: with ``compress_grads=True`` the f32 grads are passed
+through bf16 stochastic rounding with an error-feedback buffer carried in
+the state (optim/compress.py) before the optimizer — the cross-pod DCN
+all-reduce then moves half the bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_params, partition_specs, shape_structs
+from repro.models.lm import Bundle
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.optim.adafactor import adafactor_update, init_adafactor_state
+from repro.optim.compress import compress_grads as _compress
+from repro.parallel.sharding import spec_for
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    optimizer: str = "adamw"           # adamw | adafactor
+    param_dtype: Any = jnp.float32     # master weight dtype
+    compress_grads: bool = False       # bf16 + error feedback (pod all-reduce)
+
+
+# ---------------------------------------------------------------------------
+# state
+
+
+def init_train_state(rng: jax.Array, bundle: Bundle, opt_cfg: OptConfig,
+                     train_cfg: TrainConfig = TrainConfig()):
+    params = init_params(rng, bundle.params_pspec, train_cfg.param_dtype)
+    if train_cfg.optimizer == "adafactor":
+        opt = init_adafactor_state(params, opt_cfg)
+    else:
+        opt = init_opt_state(params, opt_cfg)
+    state = {"params": params, "opt": opt,
+             "rng": jax.random.PRNGKey(17)}
+    if train_cfg.compress_grads:
+        state["err"] = jax.tree.map(jnp.zeros_like, params)
+    return state
+
+
+def state_shape_structs(bundle: Bundle, opt_cfg: OptConfig,
+                        train_cfg: TrainConfig = TrainConfig()):
+    """ShapeDtypeStruct tree of the train state (dry-run: no allocation)."""
+    params = shape_structs(bundle.params_pspec, train_cfg.param_dtype)
+    sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    if train_cfg.optimizer == "adafactor":
+        def factor(p):
+            if len(p.shape) >= 2:
+                return {"vr": sds(p.shape[:-1], jnp.float32),
+                        "vc": sds(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": sds(p.shape, jnp.float32)}
+
+        opt = {"m": jax.tree.map(lambda p: sds(p.shape, opt_cfg.state_dtype),
+                                 params),
+               "v": jax.tree.map(factor, params),
+               "step": sds((), jnp.int32)}
+    else:
+        zl = lambda p: sds(p.shape, opt_cfg.state_dtype)
+        opt = {"m": jax.tree.map(zl, params),
+               "v": jax.tree.map(zl, params),
+               "step": sds((), jnp.int32)}
+    state = {"params": params, "opt": opt,
+             "rng": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+    if train_cfg.compress_grads:
+        state["err"] = jax.tree.map(lambda p: sds(p.shape, p.dtype), params)
+    return state
+
+
+def train_state_pspecs(bundle: Bundle, rules,
+                       train_cfg: TrainConfig = TrainConfig()):
+    """PartitionSpec tree matching ``init_train_state``'s output.
+
+    Optimizer moments shard exactly like their parameters (ZeRO); adafactor's
+    factored second moments drop the spec entry of the reduced dim.
+    """
+    p_specs = partition_specs(bundle.params_pspec, rules=rules, fsdp_ok=True)
+    from repro.models.common import PSpec, is_pspec
+
+    if train_cfg.optimizer == "adafactor":
+        def factor_spec(ps: PSpec):
+            full = spec_for(ps.shape, ps.logical, rules=rules, fsdp_ok=True)
+            if len(ps.shape) >= 2:
+                return {"vr": jax.sharding.PartitionSpec(*full[:-1]),
+                        "vc": jax.sharding.PartitionSpec(
+                            *(full[:-2] + full[-1:]))}
+            return {"v": full}
+
+        v_specs = jax.tree.map(factor_spec, bundle.params_pspec,
+                               is_leaf=is_pspec)
+    else:
+        v_specs = p_specs
+    opt = {"m": p_specs, "v": v_specs,
+           "step": jax.sharding.PartitionSpec()}
+    specs = {"params": p_specs, "opt": opt,
+             "rng": jax.sharding.PartitionSpec()}
+    if train_cfg.compress_grads:
+        specs["err"] = p_specs
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# steps
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+def make_train_step(bundle: Bundle, opt_cfg: OptConfig,
+                    train_cfg: TrainConfig = TrainConfig()) -> Callable:
+    """-> step(state, batch) -> (state, metrics). Pure; jit at the call
+    site with in/out shardings (GSPMD inserts every collective)."""
+    compute_dtype = bundle.cfg.dtype
+    nmb = train_cfg.microbatches
+
+    def loss_fn(params_f32, batch):
+        params = _cast_tree(params_f32, compute_dtype)
+        return bundle.loss(params, batch)
+
+    def grads_of(params, batch):
+        if nmb == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            return x.reshape(nmb, x.shape[0] // nmb, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, g_acc, g)), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), g0), mbs)
+        inv = 1.0 / nmb
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        new_state = dict(state)
+        if train_cfg.compress_grads:
+            key, sub = jax.random.split(state["rng"])
+            grads, err = _compress(grads, state.get("err"), sub)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            new_state["err"] = err
+            new_state["rng"] = key
+        if train_cfg.optimizer == "adafactor":
+            p, opt, metrics = adafactor_update(
+                grads, state["opt"], state["params"], opt_cfg)
+        else:
+            p, opt, metrics = adamw_update(
+                grads, state["opt"], state["params"], opt_cfg)
+        new_state["params"] = p
+        new_state["opt"] = opt
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return step
+
+
+def make_serve_step(bundle: Bundle) -> tuple[Callable, Callable]:
+    """-> (prefill_step, decode_step); params cast to compute dtype inside
+    (serving states store bf16 params directly, so the cast is a no-op).
+
+    Serving only consumes the final position's logits, so the prefill uses
+    the ``prefill_last`` variant when the model provides one — at 32k
+    prefill this avoids the (B, S, vocab) logits buffer entirely."""
+    compute_dtype = bundle.cfg.dtype
+    prefill_fn = bundle.prefill_last or bundle.prefill
+
+    def prefill_step(params, batch):
+        return prefill_fn(_cast_tree(params, compute_dtype), batch)
+
+    def decode_step(params, cache, batch):
+        return bundle.decode(_cast_tree(params, compute_dtype), cache, batch)
+
+    return prefill_step, decode_step

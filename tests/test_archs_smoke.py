@@ -1,0 +1,170 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train-step on CPU, asserting output shapes and no NaNs — plus prefill/decode
+consistency (the decode path must reproduce the full forward logits)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.common import SMOKE_BATCH, SMOKE_SEQ, smoke_batch
+from repro.models import build
+from repro.models.common import init_params
+from repro.optim import OptConfig
+from repro.training import TrainConfig, init_train_state, make_train_step
+
+ALL_ARCHS = configs.all_arch_ids()
+
+
+def _setup(arch):
+    mod = configs.get(arch)
+    cfg = mod.SMOKE
+    bundle = build(cfg)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         cfg.dtype)
+    return cfg, bundle, params
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_loss_finite(arch):
+    cfg, bundle, params = _setup(arch)
+    loss = bundle.loss(params, smoke_batch(cfg))
+    assert np.isfinite(float(loss)), arch
+    assert 3.0 < float(loss) < 8.0              # ~ln(vocab) at init
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    mod = configs.get(arch)
+    cfg = mod.SMOKE
+    bundle = build(cfg)
+    opt_cfg = OptConfig(peak_lr=1e-3, warmup_steps=1, decay_steps=10)
+    state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg)
+    step = jax.jit(make_train_step(bundle, opt_cfg))
+    batch = smoke_batch(cfg)
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"])   # same batch twice learns
+    assert np.isfinite(float(m1["grad_norm"]))
+    flat = jax.tree.leaves(state["params"])
+    assert all(bool(jnp.all(jnp.isfinite(p))) for p in flat)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_prefill_shapes(arch):
+    cfg, bundle, params = _setup(arch)
+    batch = {k: v for k, v in smoke_batch(cfg).items() if k != "labels"}
+    logits, cache = bundle.prefill(params, batch)
+    assert logits.shape[0] == SMOKE_BATCH
+    assert logits.shape[-1] == cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert cache is not None
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg, bundle, params = _setup(arch)
+    batch = {k: v for k, v in smoke_batch(cfg).items() if k != "labels"}
+    logits, cache = bundle.prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    logits2, cache2 = bundle.decode(params, cache, {"tokens": tok})
+    assert logits2.shape == (SMOKE_BATCH, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-1.3b",
+                                  "internlm2-20b", "zamba2-2.7b"])
+def test_decode_consistent_with_full_forward(arch):
+    """Teacher-forcing check: decoding token t+1 against the prefill cache
+    must match the full forward over t+1 tokens at the last position."""
+    cfg, bundle, params = _setup(arch)
+    rng = jax.random.PRNGKey(42)
+    t = 16
+    tokens = jax.random.randint(rng, (2, t + 3), 0, cfg.vocab)
+
+    logits_full, _ = bundle.prefill(params, {"tokens": tokens})
+    _, cache = bundle.prefill(params, {"tokens": tokens[:, :t]})
+    from repro.serving.engine import _pad_cache_seq
+
+    cache = _pad_cache_seq(cache, 3)      # decode needs cache headroom
+    for i in range(3):
+        step_logits, cache = bundle.decode(
+            params, cache, {"tokens": tokens[:, t + i:t + i + 1]})
+        want = logits_full[:, t + i]
+        got = step_logits[:, 0]
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs must carry the exact published numbers."""
+    expect = {
+        "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32,
+                            d_ff=10240, vocab=32000, ssm_state=64),
+        "qwen3-moe-235b-a22b": dict(n_layers=94, d_model=4096, n_heads=64,
+                                    n_kv_heads=4, moe_d_ff=1536,
+                                    vocab=151936, n_experts=128,
+                                    experts_per_tok=8),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48,
+                            n_kv_heads=8, moe_d_ff=32768, vocab=131072,
+                            n_experts=8, experts_per_tok=2),
+        "internvl2-76b": dict(n_layers=80, d_model=8192, n_heads=64,
+                              n_kv_heads=8, d_ff=28672, vocab=128256),
+        "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32,
+                            n_kv_heads=8, d_ff=8192, vocab=128256),
+        "internlm2-20b": dict(n_layers=48, d_model=6144, n_heads=48,
+                              n_kv_heads=8, d_ff=16384, vocab=92544),
+        "deepseek-67b": dict(n_layers=95, d_model=8192, n_heads=64,
+                             n_kv_heads=8, d_ff=22016, vocab=102400),
+        "h2o-danube-3-4b": dict(n_layers=24, d_model=3840, n_heads=32,
+                                n_kv_heads=8, d_ff=10240, vocab=32000),
+        "mamba2-1.3b": dict(n_layers=48, d_model=2048, vocab=50280,
+                            ssm_state=128),
+        "seamless-m4t-medium": dict(n_layers=12, enc_layers=12,
+                                    d_model=1024, n_heads=16,
+                                    n_kv_heads=16, d_ff=4096, vocab=256206),
+    }
+    for arch, fields in expect.items():
+        cfg = configs.get(arch).FULL
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_all_archs_have_all_shape_cells():
+    """Every arch either runs or explicitly skips each of the 4 shapes."""
+    from repro.configs.common import SHAPE_TABLE
+
+    for arch in ALL_ARCHS:
+        mod = configs.get(arch)
+        for shape in SHAPE_TABLE:
+            assert shape in mod.SHAPES or shape in mod.SKIPS, (arch, shape)
+
+
+def test_moe_identical_experts_equals_dense():
+    """With every expert holding the same weights and ample capacity, MoE
+    output must equal the plain SwiGLU MLP — routing becomes irrelevant."""
+    from repro.models import layers as L
+    from repro.models.common import swiglu
+
+    cfg = configs.get("qwen3-moe-235b-a22b").SMOKE
+    cfg = L.ModelConfig(**{**cfg.__dict__, "capacity_factor": 8.0})
+    key = jax.random.PRNGKey(0)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    w_in = jax.random.normal(key, (d, f)) / np.sqrt(d)
+    w_gate = jax.random.normal(jax.random.fold_in(key, 1), (d, f)) / np.sqrt(d)
+    w_out = jax.random.normal(jax.random.fold_in(key, 2), (f, d)) / np.sqrt(f)
+    p = {
+        "router": jax.random.normal(jax.random.fold_in(key, 3), (d, e)),
+        "w_in": jnp.broadcast_to(w_in, (e, d, f)),
+        "w_gate": jnp.broadcast_to(w_gate, (e, d, f)),
+        "w_out": jnp.broadcast_to(w_out, (e, f, d)),
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 4), (2, 8, d))
+    got, aux = L.moe_apply(p, cfg, x)
+    want = swiglu(x, w_in, w_gate, w_out)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    assert np.isfinite(float(aux))

@@ -1,0 +1,284 @@
+"""Unit + property tests for the paper's matmul-form algebra (repro.core)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    l_matrix,
+    p_matrix,
+    segsum,
+    strict_u_matrix,
+    tcu_reduce,
+    tcu_scan,
+    tcu_segmented_reduce,
+    tcu_weighted_scan,
+    u_matrix,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# constructor identities (the paper's P/U/L definitions)
+
+
+@pytest.mark.parametrize("t", [4, 16, 128])
+def test_p_matrix_reduces_columns(t):
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(t, t)).astype(np.float32)
+    v = np.asarray(p_matrix(t)) @ a
+    np.testing.assert_allclose(v[0], a.sum(axis=0), rtol=1e-5)
+    assert np.all(v[1:] == 0)
+
+
+@pytest.mark.parametrize("t", [4, 16, 128])
+def test_u_matrix_row_scan(t):
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(t, t)).astype(np.float32)
+    np.testing.assert_allclose(a @ np.asarray(u_matrix(t)),
+                               np.cumsum(a, axis=1), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("t", [4, 16, 128])
+def test_l_matrix_exclusive_column_scan(t):
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=(t, t)).astype(np.float32)
+    la = np.asarray(l_matrix(t)) @ a
+    expected = np.cumsum(a, axis=0) - a          # exclusive scan of columns
+    np.testing.assert_allclose(la, expected, rtol=1e-4, atol=1e-4)
+
+
+def test_paper_scan_identity_16():
+    """Scan(A) = A U + (L A) 1 — the paper's Section 5 identity, verbatim."""
+    t = 16
+    rng = np.random.default_rng(3)
+    v = rng.normal(size=(t * t,)).astype(np.float32)
+    a = v.reshape(t, t)
+    u = np.asarray(u_matrix(t))
+    low = np.asarray(l_matrix(t))
+    ones = np.ones((t, t), np.float32)
+    scan = a @ u + (low @ a) @ ones
+    np.testing.assert_allclose(scan.reshape(-1), np.cumsum(v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_strict_u_exclusive():
+    t = 16
+    a = np.arange(t * t, dtype=np.float32).reshape(t, t)
+    np.testing.assert_allclose(
+        a @ np.asarray(strict_u_matrix(t)),
+        np.cumsum(a, axis=1) - a, rtol=1e-5)
+
+
+def test_segsum_degenerates_to_tril():
+    t = 8
+    m = np.exp(np.asarray(segsum(jnp.zeros((t,)))))
+    np.testing.assert_allclose(m, np.tril(np.ones((t, t))), atol=1e-6)
+
+
+def test_segsum_weighted_products():
+    la = np.log(np.array([0.5, 0.25, 0.5, 1.0], np.float32))
+    m = np.exp(np.asarray(segsum(jnp.asarray(la))))
+    # M[i, j] = prod a[j+1..i]
+    assert np.isclose(m[2, 0], 0.25 * 0.5)
+    assert np.isclose(m[3, 1], 0.5 * 1.0)
+    assert np.isclose(m[1, 1], 1.0)
+    assert m[0, 2] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# reduction
+
+
+@pytest.mark.parametrize("formulation", ["fused", "tile"])
+@pytest.mark.parametrize("n", [1, 7, 128, 200, 16384, 40000])
+def test_reduce_sizes(formulation, n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    got = tcu_reduce(x, formulation=formulation)
+    np.testing.assert_allclose(got, np.sum(np.asarray(x), dtype=np.float64),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_reduce_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)).astype(dtype)
+    got = tcu_reduce(x)
+    assert got.dtype == jnp.float32            # f32 accumulation contract
+    np.testing.assert_allclose(
+        got, np.sum(np.asarray(x, np.float32)), rtol=2e-2, atol=0.5)
+
+
+@pytest.mark.parametrize("formulation", ["fused", "tile"])
+def test_segmented_reduce_batched(formulation):
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 5, 700))
+    got = tcu_segmented_reduce(x, formulation=formulation)
+    np.testing.assert_allclose(got, np.asarray(x).sum(-1), rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_formulations_agree():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 33000))
+    a = tcu_segmented_reduce(x, formulation="fused")
+    b = tcu_segmented_reduce(x, formulation="tile")
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# scan
+
+
+@pytest.mark.parametrize("n", [1, 3, 128, 129, 500, 16384, 20000])
+def test_scan_sizes(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    got = tcu_scan(x)
+    np.testing.assert_allclose(got, np.cumsum(np.asarray(x)),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_scan_exclusive():
+    x = jax.random.normal(jax.random.PRNGKey(6), (1000,))
+    incl = np.cumsum(np.asarray(x))
+    got = tcu_scan(x, exclusive=True)
+    np.testing.assert_allclose(got[1:], incl[:-1], rtol=1e-3, atol=1e-2)
+    assert abs(float(got[0])) < 1e-5
+
+
+def test_scan_batched():
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 3, 777))
+    got = tcu_scan(x)
+    np.testing.assert_allclose(got, np.cumsum(np.asarray(x), axis=-1),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_weighted_scan_matches_sequential():
+    n = 700
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(8), (n,)))
+    la = np.asarray(-jax.random.uniform(jax.random.PRNGKey(9), (n,)))
+    got = np.asarray(tcu_weighted_scan(jnp.asarray(x), jnp.asarray(la)))
+    y, ref = 0.0, []
+    for i in range(n):
+        y = np.exp(la[i]) * y + x[i]
+        ref.append(y)
+    np.testing.assert_allclose(got, np.array(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_weighted_scan_zero_decay_is_plain_scan():
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 300))
+    got = tcu_weighted_scan(x, jnp.zeros_like(x))
+    np.testing.assert_allclose(got, np.cumsum(np.asarray(x), -1),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis)
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1))
+def test_prop_scan_last_equals_reduce(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    last = tcu_scan(x)[-1]
+    total = tcu_reduce(x)
+    np.testing.assert_allclose(last, total, rtol=1e-3, atol=1e-2)
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(2, 1500), seed=st.integers(0, 2**31 - 1))
+def test_prop_scan_diff_recovers_input(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    s = np.asarray(tcu_scan(x))
+    np.testing.assert_allclose(np.diff(s), np.asarray(x)[1:],
+                               rtol=1e-2, atol=1e-2)
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(1, 1000), seed=st.integers(0, 2**31 - 1),
+       alpha=st.floats(-3, 3))
+def test_prop_reduce_linear(n, seed, alpha):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    a = tcu_reduce(alpha * x)
+    b = alpha * tcu_reduce(x)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-2)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(1, 900), pad=st.integers(1, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_prop_zero_padding_invariance(n, pad, seed):
+    """The paper's arbitrary-segment-size strategy: zero padding does not
+    change the reduction (§4.1)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    xp = jnp.concatenate([x, jnp.zeros((pad,))])
+    np.testing.assert_allclose(tcu_reduce(x), tcu_reduce(xp),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(2, 600), seed=st.integers(0, 2**31 - 1))
+def test_prop_weighted_scan_associative_split(n, seed):
+    """Splitting the sequence and carrying the state equals the fused scan —
+    the invariant the cross-tile carry chain (and dist_weighted_scan) relies
+    on."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n,))
+    la = -jax.random.uniform(k2, (n,))
+    full = np.asarray(tcu_weighted_scan(x, la))
+    cut = n // 2
+    left = np.asarray(tcu_weighted_scan(x[:cut], la[:cut])) if cut else \
+        np.zeros((0,))
+    carry = left[-1] if cut else 0.0
+    right = np.asarray(tcu_weighted_scan(x[cut:], la[cut:]))
+    decay = np.exp(np.cumsum(np.asarray(la[cut:])))
+    right_fixed = right + carry * decay
+    np.testing.assert_allclose(
+        np.concatenate([left, right_fixed]), full, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ragged (irregular) segments — the paper's footnote-4 case, matmul-form
+
+
+def test_ragged_reduce_matches_bincount():
+    from repro.core.ragged import tcu_ragged_segment_reduce
+
+    rng = np.random.default_rng(0)
+    n, s = 1000, 7
+    seg = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    x = rng.normal(size=n).astype(np.float32)
+    got = np.asarray(tcu_ragged_segment_reduce(jnp.asarray(x),
+                                               jnp.asarray(seg), s))
+    want = np.array([x[seg == i].sum() for i in range(s)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ragged_scan_restarts_per_segment():
+    from repro.core.ragged import tcu_ragged_segment_scan
+
+    rng = np.random.default_rng(1)
+    n, s = 500, 5
+    seg = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    x = rng.normal(size=n).astype(np.float32)
+    got = np.asarray(tcu_ragged_segment_scan(jnp.asarray(x),
+                                             jnp.asarray(seg), s))
+    want = np.empty(n, np.float32)
+    for i in range(s):
+        m = seg == i
+        want[m] = np.cumsum(x[m])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(deadline=None, max_examples=15)
+@given(n=st.integers(2, 400), s=st.integers(1, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_prop_ragged_reduce_total_invariant(n, s, seed):
+    """Bucketing never changes the grand total (conservation)."""
+    from repro.core.ragged import tcu_ragged_segment_reduce
+
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    x = rng.normal(size=n).astype(np.float32)
+    got = tcu_ragged_segment_reduce(jnp.asarray(x), jnp.asarray(seg), s)
+    np.testing.assert_allclose(float(jnp.sum(got)), x.sum(),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,137 @@
+"""HLO static-analyser tests: parsing, loop multipliers, collective and
+memory-traffic conventions — on handcrafted modules and a real lowering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (
+    analyse,
+    parse_computations,
+    roofline_terms,
+)
+
+MINI = """
+HloModule mini
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128] get-tuple-element(%p), index=1
+  %w = f32[128,128] constant({...})
+  %y = f32[8,128] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128] all-reduce(%y), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[8,128])) -> pred[] {
+  %p2 = (s32[], f32[8,128]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x0: f32[8,128]) -> (s32[], f32[8,128]) {
+  %x0 = f32[8,128] parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%z, %x0)
+  ROOT %w0 = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_mini_module_loop_flops():
+    h = analyse(MINI)
+    # dot: 2*8*128*128 flops, body runs 10x
+    assert h["flops"] >= 10 * 2 * 8 * 128 * 128
+    assert h["flops"] < 11 * 2 * 8 * 128 * 128
+
+
+def test_mini_module_collectives():
+    h = analyse(MINI)
+    # all-reduce convention: 2x result bytes, 10 iterations
+    want = 10 * 2 * 8 * 128 * 4
+    assert h["collective_bytes"]["all-reduce"] == want
+    assert h["collective_total"] == want
+    assert h["unknown_trip_whiles"] == 0
+
+
+def test_tuple_with_index_comments_parsed():
+    txt = MINI.replace(
+        "(s32[], f32[8,128]) while",
+        "(s32[], f32[8,128], s32[], s32[], s32[], /*index=5*/f32[8,128]) "
+        "while")
+    comps = parse_computations(txt)
+    assert any(i.opcode == "while" for c in comps.values()
+               for i in c.instrs)
+
+
+def test_roofline_terms_dominant():
+    terms = roofline_terms(
+        {"flops": 197e12, "memory_bytes": 819e9 * 2,
+         "collective_total": 50e9 * 0.5},
+        peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(2.0)
+    assert terms["collective_s"] == pytest.approx(0.5)
+    assert terms["dominant"] == "memory_s"
+
+
+def test_real_lowering_matmul_flops():
+    """Lower C = A@B on this process's devices; analyser flops ~= 2MNK."""
+    m, k, n = 256, 512, 128
+
+    def f(a, b):
+        return a @ b
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32))
+    h = analyse(lowered.compile().as_text())
+    assert h["flops"] == pytest.approx(2 * m * k * n, rel=0.05)
+
+
+def test_real_lowering_scan_multiplier():
+    """A lax.scan of T matmuls must count T x the per-iteration flops."""
+    t, d = 8, 64
+
+    def f(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((t, d, d), jnp.float32),
+        jax.ShapeDtypeStruct((4, d), jnp.float32))
+    h = analyse(lowered.compile().as_text())
+    want = t * 2 * 4 * d * d
+    assert h["flops"] >= want
+    assert h["flops"] < 2.0 * want
+
+
+def test_memory_model_slices_not_full_buffers():
+    """A scan that slices one row per step must charge per-slice traffic,
+    not the whole stacked buffer per iteration."""
+    t, d = 64, 256
+
+    def f(w, x):
+        def body(h, wl):
+            return h + wl, None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((t, d), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32))
+    h = analyse(lowered.compile().as_text())
+    full_buffer_per_iter = t * (t * d * 4)       # the wrong accounting
+    assert h["memory_bytes"] < full_buffer_per_iter / 4

@@ -1,0 +1,212 @@
+"""Per-kernel validation: Pallas body (interpret mode on CPU) vs the pure
+jnp oracles in kernels/ref.py, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_rmsnorm import fused_rmsnorm
+from repro.kernels.ssd_scan import ssd_chunk_scan
+from repro.kernels.tcu_reduce import tcu_segmented_reduce_tn
+from repro.kernels.tcu_scan import tcu_segmented_scan_tn
+
+
+# ---------------------------------------------------------------------------
+# tcu_reduce kernel
+
+
+@pytest.mark.parametrize("n,s", [(128, 128), (256, 128), (512, 384),
+                                 (1024, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_reduce_kernel_shapes(n, s, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(n + s), (n, s)).astype(dtype)
+    got = tcu_segmented_reduce_tn(x, interpret=True)
+    want = np.asarray(x, np.float32).sum(axis=0)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-1
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [64, 100, 300, 1000])
+def test_reduce_wrapper_padding(n):
+    """ops.segmented_reduce pads arbitrary segment sizes (paper §4.1)."""
+    x = jax.random.normal(jax.random.PRNGKey(n), (5, n))
+    got = ops.segmented_reduce(x, use_pallas=True)
+    np.testing.assert_allclose(got, ref.segmented_reduce_ref(x),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_reduce_kernel_rejects_unaligned():
+    with pytest.raises(ValueError):
+        tcu_segmented_reduce_tn(jnp.zeros((100, 128)), interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# tcu_scan kernel
+
+
+@pytest.mark.parametrize("s,n", [(128, 128), (128, 512), (256, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scan_kernel_shapes(s, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(s + n), (s, n)).astype(dtype)
+    got = tcu_segmented_scan_tn(x, interpret=True)
+    want = np.cumsum(np.asarray(x, np.float32), axis=-1)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-1
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [50, 129, 640])
+def test_scan_wrapper_padding(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (3, n))
+    got = ops.segmented_scan(x, use_pallas=True)
+    np.testing.assert_allclose(got, ref.segmented_scan_ref(x),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_scan_kernel_carry_across_chunks():
+    """Tile-to-tile carry: constant input => scan is i+1 everywhere."""
+    x = jnp.ones((128, 512), jnp.float32)
+    got = np.asarray(tcu_segmented_scan_tn(x, interpret=True))
+    want = np.tile(np.arange(1, 513, dtype=np.float32), (128, 1))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused_rmsnorm kernel
+
+
+@pytest.mark.parametrize("rows,d", [(128, 128), (256, 512), (128, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(rows, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(rows + d), (rows, d)).astype(
+        dtype)
+    w = (1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (d,))).astype(
+        dtype)
+    got = fused_rmsnorm(x, w, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_rmsnorm_grad_matches_ref():
+    """ops.rmsnorm custom VJP: gradient equals the reference gradient."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 256))
+    w = jnp.ones((256,))
+
+    g_kernel = jax.grad(
+        lambda xx: jnp.sum(ops.rmsnorm(xx, w, use_pallas=True) ** 2))(x)
+    g_ref = jax.grad(
+        lambda xx: jnp.sum(ref.rmsnorm_ref(xx, w) ** 2))(x)
+    np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan kernel
+
+
+@pytest.mark.parametrize("bh,L,p,n", [(2, 128, 128, 8), (1, 256, 128, 16),
+                                      (3, 384, 256, 32)])
+def test_ssd_kernel_vs_sequential(bh, L, p, n):
+    key = jax.random.PRNGKey(bh * L)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xdt = 0.1 * jax.random.normal(k1, (bh, L, p))
+    lam = -0.5 * jax.random.uniform(k2, (bh, L))
+    b = jax.random.normal(k3, (bh, L, n)) / np.sqrt(n)
+    c = jax.random.normal(k4, (bh, L, n)) / np.sqrt(n)
+    y, state = ssd_chunk_scan(xdt, lam, b, c, interpret=True)
+
+    # sequential oracle: h_t = exp(lam_t) h_{t-1} + b_t xdt_t^T ; y = c_t.h_t
+    xa, la, ba, ca = map(np.asarray, (xdt, lam, b, c))
+    yref = np.zeros((bh, L, p), np.float32)
+    for i in range(bh):
+        h = np.zeros((n, p), np.float32)
+        for t in range(L):
+            h = np.exp(la[i, t]) * h + np.outer(ba[i, t], xa[i, t])
+            yref[i, t] = ca[i, t] @ h
+    np.testing.assert_allclose(y, yref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(state[0], h if bh == 1 else state[0],
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_ops_wrapper_vs_ref():
+    """ops.ssd_scan (pad + head-fold glue) against ref.ssd_scan_ref."""
+    b, L, h, p, g, n = 2, 100, 4, 16, 2, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = 0.2 * jax.random.normal(ks[0], (b, L, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    bb = jax.random.normal(ks[3], (b, L, g, n)) / np.sqrt(n)
+    cc = jax.random.normal(ks[4], (b, L, g, n)) / np.sqrt(n)
+    got = ops.ssd_scan(x, dt, a, bb, cc, use_pallas=True)
+    want = ref.ssd_scan_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_core_ssd_matches_ref():
+    """The pure-JAX chunked SSD (core/ssd.py) against the sequential ref."""
+    from repro.core.ssd import ssd_chunked
+
+    b, L, h, p, g, n = 2, 300, 4, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = 0.2 * jax.random.normal(ks[0], (b, L, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+    a = -jnp.exp(0.2 * jax.random.normal(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (b, L, g, n)) / np.sqrt(n)
+    cc = jax.random.normal(ks[4], (b, L, g, n)) / np.sqrt(n)
+    got, _ = ssd_chunked(x, dt, a, bb, cc, chunk=128)
+    want = ref.ssd_scan_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention kernel
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+def test_flash_attention_vs_ref(causal, hq, hkv):
+    b, lq, lk, d = 2, 256, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(hq * 10 + causal), 3)
+    q = jax.random.normal(ks[0], (b, hq, lq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, lk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, lk, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_sliding_window():
+    b, h, L, d = 1, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, h, L, d))
+    k = jax.random.normal(ks[1], (b, h, L, d))
+    v = jax.random.normal(ks[2], (b, h, L, d))
+    got = flash_attention(q, k, v, causal=True, window=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_vs_ref():
+    """The XLA (dry-run) attention path against the oracle, incl. GQA+SWA."""
+    from repro.models.xla_attention import chunked_attention
+
+    b, hq, hkv, L, d = 2, 4, 2, 512, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (b, L, hq, d))
+    k = jax.random.normal(ks[1], (b, L, hkv, d))
+    v = jax.random.normal(ks[2], (b, L, hkv, d))
+    for window in (None, 100):
+        got = chunked_attention(q, k, v, causal=True, window=window)
+        want = ref.flash_attention_ref(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=True, window=window)
+        np.testing.assert_allclose(
+            np.asarray(jnp.moveaxis(got, 2, 1)), np.asarray(want),
+            rtol=2e-3, atol=2e-3)

@@ -1,0 +1,156 @@
+"""Training-substrate tests: optimizer math, grad accumulation equivalence,
+gradient compression unbiasedness, loss goes down end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.common import smoke_batch
+from repro.models import build
+from repro.optim import (
+    OptConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    lr_at,
+    stochastic_round_bf16,
+)
+from repro.optim.adafactor import adafactor_update, init_adafactor_state
+from repro.optim.compress import compress_grads
+from repro.training import TrainConfig, init_train_state, make_train_step
+
+
+def test_lr_schedule():
+    cfg = OptConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100,
+                    min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.int32(0))) == 0.0
+    assert np.isclose(float(lr_at(cfg, jnp.int32(10))), 1e-3)
+    assert np.isclose(float(lr_at(cfg, jnp.int32(100))), 1e-4, rtol=1e-3)
+    mid = float(lr_at(cfg, jnp.int32(55)))
+    assert 1e-4 < mid < 1e-3
+
+
+def test_global_norm_matmul_form():
+    tree = {"a": jnp.ones((7, 11)), "b": -2.0 * jnp.ones((5,))}
+    want = np.sqrt(7 * 11 * 1.0 + 5 * 4.0)
+    np.testing.assert_allclose(float(global_norm(tree)), want, rtol=1e-5)
+
+
+def test_adamw_scalar_reference():
+    """One AdamW step on a scalar against the textbook update."""
+    cfg = OptConfig(peak_lr=1e-1, warmup_steps=0, decay_steps=10**9,
+                    b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                    clip_norm=1e9)
+    p = {"w": jnp.float32(2.0)}
+    g = {"w": jnp.float32(0.5)}
+    state = init_opt_state(p, cfg)
+    new_p, state, _ = adamw_update(g, state, p, cfg)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    update = (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    np.testing.assert_allclose(float(new_p["w"]), 2.0 - 0.1 * update,
+                               rtol=1e-5)
+
+
+def test_adamw_weight_decay_decoupled():
+    cfg = OptConfig(peak_lr=1e-1, warmup_steps=0, decay_steps=10**9,
+                    weight_decay=0.1, clip_norm=1e9)
+    p = {"w": jnp.float32(1.0)}
+    g = {"w": jnp.float32(0.0)}
+    state = init_opt_state(p, cfg)
+    new_p, _, _ = adamw_update(g, state, p, cfg)
+    # zero grad: only decay acts -> w - lr * wd * w
+    np.testing.assert_allclose(float(new_p["w"]), 1.0 - 0.1 * 0.1 * 1.0,
+                               rtol=1e-5)
+
+
+def test_grad_clipping():
+    cfg = OptConfig(peak_lr=0.0, clip_norm=1.0)
+    p = {"w": jnp.ones((100,))}
+    g = {"w": 10.0 * jnp.ones((100,))}
+    state = init_opt_state(p, cfg)
+    _, _, metrics = adamw_update(g, state, p, cfg)
+    np.testing.assert_allclose(float(metrics["grad_norm"]), 100.0, rtol=1e-4)
+
+
+def test_adafactor_memory_factored():
+    p = {"w": jnp.ones((16, 32)), "b": jnp.ones((8,))}
+    cfg = OptConfig()
+    st = init_adafactor_state(p, cfg)
+    assert st["v"]["w"]["vr"].shape == (16,)
+    assert st["v"]["w"]["vc"].shape == (32,)
+    assert st["v"]["b"]["v"].shape == (8,)
+    g = {"w": 0.1 * jnp.ones((16, 32)), "b": 0.1 * jnp.ones((8,))}
+    new_p, st2, m = adafactor_update(g, st, p, cfg)
+    assert np.isfinite(float(m["grad_norm"]))
+    assert bool(jnp.all(new_p["w"] < p["w"]))    # positive grad -> decrease
+
+
+def test_stochastic_round_unbiased():
+    x = jnp.full((20000,), 1.0 + 2.0 ** -9)      # exactly between bf16 steps
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    means = [float(jnp.mean(stochastic_round_bf16(x, k).astype(jnp.float32)))
+             for k in keys]
+    np.testing.assert_allclose(np.mean(means), 1.0 + 2.0 ** -9, rtol=1e-4)
+
+
+def test_compress_error_feedback_closes():
+    """grads + error_buffer must telescope: q_t + e_t == g_t + e_{t-1}."""
+    g = {"w": jnp.float32(1.0) + jnp.arange(100, dtype=jnp.float32) * 1e-4}
+    q, e = compress_grads(g, None, jax.random.PRNGKey(0))
+    recon = q["w"].astype(jnp.float32) + e["w"]
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g["w"]),
+                               rtol=1e-6)
+
+
+def test_grad_accumulation_equivalence():
+    """microbatches=2 must match microbatches=1 (mean-of-means)."""
+    mod = configs.get("llama3.2-1b")
+    bundle = build(mod.SMOKE)
+    opt_cfg = OptConfig(peak_lr=1e-3, warmup_steps=0, decay_steps=100)
+    batch = smoke_batch(mod.SMOKE)
+
+    outs = {}
+    for nmb in (1, 2):
+        tc = TrainConfig(microbatches=nmb)
+        state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg, tc)
+        step = jax.jit(make_train_step(bundle, opt_cfg, tc))
+        new_state, metrics = step(state, batch)
+        outs[nmb] = (float(metrics["loss"]),
+                     jax.tree.leaves(new_state["params"]))
+    np.testing.assert_allclose(outs[1][0], outs[2][0], rtol=1e-5)
+    for a, b in zip(outs[1][1], outs[2][1]):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_loss_decreases_20_steps():
+    mod = configs.get("llama3.2-1b")
+    bundle = build(mod.SMOKE)
+    opt_cfg = OptConfig(peak_lr=3e-3, warmup_steps=2, decay_steps=40)
+    state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg)
+    step = jax.jit(make_train_step(bundle, opt_cfg))
+    batch = smoke_batch(mod.SMOKE)
+    losses = []
+    for _ in range(20):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_compressed_training_still_learns():
+    mod = configs.get("llama3.2-1b")
+    bundle = build(mod.SMOKE)
+    opt_cfg = OptConfig(peak_lr=3e-3, warmup_steps=2, decay_steps=40)
+    tc = TrainConfig(compress_grads=True)
+    state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg, tc)
+    assert "err" in state
+    step = jax.jit(make_train_step(bundle, opt_cfg, tc))
+    batch = smoke_batch(mod.SMOKE)
+    losses = []
+    for _ in range(15):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
