@@ -17,18 +17,17 @@ from benchmarks.common import hlo_op_mix, print_csv
 
 
 def run() -> list:
-    import repro.core as core
+    from repro.core import dispatch
 
     rows = []
     x = jax.random.normal(jax.random.PRNGKey(0), (512, 4096))
     cases = {
-        "reduce_tcu_tile": lambda a: core.tcu_segmented_reduce(
-            a, formulation="tile"),
-        "reduce_vector": lambda a: jnp.sum(a, axis=-1),
-        "scan_tcu": core.tcu_segmented_scan,
-        "scan_vector": lambda a: jnp.cumsum(a, axis=-1),
+        "reduce_tcu_tile": lambda a: dispatch.reduce(a, path="xla_tile"),
+        "reduce_vector": lambda a: dispatch.reduce(a, path="baseline"),
+        "scan_tcu": lambda a: dispatch.scan(a, path="fused"),
+        "scan_vector": lambda a: dispatch.scan(a, path="baseline"),
         "rmsnorm_tcu": lambda a: a * jax.lax.rsqrt(
-            core.tcu_segmented_reduce(a * a)[..., None] / a.shape[-1]
+            dispatch.reduce(a * a, path="fused")[..., None] / a.shape[-1]
             + 1e-6),
         "rmsnorm_vector": lambda a: a * jax.lax.rsqrt(
             jnp.mean(a * a, axis=-1, keepdims=True) + 1e-6),

@@ -2,29 +2,27 @@
 
 The device-level composition (tile scan -> tile-totals scan -> carry add,
 repro.core.tcu_scan's recursion) against XLA's native sum/cumsum, over
-input sizes 2^16..2^24.
+input sizes 2^16..2^24. All contenders via repro.core.dispatch paths.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import elems_per_sec, print_csv, time_fn
 
 
 def run() -> list:
-    import repro.core as core
+    from repro.core import dispatch
 
     rows = []
     for log_n in range(16, 25, 2):
         n = 1 << log_n
         x = jax.random.normal(jax.random.PRNGKey(2), (n,))
         cases = {
-            "tcu_full_reduce": lambda a: core.tcu_reduce(
-                a, formulation="tile"),
-            "base_full_reduce": jnp.sum,
-            "tcu_full_scan": core.tcu_scan,
-            "base_full_scan": jnp.cumsum,
+            "tcu_full_reduce": lambda a: dispatch.reduce(a, path="xla_tile"),
+            "base_full_reduce": lambda a: dispatch.reduce(a, path="baseline"),
+            "tcu_full_scan": lambda a: dispatch.scan(a, path="fused"),
+            "base_full_scan": lambda a: dispatch.scan(a, path="baseline"),
         }
         for name, fn in cases.items():
             t = time_fn(jax.jit(fn), x)

@@ -1,11 +1,13 @@
 """Paper Figure 10: segmented reduction throughput vs segment size.
 
 Fixed-size input (2^24 elements on this CPU host; the paper used 2^30 on a
-V100), segment size swept over powers of two. Three contenders:
+V100), segment size swept over powers of two. Contenders are the dispatch
+layer's paths (repro.core.dispatch — one switch, no ad-hoc imports):
 
-  * ``tcu_tile``  — the paper-faithful tile algebra (repro.core, tile form)
-  * ``tcu_fused`` — the beyond-paper fused matmul form (default path)
-  * ``baseline``  — jnp.sum (XLA's native vector reduction = the CUB stand-in)
+  * ``tcu_tile``  — path="xla_tile": the paper-faithful tile algebra
+  * ``tcu_fused`` — path="fused": the beyond-paper fused matmul form
+  * ``baseline``  — path="baseline": jnp.sum (XLA's native vector reduction
+    = the CUB stand-in)
 
 Derived column ``belems_s`` = billions of half-precision-equivalent elements
 per second (the paper's y-axis).
@@ -28,15 +30,15 @@ def run(total: int = TOTAL) -> list:
         segs = total // seg
         xs = x.reshape(segs, seg)
 
-        import repro.core as core
+        from repro.core import dispatch
 
         fns = {
-            "tcu_tile": jax.jit(lambda a: core.tcu_segmented_reduce(
-                a, formulation="tile")),
-            "tcu_fused": jax.jit(lambda a: core.tcu_segmented_reduce(
-                a, formulation="fused")),
+            "tcu_tile": jax.jit(
+                lambda a: dispatch.reduce(a, path="xla_tile")),
+            "tcu_fused": jax.jit(
+                lambda a: dispatch.reduce(a, path="fused")),
             "baseline_sum": jax.jit(
-                lambda a: jnp.sum(a.astype(jnp.float32), axis=-1)),
+                lambda a: dispatch.reduce(a, path="baseline")),
         }
         for name, fn in fns.items():
             t = time_fn(fn, xs)

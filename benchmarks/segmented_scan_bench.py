@@ -1,7 +1,8 @@
 """Paper Figure 12: segmented scan throughput vs segment size.
 
-Contenders: the matmul-form scan (repro.core.tcu_scan) vs XLA's native
-``jnp.cumsum`` (the Thrust stand-in). Fixed 2^22-element input.
+Contenders (one switch, repro.core.dispatch): the matmul-form scan
+(path="fused") vs XLA's native ``jnp.cumsum`` (path="baseline", the Thrust
+stand-in). Fixed 2^22-element input.
 """
 from __future__ import annotations
 
@@ -14,7 +15,7 @@ TOTAL = 1 << 22
 
 
 def run(total: int = TOTAL) -> list:
-    import repro.core as core
+    from repro.core import dispatch
 
     rows = []
     x = jax.random.normal(jax.random.PRNGKey(0), (total,), jnp.float32)
@@ -23,9 +24,9 @@ def run(total: int = TOTAL) -> list:
         segs = total // seg
         xs = x.reshape(segs, seg)
         fns = {
-            "tcu_scan": jax.jit(core.tcu_segmented_scan),
+            "tcu_scan": jax.jit(lambda a: dispatch.scan(a, path="fused")),
             "baseline_cumsum": jax.jit(
-                lambda a: jnp.cumsum(a.astype(jnp.float32), axis=-1)),
+                lambda a: dispatch.scan(a, path="baseline")),
         }
         for name, fn in fns.items():
             t = time_fn(fn, xs)

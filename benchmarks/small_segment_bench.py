@@ -9,7 +9,6 @@ structural evidence that the work moved onto the matrix unit.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import (elems_per_sec, hlo_op_mix, print_csv,
                                time_fn)
@@ -18,18 +17,17 @@ N_SEGMENTS = 4096
 
 
 def run() -> tuple[list, list]:
-    import repro.core as core
+    from repro.core import dispatch
 
     rows, mix_rows = [], []
     for log_seg in range(4, 14):
         seg = 1 << log_seg
         x = jax.random.normal(jax.random.PRNGKey(1), (N_SEGMENTS, seg))
         cases = {
-            "tcu_reduce": lambda a: core.tcu_segmented_reduce(
-                a, formulation="tile"),
-            "base_reduce": lambda a: jnp.sum(a, axis=-1),
-            "tcu_scan": core.tcu_segmented_scan,
-            "base_scan": lambda a: jnp.cumsum(a, axis=-1),
+            "tcu_reduce": lambda a: dispatch.reduce(a, path="xla_tile"),
+            "base_reduce": lambda a: dispatch.reduce(a, path="baseline"),
+            "tcu_scan": lambda a: dispatch.scan(a, path="fused"),
+            "base_scan": lambda a: dispatch.scan(a, path="baseline"),
         }
         for name, fn in cases.items():
             t = time_fn(jax.jit(fn), x)

@@ -14,8 +14,7 @@ from benchmarks.common import elems_per_sec, print_csv, time_fn
 
 
 def run() -> list:
-    from repro.core.ssd import ssd_chunked
-    from repro.kernels.ref import ssd_scan_ref
+    from repro.core import dispatch
 
     rows = []
     b, h, p, g, n = 2, 4, 64, 1, 64
@@ -28,8 +27,8 @@ def run() -> list:
         bb = jax.random.normal(ks[3], (b, L, g, n)) / jnp.sqrt(float(n))
         cc = jax.random.normal(ks[4], (b, L, g, n)) / jnp.sqrt(float(n))
 
-        chunked = jax.jit(lambda *t: ssd_chunked(*t)[0])
-        seq = jax.jit(ssd_scan_ref)
+        chunked = jax.jit(lambda *t: dispatch.ssd(*t, path="fused"))
+        seq = jax.jit(lambda *t: dispatch.ssd(*t, path="baseline"))
         t1 = time_fn(chunked, x, dt, a, bb, cc, iters=3)
         t2 = time_fn(seq, x, dt, a, bb, cc, iters=3)
         toks = b * L

@@ -21,11 +21,11 @@ import numpy as np                                              # noqa: E402
 from jax.sharding import PartitionSpec as P                     # noqa: E402
 
 from repro.core import dist_weighted_scan, tcu_weighted_scan    # noqa: E402
+from repro.parallel.compat import make_mesh, shard_map          # noqa: E402
 
 
 def main() -> None:
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("data",))
     seq = 1 << 16                      # 65k at example scale; 500k on pod
     x = jax.random.normal(jax.random.PRNGKey(0), (2, seq))
     log_a = -jax.random.uniform(jax.random.PRNGKey(1), (2, seq)) * 0.01
@@ -33,7 +33,7 @@ def main() -> None:
     def seq_parallel(xl, ll):
         return dist_weighted_scan(xl, ll, "data")
 
-    sp = jax.jit(jax.shard_map(
+    sp = jax.jit(shard_map(
         seq_parallel, mesh=mesh,
         in_specs=(P(None, "data"), P(None, "data")),
         out_specs=P(None, "data")))

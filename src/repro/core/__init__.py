@@ -20,6 +20,7 @@ from repro.core.scan import (
     tcu_segmented_scan,
     tcu_weighted_scan,
 )
+from repro.core import dispatch
 from repro.core.tiles import (
     DEFAULT_TILE,
     l_matrix,
@@ -32,6 +33,7 @@ from repro.core.tiles import (
 
 __all__ = [
     "DEFAULT_TILE",
+    "dispatch",
     "dist_exclusive_carry",
     "dist_reduce",
     "dist_scan",

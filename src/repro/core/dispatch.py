@@ -1,0 +1,95 @@
+"""One switch for every reduce/scan formulation in the repo.
+
+``repro.kernels.backend`` answers "which *implementation* of a kernel runs"
+(fused XLA vs Pallas tile vs interpret). This module sits one level up and
+also exposes the *algorithmic* contenders the paper compares, so benchmarks
+and tests get every fused-vs-tile-vs-kernel comparison from a single
+``path=`` argument instead of ad-hoc imports:
+
+  ``fused``      beyond-paper fused matmul form (repro.core, XLA)
+  ``xla_tile``   paper-faithful tile algebra in pure XLA (repro.core)
+  ``tile``       explicit Pallas tile kernel (native on TPU)
+  ``interpret``  Pallas kernel body through the interpreter (CPU validation)
+  ``baseline``   XLA's native vector op (jnp.sum / jnp.cumsum / sequential)
+  ``auto``       ``tile`` on TPU, ``fused`` otherwise
+
+``path=None`` defers to ``REPRO_KERNEL_PATH``, then ``auto``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reduce import tcu_segmented_reduce
+from repro.core.scan import tcu_scan, tcu_weighted_scan
+from repro.core.ssd import ssd_chunked
+from repro.kernels import backend, ops, ref
+
+PATHS = ("auto", "fused", "xla_tile", "tile", "interpret", "baseline")
+
+
+def resolve_path(path: str | None = None) -> str:
+    """Like :func:`backend.resolve_path` but admitting the two extra
+    algorithm-level paths (``xla_tile``, ``baseline``)."""
+    if path is None:
+        path = os.environ.get(backend.ENV_PATH, "").strip().lower() or "auto"
+    if path not in PATHS:
+        raise ValueError(f"unknown path {path!r}; expected one of {PATHS}")
+    if path in ("xla_tile", "baseline"):
+        return path
+    return backend.resolve_path(path)
+
+
+def reduce(x: jax.Array, *, path: str | None = None) -> jax.Array:
+    """Segmented sum over the last axis -> f32 ``(...,)``."""
+    p = resolve_path(path)
+    if p == "fused":
+        return tcu_segmented_reduce(x, formulation="fused")
+    if p == "xla_tile":
+        return tcu_segmented_reduce(x, formulation="tile")
+    if p == "baseline":
+        return jnp.sum(x.astype(jnp.float32), axis=-1)
+    return ops.segmented_reduce(x, path=p)
+
+
+def scan(x: jax.Array, *, path: str | None = None,
+         exclusive: bool = False) -> jax.Array:
+    """Prefix sum over the last axis -> f32, same shape."""
+    p = resolve_path(path)
+    if p in ("fused", "xla_tile"):  # core's scan IS the tile algebra, fused
+        return tcu_scan(x, exclusive=exclusive)
+    if p == "baseline":
+        out = jnp.cumsum(x.astype(jnp.float32), axis=-1)
+        if exclusive:
+            out = jnp.concatenate(
+                [jnp.zeros_like(out[..., :1]), out[..., :-1]], axis=-1)
+        return out
+    out = ops.segmented_scan(x, path=p)
+    if exclusive:
+        out = out - x.astype(out.dtype)
+    return out
+
+
+def weighted_scan(x: jax.Array, log_a: jax.Array, *,
+                  path: str | None = None) -> jax.Array:
+    """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` -> f32."""
+    p = resolve_path(path)
+    if p in ("fused", "xla_tile"):
+        return tcu_weighted_scan(x, log_a)
+    if p == "baseline":
+        return ref.weighted_scan_ref(x, log_a)
+    return ops.weighted_scan(x, log_a, path=p)
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, path: str | None = None) -> jax.Array:
+    """Mamba-2 SSD scan -> (B, L, H, P); ``baseline`` is the sequential
+    recurrence, ``fused``/``xla_tile`` the pure-XLA chunked form."""
+    p = resolve_path(path)
+    if p in ("fused", "xla_tile"):
+        return ssd_chunked(x, dt, a, b, c)[0]
+    if p == "baseline":
+        return ref.ssd_scan_ref(x, dt, a, b, c)
+    return ops.ssd_scan(x, dt, a, b, c, path=p)

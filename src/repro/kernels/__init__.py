@@ -1,27 +1,43 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 Each kernel module pairs with a pure-jnp oracle in ``ref.py``; the public
-entry points (with CPU fallback + interpret-mode validation) live in
-``ops.py``:
+entry points live in ``ops.py`` and route through the version-shimmed
+dispatch layer in ``backend.py`` (fused XLA vs Pallas tile vs interpret
+mode, selectable per call or via ``REPRO_KERNEL_PATH``):
 
+  backend.py          version shim + capability probes + pallas_op dispatch
   tcu_reduce.py       matmul-form segmented reduction   (paper §4)
   tcu_scan.py         matmul-form segmented scan        (paper §5)
   fused_rmsnorm.py    RMSNorm with MXU Σx²              (paper §8 future work)
   ssd_scan.py         Mamba-2 SSD = weighted tile scan  (beyond-paper)
   flash_attention.py  blocked attention, matmul-form ℓ  (beyond-paper)
 """
+from repro.kernels import backend
+from repro.kernels.backend import (
+    available_ops,
+    compiler_params,
+    pallas_op,
+    resolve_path,
+)
 from repro.kernels.ops import (
     attention,
     rmsnorm,
     segmented_reduce,
     segmented_scan,
     ssd_scan,
+    weighted_scan,
 )
 
 __all__ = [
     "attention",
+    "available_ops",
+    "backend",
+    "compiler_params",
+    "pallas_op",
+    "resolve_path",
     "rmsnorm",
     "segmented_reduce",
     "segmented_scan",
     "ssd_scan",
+    "weighted_scan",
 ]

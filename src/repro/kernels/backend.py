@@ -1,0 +1,170 @@
+"""Version shim + dispatch layer for every Pallas kernel in the repo.
+
+Why this exists: the Pallas-TPU private surface renames things across JAX
+releases (``pltpu.TPUCompilerParams`` on 0.4.x became ``pltpu.CompilerParams``
+on 0.5+, field sets drift too). Hard-coding one spelling in each kernel broke
+all of them at once; this module is the single place that knows which JAX is
+installed. Kernels call :func:`compiler_params` instead of touching ``pltpu``
+classes, and the public wrappers register with :func:`register_op` so every
+call site picks its execution path through one switch:
+
+  ``fused``      the XLA reference path (``repro.kernels.ref`` /
+                 ``repro.core``) — default off-TPU
+  ``tile``       the explicit Pallas tile kernel — native on TPU, silently
+                 downgraded to ``interpret`` elsewhere (there is no TPU to
+                 compile for)
+  ``interpret``  the Pallas kernel body through the interpreter — how the
+                 kernels are validated on CPU
+  ``auto``       ``tile`` on TPU, ``fused`` otherwise
+
+Selection precedence: per-call ``path=`` kwarg > per-call legacy
+``use_pallas=`` bool > ``REPRO_KERNEL_PATH`` env var > ``auto``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import os
+from typing import Any, Callable
+
+import jax
+
+ENV_PATH = "REPRO_KERNEL_PATH"
+PATHS = ("auto", "fused", "tile", "interpret")
+
+
+# ---------------------------------------------------------------------------
+# capability probes
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def has_pallas_tpu() -> bool:
+    """True when this JAX ships the Pallas-TPU lowering at all."""
+    try:
+        from jax.experimental.pallas import tpu as _  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# compiler-params shim
+
+
+def compiler_params_cls() -> type:
+    """The Pallas-TPU compiler-params class under whichever name this JAX
+    uses (``CompilerParams`` on 0.5+, ``TPUCompilerParams`` on 0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise RuntimeError(
+        f"jax {jax.__version__}: no Pallas-TPU compiler-params class found; "
+        "the version shim in repro.kernels.backend needs a new spelling"
+    )
+
+
+def _accepted_fields(cls: type) -> set[str]:
+    if dataclasses.is_dataclass(cls):
+        return {f.name for f in dataclasses.fields(cls)}
+    return set(inspect.signature(cls).parameters)
+
+
+def compiler_params(**kwargs: Any):
+    """Construct compiler params portably.
+
+    Fields unknown to the installed JAX (the field set drifts between
+    releases) are dropped rather than raising, so kernels can request newer
+    knobs without pinning a JAX version.
+    """
+    cls = compiler_params_cls()
+    fields = _accepted_fields(cls)
+    if "dimension_semantics" in kwargs and kwargs["dimension_semantics"]:
+        kwargs["dimension_semantics"] = tuple(kwargs["dimension_semantics"])
+    return cls(**{k: v for k, v in kwargs.items() if k in fields})
+
+
+# ---------------------------------------------------------------------------
+# path resolution
+
+
+# algorithm-level contenders that only repro.core.dispatch understands; the
+# env var is shared process-wide, so kernel-level call sites must tolerate
+# them (their nearest kernel-level equivalent is the fused XLA path)
+_DISPATCH_ONLY = ("baseline", "xla_tile")
+
+
+def resolve_path(path: str | None = None, *,
+                 use_pallas: bool | None = None) -> str:
+    """Resolve a concrete execution path: ``fused`` | ``tile`` | ``interpret``.
+
+    ``path`` is the explicit per-call choice; ``use_pallas`` is the legacy
+    bool (True → kernel, False → fused, None → unspecified); with neither,
+    ``$REPRO_KERNEL_PATH`` applies, then ``auto``.
+    """
+    if path is None and use_pallas is not None:
+        path = "tile" if use_pallas else "fused"
+    if path is None:
+        path = os.environ.get(ENV_PATH, "").strip().lower() or "auto"
+        if path in _DISPATCH_ONLY:
+            path = "fused"
+    if path not in PATHS:
+        raise ValueError(f"unknown kernel path {path!r}; expected one of {PATHS}")
+    if path == "auto":
+        path = "tile" if on_tpu() and has_pallas_tpu() else "fused"
+    if path == "tile" and not on_tpu():
+        path = "interpret"  # nothing to compile the tile kernel for
+    return path
+
+
+# ---------------------------------------------------------------------------
+# op registry — the single pallas_call front door
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasOp:
+    """One kernel family: the Pallas tile entry (must accept an
+    ``interpret=`` kwarg) and its fused-XLA reference twin."""
+
+    name: str
+    tile: Callable[..., Any]
+    fused: Callable[..., Any]
+
+
+_REGISTRY: dict[str, PallasOp] = {}
+
+
+def register_op(name: str, *, tile: Callable[..., Any],
+                fused: Callable[..., Any]) -> PallasOp:
+    op = PallasOp(name=name, tile=tile, fused=fused)
+    _REGISTRY[name] = op
+    return op
+
+
+def get_op(name: str) -> PallasOp:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no Pallas op {name!r} registered; known: {available_ops()}"
+        ) from None
+
+
+def available_ops() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def pallas_op(name: str, *args: Any, path: str | None = None,
+              use_pallas: bool | None = None, **kwargs: Any) -> Any:
+    """Run a registered op through the path switch (see module docstring)."""
+    op = get_op(name)
+    p = resolve_path(path, use_pallas=use_pallas)
+    if p == "fused":
+        return op.fused(*args, **kwargs)
+    return op.tile(*args, interpret=(p == "interpret"), **kwargs)

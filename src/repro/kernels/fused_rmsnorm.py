@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend
 
 LANES = 128
 ROW_BLOCK = 128
@@ -54,7 +55,7 @@ def fused_rmsnorm(
         ],
         out_specs=pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=backend.compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

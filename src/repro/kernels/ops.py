@@ -1,10 +1,13 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels, dispatched through
+``repro.kernels.backend``.
 
-Dispatch policy: on TPU backends the Pallas kernels run natively; everywhere
-else (this CPU container, tests) the pure-jnp references in ``ref.py`` are
-used, unless ``interpret=True`` forces the kernel body through the Pallas
-interpreter (how the kernels are validated on CPU). Wrappers own all
-padding/layout glue so kernels stay shape-strict and MXU-aligned.
+Every op registers a (tile, fused) pair with :func:`backend.register_op`:
+the *tile* entry is the padding/layout glue in this module feeding the
+shape-strict, MXU-aligned Pallas kernel (native on TPU, interpret mode on
+CPU); the *fused* entry is the pure-jnp oracle in ``ref.py``. The execution
+path is chosen per call (``path=`` / legacy ``use_pallas=``), via the
+``REPRO_KERNEL_PATH`` env var, or automatically (kernel on TPU, fused XLA
+elsewhere) — see the backend module docstring for precedence.
 """
 from __future__ import annotations
 
@@ -13,25 +16,32 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention as _flash_kernel
-from repro.kernels.fused_rmsnorm import fused_rmsnorm as _rmsnorm_kernel
-from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_kernel
-from repro.kernels.tcu_reduce import tcu_segmented_reduce_tn as _reduce_kernel
-from repro.kernels.tcu_scan import tcu_segmented_scan_tn as _scan_kernel
+from repro.kernels import backend, ref
+from repro.kernels.backend import pallas_op
+
+if backend.has_pallas_tpu():
+    from repro.kernels.flash_attention import flash_attention as _flash_kernel
+    from repro.kernels.fused_rmsnorm import fused_rmsnorm as _rmsnorm_kernel
+    from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_kernel
+    from repro.kernels.tcu_reduce import (
+        tcu_segmented_reduce_tn as _reduce_kernel)
+    from repro.kernels.tcu_scan import tcu_segmented_scan_tn as _scan_kernel
+else:  # pragma: no cover — JAX without the Pallas-TPU lowering
+    _flash_kernel = _rmsnorm_kernel = _ssd_kernel = None
+    _reduce_kernel = _scan_kernel = None
+
+
+def _require_pallas(kernel, name: str):
+    if kernel is None:
+        raise RuntimeError(
+            f"{name}: this JAX build has no Pallas-TPU lowering; only the "
+            "fused path is available (path='fused')")
+    return kernel
+
 
 LANES = 128
 
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _use_kernel(force: bool | None) -> tuple[bool, bool]:
-    """-> (use_pallas, interpret)."""
-    if force is None:
-        return on_tpu(), False
-    return bool(force), not on_tpu()
+on_tpu = backend.on_tpu  # re-exported; historical home of this probe
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -43,80 +53,146 @@ def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
-def segmented_reduce(x: jax.Array, *, use_pallas: bool | None = None) -> jax.Array:
-    """Sum over the last axis of ``x (..., n)`` -> f32 ``(...,)``."""
-    use, interp = _use_kernel(use_pallas)
-    if not use:
-        return ref.segmented_reduce_ref(x)
+def _nrows(lead: tuple[int, ...]) -> int:
+    rows = 1
+    for s in lead:
+        rows *= s
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# segmented reduce
+
+
+def _reduce_tile(x: jax.Array, *, interpret: bool = False) -> jax.Array:
     lead = x.shape[:-1]
     n = x.shape[-1]
     flat = x.reshape(-1, n)
     # col-major LoadTile: feed the kernel x^T, pad both dims to 128
     xt = _pad_axis(_pad_axis(flat.T, 0, LANES), 1, LANES)
-    out = _reduce_kernel(xt, interpret=interp)
+    out = _require_pallas(_reduce_kernel, "segmented_reduce")(
+        xt, interpret=interpret)
     return out[: flat.shape[0]].reshape(lead)
 
 
-def segmented_scan(x: jax.Array, *, use_pallas: bool | None = None) -> jax.Array:
-    """Inclusive prefix-sum over the last axis -> f32, same shape."""
-    use, interp = _use_kernel(use_pallas)
-    if not use:
-        return ref.segmented_scan_ref(x)
+def segmented_reduce(x: jax.Array, *, path: str | None = None,
+                     use_pallas: bool | None = None) -> jax.Array:
+    """Sum over the last axis of ``x (..., n)`` -> f32 ``(...,)``."""
+    return pallas_op("segmented_reduce", x, path=path, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# segmented scan
+
+
+def _scan_tile(x: jax.Array, *, interpret: bool = False) -> jax.Array:
     lead = x.shape[:-1]
     n = x.shape[-1]
     flat = _pad_axis(_pad_axis(x.reshape(-1, n), 0, LANES), 1, LANES)
-    out = _scan_kernel(flat, interpret=interp)
-    rows = int(jnp.prod(jnp.array(lead))) if lead else 1
-    return out[:rows, :n].reshape(*lead, n)
+    out = _require_pallas(_scan_kernel, "segmented_scan")(
+        flat, interpret=interpret)
+    return out[: _nrows(lead), :n].reshape(*lead, n)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _rmsnorm_fwd_dispatch(x, w, eps, impl):
-    use, interp = impl
-    if not use:
-        return ref.rmsnorm_ref(x, w, eps=eps)
+def segmented_scan(x: jax.Array, *, path: str | None = None,
+                   use_pallas: bool | None = None) -> jax.Array:
+    """Inclusive prefix-sum over the last axis -> f32, same shape."""
+    return pallas_op("segmented_scan", x, path=path, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# weighted scan (the SSD kernel degenerated to N = P = 1, B = C = 1)
+
+
+def _weighted_scan_tile(x: jax.Array, log_a: jax.Array, *,
+                        interpret: bool = False) -> jax.Array:
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    rows = _nrows(lead)
+    xf = x.reshape(rows, n).astype(jnp.float32)
+    la = log_a.reshape(rows, n).astype(jnp.float32)
+    # state dim N=1 (pad to 8) and head dim P=1 (pad to 128): h is scalar,
+    # b = c = e_1 make the recurrence y_t = h_t = exp(la_t) h_{t-1} + x_t.
+    xp = _pad_axis(_pad_axis(xf[..., None], 2, LANES), 1, LANES)
+    lap = _pad_axis(la, 1, LANES)  # pad with 0 ⇒ decay 1, input 0: harmless
+    e1 = jnp.ones((rows, n, 1), jnp.float32)
+    e1 = _pad_axis(_pad_axis(e1, 2, 8), 1, LANES)
+    y, _ = _require_pallas(_ssd_kernel, "weighted_scan")(
+        xp, lap, e1, e1, interpret=interpret)
+    return y[:, :n, 0].reshape(*lead, n)
+
+
+def weighted_scan(x: jax.Array, log_a: jax.Array, *, path: str | None = None,
+                  use_pallas: bool | None = None) -> jax.Array:
+    """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` -> f32."""
+    return pallas_op("weighted_scan", x, log_a, path=path,
+                     use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm (differentiable: both paths share one custom VJP)
+
+
+def _rmsnorm_tile_fwd(x, w, eps, interpret):
     lead, d = x.shape[:-1], x.shape[-1]
     flat = _pad_axis(x.reshape(-1, d), 0, 128)
-    out = _rmsnorm_kernel(flat, w, eps=eps, interpret=interp)
-    rows = 1
-    for s in lead:
-        rows *= s
-    return out[:rows].reshape(*lead, d)
+    out = _require_pallas(_rmsnorm_kernel, "rmsnorm")(
+        flat, w, eps=eps, interpret=interpret)
+    return out[: _nrows(lead)].reshape(*lead, d)
 
 
-def _rmsnorm_vjp_fwd(x, w, eps, impl):
-    return _rmsnorm_fwd_dispatch(x, w, eps, impl), (x, w)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3))
+def _rmsnorm_dispatch(kind, x, w, eps):
+    if kind == "fused":
+        return ref.rmsnorm_ref(x, w, eps=eps)
+    return _rmsnorm_tile_fwd(x, w, eps, kind == "interpret")
 
 
-def _rmsnorm_vjp_bwd(eps, impl, res, g):
+def _rmsnorm_vjp_fwd(kind, x, w, eps):
+    return _rmsnorm_dispatch(kind, x, w, eps), (x, w)
+
+
+def _rmsnorm_vjp_bwd(kind, eps, res, g):
     # backward through the reference formulation (numerically identical)
     x, w = res
     _, vjp = jax.vjp(lambda xx, ww: ref.rmsnorm_ref(xx, ww, eps=eps), x, w)
     return vjp(g)
 
 
-_rmsnorm_fwd_dispatch.defvjp(_rmsnorm_vjp_fwd, _rmsnorm_vjp_bwd)
+_rmsnorm_dispatch.defvjp(_rmsnorm_vjp_fwd, _rmsnorm_vjp_bwd)
+
+
+def _rmsnorm_tile(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                  interpret: bool = False) -> jax.Array:
+    return _rmsnorm_dispatch("interpret" if interpret else "tile", x, w, eps)
+
+
+def _rmsnorm_fused(x: jax.Array, w: jax.Array, *,
+                   eps: float = 1e-6) -> jax.Array:
+    return _rmsnorm_dispatch("fused", x, w, eps)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            path: str | None = None,
             use_pallas: bool | None = None) -> jax.Array:
     """RMSNorm over the last axis (differentiable; Pallas fwd on TPU)."""
-    return _rmsnorm_fwd_dispatch(x, w, eps, _use_kernel(use_pallas))
+    return pallas_op("rmsnorm", x, w, eps=eps, path=path,
+                     use_pallas=use_pallas)
 
 
-def ssd_scan(
+# ---------------------------------------------------------------------------
+# SSD scan
+
+
+def _ssd_tile(
     x: jax.Array,       # (B, L, H, P)
     dt: jax.Array,      # (B, L, H)    positive step sizes
     a: jax.Array,       # (H,)         negative decay rates
     b: jax.Array,       # (B, L, G, N)
     c: jax.Array,       # (B, L, G, N)
     *,
-    use_pallas: bool | None = None,
+    interpret: bool = False,
 ) -> jax.Array:
-    """Mamba-2 SSD scan -> (B, L, H, P) in the input dtype."""
-    use, interp = _use_kernel(use_pallas)
-    if not use:
-        return ref.ssd_scan_ref(x, dt, a, b, c)
     bsz, seqlen, nheads, hdim = x.shape
     ngroups, nstate = b.shape[2], b.shape[3]
     rep = nheads // ngroups
@@ -133,21 +209,59 @@ def ssd_scan(
     lam = _pad_axis(lam, 1, LANES)
     bb = _pad_axis(_pad_axis(bb, 2, 8), 1, LANES)
     cc = _pad_axis(_pad_axis(cc, 2, 8), 1, LANES)
-    y, _ = _ssd_kernel(xdt, lam, bb, cc, interpret=interp)
+    y, _ = _require_pallas(_ssd_kernel, "ssd_scan")(
+        xdt, lam, bb, cc, interpret=interpret)
     y = y[:, :seqlen, :hdim].reshape(bsz, nheads, seqlen, hdim)
     return jnp.moveaxis(y, 1, 2).astype(x.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, path: str | None = None,
+             use_pallas: bool | None = None) -> jax.Array:
+    """Mamba-2 SSD scan -> (B, L, H, P) in the input dtype."""
+    return pallas_op("ssd_scan", x, dt, a, b, c, path=path,
+                     use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def _attention_tile(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    scale: float | None = None, interpret: bool = False,
+) -> jax.Array:
+    lq, lk = q.shape[2], k.shape[2]
+    if lq % 128 or lk % 128:  # kernel is block-strict; unaligned -> oracle
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    return _require_pallas(_flash_kernel, "attention")(
+        q, k, v, causal=causal, window=window, scale=scale,
+        interpret=interpret)
 
 
 def attention(
     q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal: bool = True, window: int | None = None,
-    scale: float | None = None, use_pallas: bool | None = None,
+    scale: float | None = None, path: str | None = None,
+    use_pallas: bool | None = None,
 ) -> jax.Array:
     """Multi-head attention (B, Hq, Lq, D) x (B, Hkv, Lk, D) -> (B, Hq, Lq, D)."""
-    use, interp = _use_kernel(use_pallas)
-    lq, lk = q.shape[2], k.shape[2]
-    if not use or lq % 128 or lk % 128:
-        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
-                                       scale=scale)
-    return _flash_kernel(q, k, v, causal=causal, window=window, scale=scale,
-                         interpret=interp)
+    return pallas_op("attention", q, k, v, causal=causal, window=window,
+                     scale=scale, path=path, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+backend.register_op("segmented_reduce", tile=_reduce_tile,
+                    fused=ref.segmented_reduce_ref)
+backend.register_op("segmented_scan", tile=_scan_tile,
+                    fused=ref.segmented_scan_ref)
+backend.register_op("weighted_scan", tile=_weighted_scan_tile,
+                    fused=ref.weighted_scan_ref)
+backend.register_op("rmsnorm", tile=_rmsnorm_tile, fused=_rmsnorm_fused)
+backend.register_op("ssd_scan", tile=_ssd_tile, fused=ref.ssd_scan_ref)
+backend.register_op("attention", tile=_attention_tile,
+                    fused=ref.flash_attention_ref)

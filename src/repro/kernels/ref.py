@@ -20,6 +20,22 @@ def segmented_scan_ref(x: jax.Array) -> jax.Array:
     return jnp.cumsum(x.astype(jnp.float32), axis=-1)
 
 
+def weighted_scan_ref(x: jax.Array, log_a: jax.Array) -> jax.Array:
+    """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` along the last
+    axis, f32 accumulation. Oracle for the weighted-scan tile path (the SSD
+    kernel with N = P = 1, B = C = 1)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    x = x.astype(jnp.float32)
+
+    def combine(left, right):
+        a_l, y_l = left
+        a_r, y_r = right
+        return a_l * a_r, y_r + a_r * y_l
+
+    _, y = jax.lax.associative_scan(combine, (a, x), axis=-1)
+    return y
+
+
 def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
     """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * w."""
     xf = x.astype(jnp.float32)

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 Q = 128  # chunk length == MXU edge
 
 
@@ -120,7 +122,7 @@ def ssd_chunk_scan(
             jax.ShapeDtypeStruct((bh, nstate, hdim), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((nstate, hdim), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=backend.compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

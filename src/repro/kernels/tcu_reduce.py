@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 LANES = 128
 SUBLANES = 8
 
@@ -67,7 +69,7 @@ def tcu_segmented_reduce_tn(xt: jax.Array, *, interpret: bool = False) -> jax.Ar
         out_specs=pl.BlockSpec((LANES,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((s,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=backend.compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

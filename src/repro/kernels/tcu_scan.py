@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 LANES = 128
 
 
@@ -70,7 +72,7 @@ def tcu_segmented_scan_tn(x: jax.Array, *, interpret: bool = False) -> jax.Array
         out_specs=pl.BlockSpec((LANES, LANES), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((LANES, LANES), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=backend.compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,35 @@
+"""Version shims for the mesh/sharding surface, sibling of
+``repro.kernels.backend`` (which shims the Pallas surface).
+
+Covers the renames between jax 0.4.x and 0.6+:
+
+* ``shard_map``: ``jax.experimental.shard_map.shard_map`` → ``jax.shard_map``
+* ``jax.make_mesh(..., axis_types=...)``: the kwarg and the
+  ``jax.sharding.AxisType`` enum only exist on 0.6+ (where meshes default to
+  explicit sharding; ``Auto`` restores the 0.4.x behaviour every caller in
+  this repo assumes).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Sequence
+
+import jax
+
+try:                                    # jax >= 0.6
+    shard_map = jax.shard_map
+except AttributeError:                  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              **kwargs) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` pinned to auto (0.4.x-style) axis semantics, with
+    unknown kwargs dropped on older JAX."""
+    params = inspect.signature(jax.make_mesh).parameters
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if ("axis_types" in params and "axis_types" not in kwargs
+            and axis_type is not None):
+        kwargs["axis_types"] = (axis_type.Auto,) * len(tuple(axis_names))
+    kwargs = {k: v for k, v in kwargs.items() if k in params}
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

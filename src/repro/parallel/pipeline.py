@@ -28,10 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:                                    # jax >= 0.6
-    shard_map = jax.shard_map
-except AttributeError:                  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.parallel.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,9 +1,14 @@
-"""Unit + property tests for the paper's matmul-form algebra (repro.core)."""
+"""Unit + property tests for the paper's matmul-form algebra (repro.core).
+
+The property section used to fuzz with ``hypothesis``; tier-1 must survive
+on a clean environment, so those invariants now run over deterministic
+parametrized (size, seed) grids covering the same edge regions (tile
+boundaries, tiny sizes, multi-level recursion depths).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     l_matrix,
@@ -172,11 +177,58 @@ def test_weighted_scan_zero_decay_is_plain_scan():
 
 
 # ---------------------------------------------------------------------------
-# properties (hypothesis)
+# scan small-input path (scan.py: n <= tile, exact-size triangle for n <= 8)
 
 
-@settings(deadline=None, max_examples=25)
-@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1))
+SMALL_NS = [1, 7, 8, 9, 50, 127, 128, 129]
+
+
+@pytest.mark.parametrize("n", SMALL_NS)
+def test_scan_small_inputs_exact(n):
+    """Integer-valued inputs: f32 matmul-form sums are exact, so any padding
+    slip in the ``t_eff = tile if n > 8 else n`` path shows up as != 0."""
+    x = jnp.asarray(
+        np.random.default_rng(n).integers(-50, 50, n), jnp.float32)
+    got = np.asarray(tcu_scan(x))
+    want = np.asarray(jnp.cumsum(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", SMALL_NS)
+def test_scan_small_inputs_exclusive_exact(n):
+    x = jnp.asarray(
+        np.random.default_rng(100 + n).integers(-50, 50, n), jnp.float32)
+    got = np.asarray(tcu_scan(x, exclusive=True))
+    incl = np.asarray(jnp.cumsum(x))
+    want = np.concatenate([[0.0], incl[:-1]]).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", SMALL_NS)
+def test_scan_small_inputs_float(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    got = np.asarray(tcu_scan(x))
+    want = np.asarray(jnp.cumsum(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [7, 50, 129])
+def test_scan_small_inputs_batched(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (3, 2, n))
+    got = np.asarray(tcu_scan(x))
+    want = np.cumsum(np.asarray(x), axis=-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# properties (formerly hypothesis-fuzzed; now deterministic grids)
+
+
+PROP_SIZES = [1, 2, 7, 8, 9, 100, 127, 128, 129, 500, 1000, 2000]
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("n", PROP_SIZES)
 def test_prop_scan_last_equals_reduce(n, seed):
     x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
     last = tcu_scan(x)[-1]
@@ -184,8 +236,8 @@ def test_prop_scan_last_equals_reduce(n, seed):
     np.testing.assert_allclose(last, total, rtol=1e-3, atol=1e-2)
 
 
-@settings(deadline=None, max_examples=25)
-@given(n=st.integers(2, 1500), seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("seed", [2, 3])
+@pytest.mark.parametrize("n", [2, 9, 128, 129, 777, 1500])
 def test_prop_scan_diff_recovers_input(n, seed):
     x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
     s = np.asarray(tcu_scan(x))
@@ -193,30 +245,28 @@ def test_prop_scan_diff_recovers_input(n, seed):
                                rtol=1e-2, atol=1e-2)
 
 
-@settings(deadline=None, max_examples=25)
-@given(n=st.integers(1, 1000), seed=st.integers(0, 2**31 - 1),
-       alpha=st.floats(-3, 3))
-def test_prop_reduce_linear(n, seed, alpha):
-    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+@pytest.mark.parametrize("alpha", [-2.5, 0.0, 0.3, 3.0])
+@pytest.mark.parametrize("n", [1, 100, 1000])
+def test_prop_reduce_linear(n, alpha):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
     a = tcu_reduce(alpha * x)
     b = alpha * tcu_reduce(x)
     np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-2)
 
 
-@settings(deadline=None, max_examples=20)
-@given(n=st.integers(1, 900), pad=st.integers(1, 300),
-       seed=st.integers(0, 2**31 - 1))
-def test_prop_zero_padding_invariance(n, pad, seed):
+@pytest.mark.parametrize("pad", [1, 100, 300])
+@pytest.mark.parametrize("n", [1, 9, 128, 900])
+def test_prop_zero_padding_invariance(n, pad):
     """The paper's arbitrary-segment-size strategy: zero padding does not
     change the reduction (§4.1)."""
-    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(n * 31 + pad), (n,))
     xp = jnp.concatenate([x, jnp.zeros((pad,))])
     np.testing.assert_allclose(tcu_reduce(x), tcu_reduce(xp),
                                rtol=1e-4, atol=1e-3)
 
 
-@settings(deadline=None, max_examples=20)
-@given(n=st.integers(2, 600), seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("seed", [4, 5])
+@pytest.mark.parametrize("n", [2, 8, 127, 129, 600])
 def test_prop_weighted_scan_associative_split(n, seed):
     """Splitting the sequence and carrying the state equals the fused scan —
     the invariant the cross-tile carry chain (and dist_weighted_scan) relies
@@ -269,9 +319,9 @@ def test_ragged_scan_restarts_per_segment():
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
 
-@settings(deadline=None, max_examples=15)
-@given(n=st.integers(2, 400), s=st.integers(1, 12),
-       seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("n,s,seed", [
+    (2, 1, 0), (17, 3, 1), (100, 12, 2), (399, 7, 3), (400, 5, 4),
+])
 def test_prop_ragged_reduce_total_invariant(n, s, seed):
     """Bucketing never changes the grand total (conservation)."""
     from repro.core.ragged import tcu_ragged_segment_reduce

@@ -1,0 +1,209 @@
+"""Dispatch-layer tests: the version shim, path resolution/override, and
+agreement of the fused / tile / interpret paths for reduce, scan, and
+weighted scan (fp32 and bf16)."""
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.kernels import backend, ops, ref
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# version shim
+
+
+def test_compiler_params_resolves_on_this_jax():
+    cp = backend.compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    assert type(cp) is backend.compiler_params_cls()
+    assert tuple(cp.dimension_semantics) == ("parallel", "arbitrary")
+
+
+def test_compiler_params_drops_unknown_fields():
+    # a knob from another JAX era must not crash the shim
+    cp = backend.compiler_params(
+        dimension_semantics=("arbitrary",),
+        some_flag_from_the_future=True)
+    assert not hasattr(cp, "some_flag_from_the_future")
+
+
+def test_no_raw_compiler_params_outside_backend():
+    """Regression guard for the 44-test break: only backend.py may spell
+    out the per-version pltpu compiler-params class."""
+    pat = re.compile(r"pltpu\s*\.\s*(?:TPU)?CompilerParams")
+    offenders = [
+        str(p.relative_to(SRC))
+        for p in sorted(SRC.rglob("*.py"))
+        if p.name != "backend.py" and pat.search(p.read_text())
+    ]
+    assert not offenders, (
+        f"raw pltpu compiler-params construction in {offenders}; "
+        "use repro.kernels.backend.compiler_params instead"
+    )
+
+
+# ---------------------------------------------------------------------------
+# path resolution
+
+
+def test_resolve_path_defaults_off_tpu(monkeypatch):
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
+    if backend.on_tpu():
+        pytest.skip("CPU-only expectations")
+    assert backend.resolve_path() == "fused"
+    assert backend.resolve_path("tile") == "interpret"   # nothing to compile
+    assert backend.resolve_path("interpret") == "interpret"
+    assert backend.resolve_path(use_pallas=True) == "interpret"
+    assert backend.resolve_path(use_pallas=False) == "fused"
+
+
+def test_resolve_path_env_override(monkeypatch):
+    monkeypatch.setenv(backend.ENV_PATH, "interpret")
+    assert backend.resolve_path() == "interpret"
+    assert dispatch.resolve_path() == "interpret"
+    # explicit per-call choice beats the env var
+    assert backend.resolve_path("fused") == "fused"
+    monkeypatch.setenv(backend.ENV_PATH, "baseline")
+    assert dispatch.resolve_path() == "baseline"
+
+
+def test_resolve_path_rejects_unknown():
+    with pytest.raises(ValueError):
+        backend.resolve_path("cuda")
+    with pytest.raises(ValueError):
+        dispatch.resolve_path("warp")
+
+
+def test_pallas_op_unknown_name():
+    with pytest.raises(KeyError):
+        backend.pallas_op("nonexistent_op", jnp.zeros((4,)))
+
+
+def test_registry_has_all_ops():
+    assert set(backend.available_ops()) >= {
+        "segmented_reduce", "segmented_scan", "weighted_scan",
+        "rmsnorm", "ssd_scan", "attention",
+    }
+
+
+# ---------------------------------------------------------------------------
+# path agreement (the acceptance contract: one switch, same numbers)
+
+KERNEL_PATHS = ["fused", "tile", "interpret"]
+
+
+def _tol(dtype):
+    return dict(rtol=1e-4, atol=1e-3) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-1)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("path", KERNEL_PATHS)
+def test_reduce_paths_agree(path, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 300)).astype(dtype)
+    got = np.asarray(ops.segmented_reduce(x, path=path))
+    want = np.asarray(x, np.float32).sum(-1)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("path", KERNEL_PATHS)
+def test_scan_paths_agree(path, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 200)).astype(dtype)
+    got = np.asarray(ops.segmented_scan(x, path=path))
+    want = np.cumsum(np.asarray(x, np.float32), axis=-1)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("path", KERNEL_PATHS)
+def test_weighted_scan_paths_agree(path, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 160)).astype(dtype)
+    la = (-jax.random.uniform(jax.random.PRNGKey(3), (2, 160))).astype(dtype)
+    got = np.asarray(ops.weighted_scan(x, la, path=path))
+    want = np.asarray(
+        ref.weighted_scan_ref(x.astype(jnp.float32), la.astype(jnp.float32)))
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("path", ["fused", "xla_tile", "interpret",
+                                  "baseline"])
+def test_core_dispatch_reduce_scan_one_switch(path):
+    """The benchmark entry contract: every contender from one argument."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, 257))
+    np.testing.assert_allclose(
+        np.asarray(dispatch.reduce(x, path=path)),
+        np.asarray(x).sum(-1), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(dispatch.scan(x, path=path)),
+        np.cumsum(np.asarray(x), -1), rtol=1e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_core_dispatch_scan_exclusive_paths(exclusive):
+    x = jax.random.normal(jax.random.PRNGKey(5), (300,))
+    want = np.asarray(dispatch.scan(x, path="baseline", exclusive=exclusive))
+    for path in ("fused", "interpret"):
+        got = np.asarray(dispatch.scan(x, path=path, exclusive=exclusive))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+def test_core_dispatch_weighted_scan_paths():
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 300))
+    la = -jax.random.uniform(jax.random.PRNGKey(7), (2, 300))
+    want = np.asarray(dispatch.weighted_scan(x, la, path="baseline"))
+    for path in ("fused", "interpret"):
+        got = np.asarray(dispatch.weighted_scan(x, la, path=path))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_core_dispatch_ssd_paths():
+    b, L, h, p, g, n = 1, 100, 2, 8, 1, 4
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    x = 0.2 * jax.random.normal(ks[0], (b, L, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+    a = -jnp.exp(0.2 * jax.random.normal(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (b, L, g, n)) / np.sqrt(n)
+    cc = jax.random.normal(ks[4], (b, L, g, n)) / np.sqrt(n)
+    want = np.asarray(dispatch.ssd(x, dt, a, bb, cc, path="baseline"))
+    for path in ("fused", "interpret"):
+        got = np.asarray(dispatch.ssd(x, dt, a, bb, cc, path=path))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_env_var_steers_op_execution(monkeypatch):
+    """REPRO_KERNEL_PATH reroutes an unannotated call site end to end."""
+    x = jnp.ones((2, 130))
+    monkeypatch.setenv(backend.ENV_PATH, "interpret")
+    got = np.asarray(ops.segmented_reduce(x))
+    monkeypatch.setenv(backend.ENV_PATH, "fused")
+    want = np.asarray(ops.segmented_reduce(x))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    np.testing.assert_allclose(want, 130.0)
+
+
+@pytest.mark.parametrize("envval", ["fused", "tile", "interpret",
+                                    "baseline", "xla_tile"])
+def test_env_values_never_crash_kernel_ops(monkeypatch, envval):
+    """The env var is process-wide and shared with repro.core.dispatch, so
+    its algorithm-level values (baseline/xla_tile) must not blow up
+    kernel-level call sites (e.g. every model's rmsnorm)."""
+    monkeypatch.setenv(backend.ENV_PATH, envval)
+    x = jnp.ones((2, 130))
+    np.testing.assert_allclose(
+        np.asarray(ops.segmented_reduce(x)), 130.0, rtol=1e-6)
+
+
+def test_legacy_use_pallas_kwarg_still_works():
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 100))
+    np.testing.assert_allclose(
+        np.asarray(ops.segmented_reduce(x, use_pallas=True)),
+        np.asarray(ops.segmented_reduce(x, use_pallas=False)),
+        rtol=1e-4, atol=1e-3)

@@ -4,6 +4,7 @@ These need >1 device, so they run in a subprocess with
 ``xla_force_host_platform_device_count`` set before jax initialises —
 the main pytest process keeps the brief-mandated single device.
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -18,10 +19,14 @@ def _run(ndev: int, body: str) -> str:
             "--xla_force_host_platform_device_count={ndev}"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.parallel.compat import make_mesh, shard_map
     """) + textwrap.dedent(body)
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    if "JAX_PLATFORMS" in os.environ:  # keep the parent's backend pin —
+        # without it a TPU-enabled jaxlib probes for hardware and hangs
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=600,
-                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                          text=True, timeout=600, env=env,
                           cwd=__file__.rsplit("/tests/", 1)[0])
     assert proc.returncode == 0, proc.stderr[-3000:]
     return proc.stdout
@@ -30,15 +35,14 @@ def _run(ndev: int, body: str) -> str:
 def test_dist_reduce_correct():
     out = _run(4, """
         from repro.core import dist_reduce
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 2, 512))
 
         def f(xl):
             return dist_reduce(xl, "data")
 
-        r = jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                          out_specs=P())(x)
+        r = shard_map(f, mesh=mesh, in_specs=P("data"),
+                      out_specs=P())(x)
         np.testing.assert_allclose(float(r), float(jnp.sum(x)), rtol=1e-4)
         print("REDUCE_OK")
     """)
@@ -48,15 +52,14 @@ def test_dist_reduce_correct():
 def test_dist_scan_correct():
     out = _run(4, """
         from repro.core import dist_scan
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(1), (3, 2048))
 
         def g(xl):
             return dist_scan(xl, "data")
 
-        s = jax.shard_map(g, mesh=mesh, in_specs=P(None, "data"),
-                          out_specs=P(None, "data"))(x)
+        s = shard_map(g, mesh=mesh, in_specs=P(None, "data"),
+                      out_specs=P(None, "data"))(x)
         np.testing.assert_allclose(
             np.asarray(s), np.cumsum(np.asarray(x), -1),
             rtol=1e-3, atol=1e-2)
@@ -68,17 +71,16 @@ def test_dist_scan_correct():
 def test_dist_weighted_scan_correct():
     out = _run(4, """
         from repro.core import dist_weighted_scan
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(2), (2, 1024))
         la = -jax.random.uniform(jax.random.PRNGKey(3), (2, 1024))
 
         def g(xl, ll):
             return dist_weighted_scan(xl, ll, "data")
 
-        s = jax.shard_map(g, mesh=mesh,
-                          in_specs=(P(None, "data"), P(None, "data")),
-                          out_specs=P(None, "data"))(x, la)
+        s = shard_map(g, mesh=mesh,
+                      in_specs=(P(None, "data"), P(None, "data")),
+                      out_specs=P(None, "data"))(x, la)
         xa, laa = np.asarray(x), np.asarray(la)
         ref = np.zeros_like(xa)
         for r in range(2):
@@ -96,8 +98,7 @@ def test_pipeline_parallel_matches_sequential():
     out = _run(4, """
         from repro.parallel.pipeline import (PipelineConfig, pipeline_apply,
                                              pipeline_stats)
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("stage",))
         S, M, mb, d = 4, 8, 2, 16
         w = jax.random.normal(jax.random.PRNGKey(0), (S, d, d)) * 0.1
 
@@ -130,8 +131,7 @@ def test_training_shards_run_on_mesh():
                                     make_train_step)
         from repro.training.train_lib import train_state_pspecs
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ("data", "model"))
         rules = Rules(table={"batch": ("data",), "heads": "model",
                              "kv_heads": "model", "ff": "model",
                              "vocab": "model", "embed": None,
@@ -169,8 +169,7 @@ def test_elastic_restart_across_mesh_sizes(tmp_path):
         mod = configs.get("llama3.2-1b")
         bundle = build(mod.SMOKE)
         opt_cfg = OptConfig(peak_lr=1e-3, warmup_steps=0, decay_steps=10)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         rules = Rules(table={{"batch": ("data",)}}, fsdp="data",
                       axis_sizes={{"data": 4}})
         with use_rules(rules), mesh:
@@ -193,8 +192,7 @@ def test_elastic_restart_across_mesh_sizes(tmp_path):
         mod = configs.get("llama3.2-1b")
         bundle = build(mod.SMOKE)
         opt_cfg = OptConfig(peak_lr=1e-3, warmup_steps=0, decay_steps=10)
-        mesh = jax.make_mesh((2,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((2,), ("data",))
         rules = Rules(table={{"batch": ("data",)}}, fsdp="data",
                       axis_sizes={{"data": 2}})
         with use_rules(rules), mesh:
