@@ -26,8 +26,10 @@ def run() -> tuple[list, list]:
         cases = {
             "tcu_reduce": lambda a: dispatch.reduce(a, path="xla_tile"),
             "base_reduce": lambda a: dispatch.reduce(a, path="baseline"),
+            "auto_reduce": lambda a: dispatch.reduce(a, path="auto"),
             "tcu_scan": lambda a: dispatch.scan(a, path="fused"),
             "base_scan": lambda a: dispatch.scan(a, path="baseline"),
+            "auto_scan": lambda a: dispatch.scan(a, path="auto"),
         }
         for name, fn in cases.items():
             t = time_fn(jax.jit(fn), x)

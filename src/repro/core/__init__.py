@@ -20,7 +20,7 @@ from repro.core.scan import (
     tcu_segmented_scan,
     tcu_weighted_scan,
 )
-from repro.core import dispatch
+from repro.core import autotune, dispatch
 from repro.core.tiles import (
     DEFAULT_TILE,
     l_matrix,
@@ -33,6 +33,7 @@ from repro.core.tiles import (
 
 __all__ = [
     "DEFAULT_TILE",
+    "autotune",
     "dispatch",
     "dist_exclusive_carry",
     "dist_reduce",

@@ -1,0 +1,412 @@
+"""Shape-aware autotuning for the dispatch layer's ``auto`` path.
+
+The paper's central result (Fig. 10-11) is a *crossover*: the matmul-form
+reduction/scan beats the native vector op by up to 100x at small segment
+sizes and loses the advantage as segments grow. Both TCU-reduction
+follow-ups in PAPERS.md (Navarro et al., Chowdhury et al.) model exactly
+this crossover, which a static "tile on TPU, fused elsewhere" ``auto``
+ignores. This module makes ``auto`` consult a *measured* table instead:
+
+* **Buckets** — a call shape maps to ``{op}/{dtype-tag}/{log2-band}``
+  (e.g. ``reduce/f32/9`` for a 512-element f32 segmented reduce). Bands
+  are powers of two, matching the paper's sweep axes.
+* **Table** — a JSON file mapping bucket -> winning dispatch path, with
+  the raw per-contender timings kept alongside for auditability. Resolution
+  order: ``$REPRO_AUTOTUNE_TABLE`` (explicit file) > the checked-in default
+  (``autotune_default.json``, measured on CPU with kernels in interpret
+  mode) > the built-in heuristic.
+* **Harness** — :func:`measure_table` times every registered contender of
+  ``repro.core.dispatch`` per bucket and records the argmin. Regenerate
+  with ``python -m repro.core.autotune --write``; CI checks the checked-in
+  default for staleness with ``--check``.
+* **Fallbacks** — a table measured on a different backend is ignored; a
+  missing bucket falls back to :func:`heuristic` (deterministic: the
+  paper's small-segment crossover off-TPU, the tile kernel on TPU);
+  ``REPRO_AUTOTUNE=off`` disables table *and* heuristic, restoring the
+  pre-autotune static choice (tile on TPU, fused elsewhere).
+
+Numerical contract: every contender of an op agrees to tolerance (the
+dispatch-path agreement tests), so the table only moves work between
+formulations — it never changes results beyond accumulation order.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from pathlib import Path
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import backend
+
+ENV_AUTOTUNE = "REPRO_AUTOTUNE"          # "off"/"0"/"static" -> static auto
+ENV_TABLE = "REPRO_AUTOTUNE_TABLE"       # path to a JSON table
+DEFAULT_TABLE_PATH = Path(__file__).with_name("autotune_default.json")
+TABLE_VERSION = 1
+MAX_BAND = 20
+
+# Ops with a measured matmul-form vs native-op crossover (the paper's
+# reduction/scan family). Other ops (attention, ssd, rmsnorm) keep the
+# static choice unless a table entry says otherwise.
+CROSSOVER_OPS = ("reduce", "scan", "weighted_scan",
+                 "ragged_reduce", "ragged_scan")
+# Paper Fig. 11: the matmul form wins the small-segment regime; 2^9 is the
+# conservative boundary used when no measurement is available.
+HEURISTIC_CROSSOVER = 512
+
+# Model-level ops whose ``auto`` default keeps the chunked/fused XLA form
+# even on TPU: those forms shard under GSPMD and carry knobs (SSD chunk
+# size, matmul dtype) the Pallas kernels drop, and the flash kernel falls
+# back to the materialised oracle on unaligned lengths. The kernels are
+# opted in explicitly (path="tile") or via a measured table entry.
+FUSED_DEFAULT_OPS = ("attention", "ssd")
+
+# Kernel-registry op names -> the dispatch-level op the table is keyed by.
+_OP_ALIAS = {"segmented_reduce": "reduce", "segmented_scan": "scan"}
+
+# The harness's default measurement grid — shared with check_default so the
+# CI staleness check always validates exactly the bucket set --write emits.
+DEFAULT_BANDS = tuple(range(4, 14))
+DEFAULT_DTYPES = (jnp.float32, jnp.bfloat16)
+
+# Contenders the harness times per op (dispatch-level paths). ``xla_tile``
+# only differs from ``fused`` for reduce (core's scan IS the tile algebra);
+# ``tile`` is appended on TPU; ``interpret`` is validation-only (orders of
+# magnitude slow on CPU) and excluded from measurement.
+OP_CONTENDERS = {
+    "reduce": ("fused", "xla_tile", "baseline"),
+    "scan": ("fused", "baseline"),
+    "weighted_scan": ("fused", "baseline"),
+    "ragged_reduce": ("fused", "baseline"),
+    "ragged_scan": ("fused", "baseline"),
+}
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+
+
+def dtype_tag(dtype: Any) -> str:
+    """Canonical short tag for a dtype (``f32``, ``bf16``, ...)."""
+    if dtype is None:
+        return "f32"
+    name = jnp.dtype(dtype).name
+    return {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
+            "float64": "f64"}.get(name, name)
+
+
+def band(n: int) -> int:
+    """log2 segment-size band, clamped to [0, MAX_BAND]."""
+    return max(0, min(int(math.log2(max(int(n), 1))), MAX_BAND))
+
+
+def bucket_key(op: str, n: int, dtype: Any = None) -> str:
+    return f"{_OP_ALIAS.get(op, op)}/{dtype_tag(dtype)}/{band(n)}"
+
+
+# ---------------------------------------------------------------------------
+# table load / save
+
+
+_TABLE_CACHE: dict[str, dict | None] = {}
+
+
+def invalidate_cache() -> None:
+    _TABLE_CACHE.clear()
+
+
+def _valid_paths() -> tuple[str, ...]:
+    # dispatch-level paths minus "auto" (a table must be fully resolved)
+    return ("fused", "xla_tile", "tile", "interpret", "baseline")
+
+
+def load_table(path: str | Path) -> dict:
+    """Load and validate a table; raises ValueError on a malformed file."""
+    with open(path) as f:
+        table = json.load(f)
+    if not isinstance(table, dict) or table.get("version") != TABLE_VERSION:
+        raise ValueError(
+            f"autotune table {path}: version {table.get('version')!r} != "
+            f"{TABLE_VERSION}")
+    entries = table.get("entries")
+    if not isinstance(entries, dict) or not entries:
+        raise ValueError(f"autotune table {path}: no entries")
+    ok = _valid_paths()
+    for key, ent in entries.items():
+        if not isinstance(ent, dict) or ent.get("path") not in ok:
+            raise ValueError(
+                f"autotune table {path}: entry {key!r} has invalid path "
+                f"{ent.get('path') if isinstance(ent, dict) else ent!r}")
+    return table
+
+
+def save_table(table: dict, path: str | Path) -> None:
+    with open(path, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+        f.write("\n")
+    invalidate_cache()
+
+
+def table_path() -> Path | None:
+    """The active table file: $REPRO_AUTOTUNE_TABLE, else the default."""
+    env = os.environ.get(ENV_TABLE, "").strip()
+    if env:
+        return Path(env)
+    return DEFAULT_TABLE_PATH if DEFAULT_TABLE_PATH.exists() else None
+
+
+def current_table() -> dict | None:
+    """The active, validated table (cached per path), or None."""
+    path = table_path()
+    if path is None:
+        return None
+    key = str(path)
+    if key not in _TABLE_CACHE:
+        try:
+            _TABLE_CACHE[key] = load_table(path)
+        except (OSError, ValueError, json.JSONDecodeError):
+            _TABLE_CACHE[key] = None
+    return _TABLE_CACHE[key]
+
+
+def enabled() -> bool:
+    """False when ``REPRO_AUTOTUNE`` asks for the static heuristic."""
+    return os.environ.get(ENV_AUTOTUNE, "").strip().lower() not in (
+        "off", "0", "static", "false")
+
+
+# ---------------------------------------------------------------------------
+# resolution
+
+
+def heuristic(op: str, n: int, dtype: Any = None,
+              candidates: Iterable[str] | None = None) -> str:
+    """Deterministic shape-aware fallback (no measurement needed).
+
+    On TPU the tile kernel is native for the reduction/scan family;
+    model-level ops (``FUSED_DEFAULT_OPS``) keep their chunked XLA forms
+    there (see that constant for why). Off-TPU the paper's crossover
+    applies to the reduction/scan family: matmul-form ``fused`` for small
+    segments, the native XLA op beyond ``HEURISTIC_CROSSOVER``. Everything
+    else keeps the static ``fused``.
+    """
+    op = _OP_ALIAS.get(op, op)
+    if op in FUSED_DEFAULT_OPS:
+        want = "fused"
+    elif backend.on_tpu() and backend.has_pallas_tpu():
+        want = "tile"
+    elif op in CROSSOVER_OPS and n > HEURISTIC_CROSSOVER:
+        want = "baseline"
+    else:
+        want = "fused"
+    if candidates is not None:
+        cands = tuple(candidates)
+        if want not in cands:
+            for fb in ("fused", "tile", "interpret", "baseline"):
+                if fb in cands:
+                    return fb
+    return want
+
+
+# dispatch-level path labels -> the kernel-level implementation that runs
+# the same code. backend's "fused" is the native-op reference in ref.py —
+# i.e. the dispatch layer's "baseline"; the matmul forms ("fused"/
+# "xla_tile") live in repro.core and have no kernel-registry twin.
+_KERNEL_EQUIV = {"baseline": "fused", "tile": "tile",
+                 "interpret": "interpret"}
+
+
+def choose(op: str, n: int, dtype: Any = None,
+           candidates: Iterable[str] | None = None, *,
+           level: str = "dispatch") -> str | None:
+    """Resolve ``auto`` for one call shape.
+
+    Returns a concrete path, or None when autotuning is disabled
+    (``REPRO_AUTOTUNE=off``) — the caller then applies the static choice.
+    A table measured on a different backend is ignored (its crossovers do
+    not transfer); a missing bucket falls back to :func:`heuristic`.
+
+    ``level="kernel"`` translates the table's dispatch-level labels onto
+    the kernel registry's implementations via ``_KERNEL_EQUIV`` (a naive
+    label pass-through would hand backend's native-op "fused" a bucket the
+    *matmul-form* "fused" won); when the measured winner has no kernel
+    twin, the fastest recorded contender that does is chosen instead.
+    """
+    if not enabled():
+        return None
+    table = current_table()
+    if table is not None and table.get("backend") == jax.default_backend():
+        ent = table["entries"].get(bucket_key(op, n, dtype))
+        if ent is not None:
+            if level == "kernel":
+                if ent["path"] in _KERNEL_EQUIV:
+                    return _KERNEL_EQUIV[ent["path"]]
+                us = {k: v for k, v in (ent.get("us") or {}).items()
+                      if k in _KERNEL_EQUIV}
+                if us:
+                    return _KERNEL_EQUIV[min(us, key=us.get)]
+            else:
+                path = ent["path"]
+                if candidates is None or path in tuple(candidates):
+                    return path
+    return heuristic(op, n, dtype, candidates)
+
+
+# ---------------------------------------------------------------------------
+# measurement harness
+
+
+def _time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call of a jit'd fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _bench_inputs(op: str, n: int, dtype, rng: jax.Array):
+    """Representative arguments for one (op, segment-size) bucket."""
+    rows = max(4, min(4096, (1 << 16) // n))
+    k1, k2 = jax.random.split(rng)
+    if op in ("reduce", "scan"):
+        return (jax.random.normal(k1, (rows, n)).astype(dtype),)
+    if op == "weighted_scan":
+        x = jax.random.normal(k1, (rows, n)).astype(dtype)
+        la = (-jax.random.uniform(k2, (rows, n))).astype(dtype)
+        return (x, la)
+    if op in ("ragged_reduce", "ragged_scan"):
+        s = min(128, max(2, n // 16))
+        x = jax.random.normal(k1, (n,)).astype(dtype)
+        seg = jnp.sort(jax.random.randint(k2, (n,), 0, s))
+        return (x, seg, s)
+    raise ValueError(op)
+
+
+def measure_table(
+    *,
+    ops: Iterable[str] = tuple(OP_CONTENDERS),
+    bands: Iterable[int] = DEFAULT_BANDS,
+    dtypes: Iterable[Any] = DEFAULT_DTYPES,
+    iters: int = 3,
+) -> dict:
+    """Time every contender per (op, dtype, band) bucket -> table dict.
+
+    Runs through ``repro.core.dispatch`` (the same entry every consumer
+    uses), so the table steers exactly what it measured.
+    """
+    from repro.core import dispatch  # deferred: dispatch imports us
+
+    fns = {
+        "reduce": dispatch.reduce,
+        "scan": dispatch.scan,
+        "weighted_scan": dispatch.weighted_scan,
+        "ragged_reduce": dispatch.ragged_reduce,
+        "ragged_scan": dispatch.ragged_scan,
+    }
+    on_tpu = backend.on_tpu() and backend.has_pallas_tpu()
+    entries: dict[str, dict] = {}
+    rng = jax.random.PRNGKey(0)
+    for op in ops:
+        contenders = OP_CONTENDERS[op]
+        if on_tpu and op in ("reduce", "scan", "weighted_scan"):
+            contenders = contenders + ("tile",)
+        for dtype in dtypes:
+            for b in bands:
+                n = 1 << b
+                rng, sub = jax.random.split(rng)
+                args = _bench_inputs(op, n, dtype, sub)
+                timings = {}
+                for path in contenders:
+                    if op in ("ragged_reduce", "ragged_scan"):
+                        x, seg, s = args
+                        fn = jax.jit(
+                            lambda a, i, p=path, o=op: fns[o](
+                                a, i, s, path=p))
+                        timings[path] = _time_fn(fn, x, seg, iters=iters)
+                    else:
+                        fn = jax.jit(
+                            lambda *a, p=path, o=op: fns[o](*a, path=p))
+                        timings[path] = _time_fn(fn, *args, iters=iters)
+                winner = min(timings, key=timings.get)
+                entries[bucket_key(op, n, dtype)] = {
+                    "path": winner,
+                    "us": {k: round(v * 1e6, 2) for k, v in timings.items()},
+                }
+    return {
+        "version": TABLE_VERSION,
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "entries": entries,
+    }
+
+
+def check_default(default_path: str | Path = DEFAULT_TABLE_PATH) -> list[str]:
+    """Structural staleness check for the checked-in default table.
+
+    Parses/validates the file and regenerates the *key set* the harness
+    would produce today (no timing involved); returns a list of problems
+    (empty = fresh). Winning paths are machine-dependent and deliberately
+    not compared.
+    """
+    problems: list[str] = []
+    try:
+        table = load_table(default_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        return [f"unparseable: {e}"]
+    want = set()
+    for op in OP_CONTENDERS:
+        for dtype in DEFAULT_DTYPES:
+            for b in DEFAULT_BANDS:
+                want.add(bucket_key(op, 1 << b, dtype))
+    have = set(table["entries"])
+    if missing := sorted(want - have):
+        problems.append(f"missing buckets: {missing}")
+    if extra := sorted(have - want):
+        problems.append(f"stale buckets: {extra}")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Measure/refresh the dispatch autotune table.")
+    ap.add_argument("--write", action="store_true",
+                    help="measure and write the table")
+    ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH),
+                    help="output path for --write")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the checked-in default parses and matches "
+                         "the harness's bucket set (exit 1 if stale)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    if args.check:
+        problems = check_default()
+        for p in problems:
+            print(f"STALE: {p}")
+        if not problems:
+            print(f"autotune default table OK ({DEFAULT_TABLE_PATH})")
+        return 1 if problems else 0
+    if args.write:
+        table = measure_table(iters=args.iters)
+        save_table(table, args.out)
+        n = len(table["entries"])
+        print(f"wrote {n} buckets to {args.out} "
+              f"(backend={table['backend']}, jax={table['jax']})")
+        return 0
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,18 +2,23 @@
 
 ``repro.kernels.backend`` answers "which *implementation* of a kernel runs"
 (fused XLA vs Pallas tile vs interpret). This module sits one level up and
-also exposes the *algorithmic* contenders the paper compares, so benchmarks
-and tests get every fused-vs-tile-vs-kernel comparison from a single
-``path=`` argument instead of ad-hoc imports:
+also exposes the *algorithmic* contenders the paper compares, so benchmarks,
+models, optimizers, and the serving engine get every fused-vs-tile-vs-kernel
+comparison from a single ``path=`` argument instead of ad-hoc imports:
 
   ``fused``      beyond-paper fused matmul form (repro.core, XLA)
   ``xla_tile``   paper-faithful tile algebra in pure XLA (repro.core)
   ``tile``       explicit Pallas tile kernel (native on TPU)
   ``interpret``  Pallas kernel body through the interpreter (CPU validation)
-  ``baseline``   XLA's native vector op (jnp.sum / jnp.cumsum / sequential)
-  ``auto``       ``tile`` on TPU, ``fused`` otherwise
+  ``baseline``   XLA's native vector op (jnp.sum / jnp.cumsum / segment_sum
+                 / sequential scan)
+  ``auto``       per-shape measured choice via ``repro.core.autotune``
+                 (falls back to the static "tile on TPU, fused elsewhere"
+                 when ``REPRO_AUTOTUNE=off`` or no shape is known)
 
-``path=None`` defers to ``REPRO_KERNEL_PATH``, then ``auto``.
+``path=None`` defers to ``REPRO_KERNEL_PATH``, then ``auto``. Every op here
+is shape-bucketed for the autotuner by its *segment size* (trailing-axis
+length; sequence length for attention/ssd).
 """
 from __future__ import annotations
 
@@ -22,6 +27,12 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
+from repro.core.ragged import (
+    guard_contiguous,
+    tcu_ragged_segment_reduce,
+    tcu_ragged_segment_scan,
+)
 from repro.core.reduce import tcu_segmented_reduce
 from repro.core.scan import tcu_scan, tcu_weighted_scan
 from repro.core.ssd import ssd_chunked
@@ -30,13 +41,21 @@ from repro.kernels import backend, ops, ref
 PATHS = ("auto", "fused", "xla_tile", "tile", "interpret", "baseline")
 
 
-def resolve_path(path: str | None = None) -> str:
+def resolve_path(path: str | None = None, *, op: str | None = None,
+                 n: int | None = None, dtype=None) -> str:
     """Like :func:`backend.resolve_path` but admitting the two extra
-    algorithm-level paths (``xla_tile``, ``baseline``)."""
+    algorithm-level paths (``xla_tile``, ``baseline``).
+
+    ``op``/``n``/``dtype`` describe the call shape: with them, ``auto``
+    resolves through the measured per-shape crossover table
+    (:mod:`repro.core.autotune`) instead of the static TPU check.
+    """
     if path is None:
         path = os.environ.get(backend.ENV_PATH, "").strip().lower() or "auto"
     if path not in PATHS:
         raise ValueError(f"unknown path {path!r}; expected one of {PATHS}")
+    if path == "auto" and op is not None and n is not None:
+        path = autotune.choose(op, n, dtype) or "auto"
     if path in ("xla_tile", "baseline"):
         return path
     return backend.resolve_path(path)
@@ -44,7 +63,7 @@ def resolve_path(path: str | None = None) -> str:
 
 def reduce(x: jax.Array, *, path: str | None = None) -> jax.Array:
     """Segmented sum over the last axis -> f32 ``(...,)``."""
-    p = resolve_path(path)
+    p = resolve_path(path, op="reduce", n=x.shape[-1], dtype=x.dtype)
     if p == "fused":
         return tcu_segmented_reduce(x, formulation="fused")
     if p == "xla_tile":
@@ -57,25 +76,26 @@ def reduce(x: jax.Array, *, path: str | None = None) -> jax.Array:
 def scan(x: jax.Array, *, path: str | None = None,
          exclusive: bool = False) -> jax.Array:
     """Prefix sum over the last axis -> f32, same shape."""
-    p = resolve_path(path)
+    p = resolve_path(path, op="scan", n=x.shape[-1], dtype=x.dtype)
     if p in ("fused", "xla_tile"):  # core's scan IS the tile algebra, fused
         return tcu_scan(x, exclusive=exclusive)
     if p == "baseline":
         out = jnp.cumsum(x.astype(jnp.float32), axis=-1)
-        if exclusive:
-            out = jnp.concatenate(
-                [jnp.zeros_like(out[..., :1]), out[..., :-1]], axis=-1)
-        return out
-    out = ops.segmented_scan(x, path=p)
+    else:
+        out = ops.segmented_scan(x, path=p)
     if exclusive:
-        out = out - x.astype(out.dtype)
+        # shift, never subtract: reconstructing the exclusive scan as
+        # ``inclusive - x`` cancels catastrophically when |x_i| dwarfs the
+        # running prefix (the prefix is absorbed into x_i's rounding)
+        out = jnp.concatenate(
+            [jnp.zeros_like(out[..., :1]), out[..., :-1]], axis=-1)
     return out
 
 
 def weighted_scan(x: jax.Array, log_a: jax.Array, *,
                   path: str | None = None) -> jax.Array:
     """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` -> f32."""
-    p = resolve_path(path)
+    p = resolve_path(path, op="weighted_scan", n=x.shape[-1], dtype=x.dtype)
     if p in ("fused", "xla_tile"):
         return tcu_weighted_scan(x, log_a)
     if p == "baseline":
@@ -83,13 +103,124 @@ def weighted_scan(x: jax.Array, log_a: jax.Array, *,
     return ops.weighted_scan(x, log_a, path=p)
 
 
-def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
-        c: jax.Array, *, path: str | None = None) -> jax.Array:
-    """Mamba-2 SSD scan -> (B, L, H, P); ``baseline`` is the sequential
-    recurrence, ``fused``/``xla_tile`` the pure-XLA chunked form."""
-    p = resolve_path(path)
-    if p in ("fused", "xla_tile"):
-        return ssd_chunked(x, dt, a, b, c)[0]
+# ---------------------------------------------------------------------------
+# ragged (irregular) segments — the paper's footnote-4 case
+
+
+def ragged_reduce(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
+                  path: str | None = None) -> jax.Array:
+    """Bucketed segmented sum: ``x (..., n)`` + ``seg_ids`` -> f32
+    ``(..., n_segments)``.
+
+    ``fused``/``xla_tile`` is the one-hot matmul form (one MXU pass, no
+    scatter); ``baseline`` is ``jax.ops.segment_sum``. There is no Pallas
+    ragged kernel yet, so ``tile``/``interpret`` run the matmul form.
+    ``seg_ids`` may carry leading batch dims; any id order is valid.
+    """
+    p = resolve_path(path, op="ragged_reduce", n=x.shape[-1], dtype=x.dtype)
     if p == "baseline":
-        return ref.ssd_scan_ref(x, dt, a, b, c)
-    return ops.ssd_scan(x, dt, a, b, c, path=p)
+        return _segment_sum_baseline(x, seg_ids, n_segments)
+    return tcu_ragged_segment_reduce(x, seg_ids, n_segments)
+
+
+def ragged_scan(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
+                path: str | None = None, debug: bool = False) -> jax.Array:
+    """Within-segment inclusive prefix sum -> f32, same shape as ``x``.
+
+    Requires non-decreasing ``seg_ids`` on *every* path (see
+    ``tcu_ragged_segment_scan`` for the contract; ``debug=True`` validates).
+    ``fused``/``xla_tile`` is the matmul form; ``baseline`` composes
+    ``jnp.cumsum`` + ``segment_sum`` + a gather. ``tile``/``interpret``
+    run the matmul form (no Pallas ragged kernel yet).
+    """
+    p = resolve_path(path, op="ragged_scan", n=x.shape[-1], dtype=x.dtype)
+    if p == "baseline":
+        out = _ragged_scan_baseline(x, seg_ids, n_segments)
+        return guard_contiguous(seg_ids, out) if debug else out
+    return tcu_ragged_segment_scan(x, seg_ids, n_segments, debug=debug)
+
+
+def _segment_sum_baseline(x: jax.Array, seg_ids: jax.Array,
+                          n_segments: int) -> jax.Array:
+    """``jax.ops.segment_sum`` over the trailing axis, batched as needed."""
+    xf = x.astype(jnp.float32)
+    if seg_ids.ndim == 1:
+        out = jax.ops.segment_sum(jnp.moveaxis(xf, -1, 0), seg_ids,
+                                  num_segments=n_segments)
+        return jnp.moveaxis(out, 0, -1)
+    n = x.shape[-1]
+    ids = jnp.broadcast_to(seg_ids, xf.shape).reshape(-1, n)
+    flat = xf.reshape(-1, n)
+    out = jax.vmap(
+        lambda a, i: jax.ops.segment_sum(a, i, num_segments=n_segments)
+    )(flat, ids)
+    return out.reshape(*xf.shape[:-1], n_segments)
+
+
+def _ragged_scan_baseline(x: jax.Array, seg_ids: jax.Array,
+                          n_segments: int) -> jax.Array:
+    """Global cumsum minus gathered preceding-segment totals (native ops)."""
+    xf = x.astype(jnp.float32)
+    gs = jnp.cumsum(xf, axis=-1)
+    totals = _segment_sum_baseline(x, seg_ids, n_segments)   # (..., S)
+    prior = jnp.concatenate(
+        [jnp.zeros_like(totals[..., :1]),
+         jnp.cumsum(totals, axis=-1)[..., :-1]], axis=-1)
+    ids = jnp.broadcast_to(seg_ids, xf.shape)
+    return gs - jnp.take_along_axis(prior, ids, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# model-level ops (attention, SSD)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None,
+              path: str | None = None) -> jax.Array:
+    """Multi-head attention in model layout: ``q (B, Sq, Hq, D)``,
+    ``k``/``v`` ``(B, Sk, Hkv, D)`` -> ``(B, Sq, Hq, D)``.
+
+    ``fused``/``xla_tile`` is the blocked online-softmax XLA path
+    (shards under GSPMD; its row-sums already ride the paper's P-matrix
+    reduction); ``tile``/``interpret`` the Pallas flash kernel;
+    ``baseline`` plain materialised softmax attention.
+    """
+    p = resolve_path(path, op="attention", n=q.shape[1], dtype=q.dtype)
+    if p in ("fused", "xla_tile"):
+        from repro.models.xla_attention import chunked_attention  # lazy: cycle
+
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    t = lambda a: jnp.swapaxes(a, 1, 2)  # model (B,S,H,D) <-> kernel (B,H,S,D)
+    if p == "baseline":
+        return t(ref.flash_attention_ref(t(q), t(k), t(v), causal=causal,
+                                         window=window, scale=scale))
+    return t(ops.attention(t(q), t(k), t(v), causal=causal, window=window,
+                           scale=scale, path=p))
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, path: str | None = None,
+        chunk: int | None = None, matmul_dtype=None,
+        return_state: bool = False):
+    """Mamba-2 SSD scan -> ``y (B, L, H, P)``; with ``return_state=True``
+    also the final state ``(B, H, P, N)`` f32 (prefill -> decode handoff).
+
+    ``baseline`` is the sequential recurrence, ``fused``/``xla_tile`` the
+    pure-XLA chunked form, ``tile``/``interpret`` the Pallas kernel.
+    ``chunk``/``matmul_dtype`` tune the chunked XLA form only (the Pallas
+    kernel's chunk is fixed at the MXU edge).
+    """
+    p = resolve_path(path, op="ssd", n=x.shape[1], dtype=x.dtype)
+    if p in ("fused", "xla_tile"):
+        kw = {}
+        if chunk is not None:
+            kw["chunk"] = chunk
+        if matmul_dtype is not None:
+            kw["matmul_dtype"] = matmul_dtype
+        y, h_last = ssd_chunked(x, dt, a, b, c, **kw)
+        return (y, h_last) if return_state else y
+    if p == "baseline":
+        return ref.ssd_scan_ref(x, dt, a, b, c, return_state=return_state)
+    return ops.ssd_scan(x, dt, a, b, c, path=p, return_state=return_state)

@@ -14,6 +14,9 @@ regular matmul-form scan with a segment-restart correction: within-segment
 prefix = global prefix minus the segment's preceding total, which is one
 more one-hot matmul.
 
+``seg_ids`` may carry leading batch dims (broadcast against ``x``) — the
+MoE router uses per-group expert assignments this way.
+
 Cost: O(n * n_segments) MXU flops — the paper's GEMV trade ("resource and
 computation waste" tolerated because the matrix unit is otherwise idle);
 for n_segments <= a few thousand this stays memory-bound like everything
@@ -28,43 +31,78 @@ from repro.core.scan import tcu_scan
 
 
 def _onehot(seg_ids: jax.Array, n_segments: int, dtype) -> jax.Array:
-    """O[i, s] = 1[seg_ids[i] == s], built from iota (traceable)."""
+    """O[..., i, s] = 1[seg_ids[..., i] == s], built from iota (traceable)."""
     cols = jax.lax.broadcasted_iota(jnp.int32, (seg_ids.shape[-1],
                                                 n_segments), 1)
     return (seg_ids[..., None] == cols).astype(dtype)
+
+
+def guard_contiguous(seg_ids: jax.Array, out: jax.Array) -> jax.Array:
+    """Validity gate for contiguous-segment algorithms (debug path).
+
+    Checks ``seg_ids`` is non-decreasing along the last axis — the exact
+    precondition of the prefix-minus-preceding-totals scan. With concrete
+    (non-traced) ids this raises ``ValueError`` eagerly; under ``jit`` the
+    check stays traceable and *poisons the output with NaN* instead (a
+    traced value cannot raise), so bad ids are loud in either mode.
+    """
+    ok = jnp.all(seg_ids[..., 1:] >= seg_ids[..., :-1])
+    try:
+        concrete = bool(ok)
+    except jax.errors.ConcretizationTypeError:
+        return jnp.where(ok, out, jnp.nan)
+    if not concrete:
+        raise ValueError(
+            "tcu_ragged_segment_scan: seg_ids must be non-decreasing "
+            "(contiguous segments); sort inputs by segment first or use "
+            "tcu_ragged_segment_reduce, which accepts any order")
+    return out
 
 
 def tcu_ragged_segment_reduce(x: jax.Array, seg_ids: jax.Array,
                               n_segments: int) -> jax.Array:
     """Sum ``x (..., n)`` into ``(..., n_segments)`` buckets by ``seg_ids``.
 
-    Matmul-form: ``out = x @ O`` — one MXU pass, no scatter.
+    Matmul-form: ``out = x @ O`` — one MXU pass, no scatter. ``seg_ids``
+    may be ``(n,)`` or batched ``(..., n)``; any id order is valid
+    (bucketing is order-free). Ids outside ``[0, n_segments)`` contribute
+    nowhere (their one-hot row is all zero).
     """
     o = _onehot(seg_ids, n_segments, jnp.float32)
-    return jax.lax.dot_general(
-        x.astype(jnp.float32), o,
-        (((x.ndim - 1,), (o.ndim - 2,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    return jnp.einsum("...i,...is->...s", x.astype(jnp.float32), o,
+                      preferred_element_type=jnp.float32)
 
 
 def tcu_ragged_segment_scan(x: jax.Array, seg_ids: jax.Array,
-                            n_segments: int) -> jax.Array:
+                            n_segments: int, *,
+                            debug: bool = False) -> jax.Array:
     """Within-segment inclusive prefix sum for contiguous ragged segments.
 
     ``y_i = sum_{j <= i, seg[j] == seg[i]} x_j`` — the global matmul-form
     scan minus each segment's preceding total, where the preceding totals
     are an exclusive ragged reduce re-broadcast through the one-hot
     (two more matmuls; everything stays on the MXU).
+
+    Contract: ``seg_ids`` MUST be non-decreasing along the last axis
+    (each segment occupies one contiguous run, segments in ascending id
+    order) — the correction subtracts the totals of all *lower-id*
+    segments, which only matches "preceding positions" for sorted ids.
+    Non-contiguous ids silently produce wrong values; pass ``debug=True``
+    to validate (eager ``ValueError``, or NaN-poisoned output under jit —
+    see :func:`guard_contiguous`). The check is one compare-and-reduce
+    over ``seg_ids``, cheap enough for test/debug builds but off the hot
+    path by default.
     """
     xf = x.astype(jnp.float32)
     global_scan = tcu_scan(xf)                               # (..., n)
-    o = _onehot(seg_ids, n_segments, jnp.float32)            # (n, S)
-    totals = jax.lax.dot_general(                            # (..., S)
-        xf, o, (((x.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    o = _onehot(seg_ids, n_segments, jnp.float32)            # (..., n, S)
+    totals = jnp.einsum("...i,...is->...s", xf, o,
+                        preferred_element_type=jnp.float32)  # (..., S)
     # exclusive totals of *preceding* segments, then re-broadcast per elem
     prior = tcu_scan(totals, exclusive=True)                 # (..., S)
-    offset = jax.lax.dot_general(                            # (..., n)
-        prior, o.T, (((prior.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    return global_scan - offset
+    offset = jnp.einsum("...s,...is->...i", prior, o,
+                        preferred_element_type=jnp.float32)  # (..., n)
+    out = global_scan - offset
+    if debug:
+        out = guard_contiguous(seg_ids, out)
+    return out

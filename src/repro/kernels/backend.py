@@ -18,13 +18,19 @@ call site picks its execution path through one switch:
   ``auto``       ``tile`` on TPU, ``fused`` otherwise
 
 Selection precedence: per-call ``path=`` kwarg > per-call legacy
-``use_pallas=`` bool > ``REPRO_KERNEL_PATH`` env var > ``auto``.
+``use_pallas=`` bool > ``REPRO_KERNEL_PATH`` env var > ``auto``. Passing
+both ``path=`` and ``use_pallas=`` with conflicting values warns and honours
+``path=``. ``auto`` consults the measured per-shape crossover table in
+``repro.core.autotune`` when the call shape is known, falling back to the
+static choice (tile on TPU, fused elsewhere) otherwise or when
+``REPRO_AUTOTUNE=off``.
 """
 from __future__ import annotations
 
 import dataclasses
 import inspect
 import os
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -101,15 +107,32 @@ _DISPATCH_ONLY = ("baseline", "xla_tile")
 
 
 def resolve_path(path: str | None = None, *,
-                 use_pallas: bool | None = None) -> str:
+                 use_pallas: bool | None = None,
+                 op: str | None = None, n: int | None = None,
+                 dtype: Any = None) -> str:
     """Resolve a concrete execution path: ``fused`` | ``tile`` | ``interpret``.
 
     ``path`` is the explicit per-call choice; ``use_pallas`` is the legacy
     bool (True → kernel, False → fused, None → unspecified); with neither,
-    ``$REPRO_KERNEL_PATH`` applies, then ``auto``.
+    ``$REPRO_KERNEL_PATH`` applies, then ``auto``. When both are passed
+    with conflicting values, ``path=`` wins and a ``UserWarning`` is
+    emitted (``path='interpret'`` with ``use_pallas=True`` is *not* a
+    conflict — interpret runs the same kernel body).
+
+    ``op``/``n``/``dtype`` describe the call shape; with them, ``auto``
+    consults the measured crossover table (``repro.core.autotune``)
+    instead of the static TPU check.
     """
-    if path is None and use_pallas is not None:
-        path = "tile" if use_pallas else "fused"
+    if use_pallas is not None:
+        implied = "tile" if use_pallas else "fused"
+        if path is None:
+            path = implied
+        elif (use_pallas and path == "fused") or \
+                (not use_pallas and path in ("tile", "interpret")):
+            warnings.warn(
+                f"conflicting path={path!r} and use_pallas={use_pallas}; "
+                "path= takes precedence (use_pallas= is legacy)",
+                UserWarning, stacklevel=3)
     if path is None:
         path = os.environ.get(ENV_PATH, "").strip().lower() or "auto"
         if path in _DISPATCH_ONLY:
@@ -117,7 +140,14 @@ def resolve_path(path: str | None = None, *,
     if path not in PATHS:
         raise ValueError(f"unknown kernel path {path!r}; expected one of {PATHS}")
     if path == "auto":
-        path = "tile" if on_tpu() and has_pallas_tpu() else "fused"
+        choice = None
+        if op is not None and n is not None:
+            from repro.core import autotune  # deferred: autotune imports us
+
+            choice = autotune.choose(op, n, dtype,
+                                     candidates=("fused", "tile", "interpret"),
+                                     level="kernel")
+        path = choice or ("tile" if on_tpu() and has_pallas_tpu() else "fused")
     if path == "tile" and not on_tpu():
         path = "interpret"  # nothing to compile the tile kernel for
     return path
@@ -160,11 +190,28 @@ def available_ops() -> list[str]:
     return sorted(_REGISTRY)
 
 
+# ops whose first argument's trailing dim IS the segment size the autotune
+# table buckets by; for the rest (attention: head dim, ssd_scan: different
+# op key at the dispatch level) auto stays static rather than consulting
+# the wrong bucket
+_SIZE_IS_LAST_DIM = ("segmented_reduce", "segmented_scan", "weighted_scan")
+
+
 def pallas_op(name: str, *args: Any, path: str | None = None,
               use_pallas: bool | None = None, **kwargs: Any) -> Any:
-    """Run a registered op through the path switch (see module docstring)."""
+    """Run a registered op through the path switch (see module docstring).
+
+    For the reduction/scan family the first array argument's trailing
+    dimension is the op's segment size, enabling shape-aware ``auto``.
+    """
     op = get_op(name)
-    p = resolve_path(path, use_pallas=use_pallas)
+    n = dt = None
+    if name in _SIZE_IS_LAST_DIM:
+        for a in args:
+            if hasattr(a, "shape") and getattr(a, "ndim", 0) >= 1:
+                n, dt = a.shape[-1], a.dtype
+                break
+    p = resolve_path(path, use_pallas=use_pallas, op=name, n=n, dtype=dt)
     if p == "fused":
         return op.fused(*args, **kwargs)
     return op.tile(*args, interpret=(p == "interpret"), **kwargs)

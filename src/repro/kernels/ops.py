@@ -191,8 +191,9 @@ def _ssd_tile(
     b: jax.Array,       # (B, L, G, N)
     c: jax.Array,       # (B, L, G, N)
     *,
+    return_state: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     bsz, seqlen, nheads, hdim = x.shape
     ngroups, nstate = b.shape[2], b.shape[3]
     rep = nheads // ngroups
@@ -209,18 +210,25 @@ def _ssd_tile(
     lam = _pad_axis(lam, 1, LANES)
     bb = _pad_axis(_pad_axis(bb, 2, 8), 1, LANES)
     cc = _pad_axis(_pad_axis(cc, 2, 8), 1, LANES)
-    y, _ = _require_pallas(_ssd_kernel, "ssd_scan")(
+    y, state = _require_pallas(_ssd_kernel, "ssd_scan")(
         xdt, lam, bb, cc, interpret=interpret)
     y = y[:, :seqlen, :hdim].reshape(bsz, nheads, seqlen, hdim)
-    return jnp.moveaxis(y, 1, 2).astype(x.dtype)
+    y = jnp.moveaxis(y, 1, 2).astype(x.dtype)
+    if not return_state:
+        return y
+    # kernel state is (B*H, N_pad, P_pad); zero-padding of b/x keeps the
+    # valid block exact — slice and match ssd_chunked's (B, H, P, N)
+    st = state[:, :nstate, :hdim].reshape(bsz, nheads, nstate, hdim)
+    return y, jnp.swapaxes(st, -1, -2)
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
              c: jax.Array, *, path: str | None = None,
-             use_pallas: bool | None = None) -> jax.Array:
-    """Mamba-2 SSD scan -> (B, L, H, P) in the input dtype."""
+             use_pallas: bool | None = None, return_state: bool = False):
+    """Mamba-2 SSD scan -> (B, L, H, P) in the input dtype; with
+    ``return_state=True`` also the final state (B, H, P, N) f32."""
     return pallas_op("ssd_scan", x, dt, a, b, c, path=path,
-                     use_pallas=use_pallas)
+                     use_pallas=use_pallas, return_state=return_state)
 
 
 # ---------------------------------------------------------------------------

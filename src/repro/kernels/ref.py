@@ -49,13 +49,16 @@ def ssd_scan_ref(
     a: jax.Array,       # (H,)           negative state decay rates (A = -exp(A_log))
     b: jax.Array,       # (B, L, G, N)   input projections (G groups broadcast over H)
     c: jax.Array,       # (B, L, G, N)   output projections
-) -> jax.Array:
+    *,
+    return_state: bool = False,
+):
     """Sequential reference of the Mamba-2 SSD recurrence.
 
     state_{t} = exp(a * dt_t) * state_{t-1} + dt_t * b_t x_t^T
     y_t       = c_t . state_t
     Shapes follow Mamba-2: H heads, P head-dim, N state-dim, G kv-like groups
-    with H % G == 0 (heads within a group share B/C).
+    with H % G == 0 (heads within a group share B/C). With
+    ``return_state=True`` also returns the final state (B, H, P, N) f32.
     """
     bsz, seqlen, nheads, hdim = x.shape
     ngroups, nstate = b.shape[2], b.shape[3]
@@ -82,8 +85,9 @@ def ssd_scan_ref(
         jnp.moveaxis(dtf, 1, 0),
         jnp.moveaxis(decay, 1, 0),
     )
-    _, ys = jax.lax.scan(step, state0, xs)
-    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)             # (B, L, H, P)
+    h_last, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                # (B, L, H, P)
+    return (y, h_last) if return_state else y
 
 
 def flash_attention_ref(

@@ -29,6 +29,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
+    from repro.core import dispatch
+
+    ap.add_argument("--kernel-path", default=None, choices=dispatch.PATHS,
+                    help="explicit repro.core.dispatch path for every core "
+                         "op in the served model (default: auto)")
     args = ap.parse_args()
 
     mod = configs.get(args.arch)
@@ -45,7 +50,8 @@ def main() -> None:
             print(f"loaded checkpoint step {latest}")
 
     engine = ServingEngine(bundle, params, ServeConfig(
-        slots=args.slots, max_new=args.max_new))
+        slots=args.slots, max_new=args.max_new,
+        kernel_path=args.kernel_path))
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(
         3, cfg.vocab, size=rng.integers(4, args.prompt_len + 1),

@@ -21,6 +21,7 @@ the same file runs the FULL configs (the mesh/rules scale with
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -72,14 +73,22 @@ def main() -> None:
     ap.add_argument("--straggler-report", default=None,
                     help="jsonl path for per-step timing records")
     ap.add_argument("--log-every", type=int, default=10)
+    from repro.core import dispatch
+
+    ap.add_argument("--kernel-path", default=None, choices=dispatch.PATHS,
+                    help="explicit repro.core.dispatch path for the model's "
+                         "core ops and the optimizer's global-norm reduce")
     args = ap.parse_args()
 
     mod = configs.get(args.arch)
     cfg = mod.SMOKE if args.config == "smoke" else mod.FULL
+    if args.kernel_path is not None:
+        cfg = dataclasses.replace(cfg, kernel_path=args.kernel_path)
     bundle = build(cfg)
     mesh, rules = build_mesh_and_rules(args.tp)
     opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps),
-                        decay_steps=args.steps)
+                        decay_steps=args.steps,
+                        kernel_path=args.kernel_path)
     train_cfg = TrainConfig(microbatches=args.microbatches)
 
     with use_rules(rules), mesh:

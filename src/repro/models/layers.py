@@ -1,9 +1,11 @@
 """Layer implementations: GQA attention, SwiGLU MLP, token-choice MoE,
 Mamba-2 (SSD) mixer. All functional: ``<layer>_pspec(cfg)`` declares params,
 ``<layer>_apply(params, cfg, x, ...)`` computes, ``<layer>_decode`` steps a
-cache. MoE routing runs its count/offset computation through the paper's
-matmul-form reduce/scan (repro.core) — the stream-compaction use-case the
-paper cites.
+cache. Every reduce/scan/attention/SSD formulation is reached through
+``repro.core.dispatch`` — ``ModelConfig.kernel_path`` plumbs an explicit
+path choice into every call site (None = ``auto``, shape-aware), so the
+``REPRO_KERNEL_PATH`` env var, the benchmarks, and the autotuner all see
+the same ops.
 """
 from __future__ import annotations
 
@@ -13,11 +15,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.reduce import tcu_segmented_reduce
-from repro.core.scan import tcu_scan
-from repro.core.ssd import ssd_chunked, ssd_decode_step
+from repro.core import dispatch
+from repro.core.ssd import ssd_decode_step
 from repro.models.common import PSpec, rmsnorm, rope, swiglu
-from repro.models.xla_attention import chunked_attention, decode_attention
+from repro.models.xla_attention import decode_attention
 from repro.parallel.sharding import logical_constraint
 
 
@@ -69,6 +70,9 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
     remat_policy: str = "none"     # none | dots | offload-ready
     scan_layers: bool = True
+    # explicit dispatch path for every core op in the model (attention,
+    # SSD, MoE counts/offsets); None = "auto" (shape-aware, autotuned)
+    kernel_path: str | None = None
 
     @property
     def dh(self) -> int:
@@ -121,8 +125,8 @@ def attn_apply(p, cfg: ModelConfig, x, *, positions=None, causal=True,
         k = rope(k, positions, cfg.rope_theta)
     q = logical_constraint(q, "batch", None, "heads", None)
     k = logical_constraint(k, "batch", None, "kv_heads", None)
-    o = chunked_attention(q, k, v, causal=causal and kv is None,
-                          window=window)
+    o = dispatch.attention(q, k, v, causal=causal and kv is None,
+                           window=window, path=cfg.kernel_path)
     o = o.reshape(b, s, hq * dh)
     return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k, v)
 
@@ -248,11 +252,14 @@ def moe_apply_grouped(p, cfg: ModelConfig, x):
     e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
     e_sorted = logical_constraint(e_sorted, "moe_groups", None)
 
-    # per-(group, expert) counts: matmul-form reduction of the one-hot
-    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.float32)    # (g, n, e)
-    counts = tcu_segmented_reduce(jnp.moveaxis(onehot, -1, -2))  # (g, e)
-    # capacity offsets: matmul-form exclusive scan over experts
-    offsets = tcu_scan(counts, exclusive=True)               # (g, e)
+    # per-(group, expert) counts: a ragged reduce of ones over the expert
+    # assignment (matmul-form one-hot on the default path)
+    counts = dispatch.ragged_reduce(
+        jnp.ones(e_flat.shape, jnp.float32), e_flat, e,
+        path=cfg.kernel_path)                                # (g, e)
+    # capacity offsets: exclusive scan over experts
+    offsets = dispatch.scan(counts, exclusive=True,
+                            path=cfg.kernel_path)            # (g, e)
     rank = jnp.arange(n)[None, :] - jnp.take_along_axis(
         offsets, e_sorted, axis=-1).astype(jnp.int32)
 
@@ -338,11 +345,14 @@ def moe_apply_global(p, cfg: ModelConfig, x):
     order = jnp.argsort(e_flat)                              # stable
     e_sorted = e_flat[order]
 
-    # per-expert counts: matmul-form reduction of the one-hot assignment
-    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.float32)    # (t*k, e)
-    counts = tcu_segmented_reduce(onehot.T)                  # (e,)
-    # capacity offsets: matmul-form exclusive scan (stream compaction)
-    offsets = tcu_scan(counts, exclusive=True)               # (e,)
+    # per-expert counts: ragged reduce of ones over the assignment
+    # (matmul-form one-hot on the default path)
+    counts = dispatch.ragged_reduce(
+        jnp.ones(e_flat.shape, jnp.float32), e_flat, e,
+        path=cfg.kernel_path)                                # (e,)
+    # capacity offsets: exclusive scan (stream compaction)
+    offsets = dispatch.scan(counts, exclusive=True,
+                            path=cfg.kernel_path)            # (e,)
     rank = jnp.arange(t * k) - jnp.take(offsets, e_sorted).astype(jnp.int32)
 
     cap = max(8, int(cfg.capacity_factor * t * k / e + 127) // 128 * 128)
@@ -440,8 +450,9 @@ def mamba_apply(p, cfg: ModelConfig, x, *, collect_cache: bool = False):
     xs = logical_constraint(xs, "batch", None, "ssm_heads", None)
     # big-einsum operands in the compute dtype (f32 masks + accumulation
     # stay; see core/ssd.py)
-    y, state = ssd_chunked(xs, dt, a, bmat, cmat, chunk=cfg.ssd_chunk,
-                           matmul_dtype=cfg.dtype)
+    y, state = dispatch.ssd(xs, dt, a, bmat, cmat, chunk=cfg.ssd_chunk,
+                            matmul_dtype=cfg.dtype, return_state=True,
+                            path=cfg.kernel_path)
     y = y + p["d_skip"][:, None].astype(jnp.float32) * xs.astype(jnp.float32)
     y = y.reshape(b, s, di).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)

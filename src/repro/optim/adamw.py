@@ -2,8 +2,9 @@
 
 Self-contained (no optax). Canonical params are f32; the ≥100B configs run
 bf16 first/second moments (DESIGN §5) to fit 256x16 GB under ZeRO-3. The
-global-norm clip reduction runs through the paper's matmul-form reduce
-(``repro.core.tcu_reduce``) — a Σx² that XLA places on the MXU.
+global-norm clip reduction runs through ``repro.core.dispatch`` — a Σx²
+whose formulation (matmul-form vs native sum) follows the configured
+``kernel_path`` (None = shape-aware ``auto``).
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.reduce import tcu_reduce
+from repro.core import dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +29,8 @@ class OptConfig:
     weight_decay: float = 0.1
     clip_norm: float = 1.0
     state_dtype: Any = jnp.float32     # m/v dtype (bf16 for ≥100B archs)
+    # explicit dispatch path for the global-norm reduction (None = auto)
+    kernel_path: str | None = None
 
 
 def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
@@ -49,17 +52,20 @@ def init_opt_state(params, cfg: OptConfig):
     }
 
 
-def global_norm(tree) -> jax.Array:
-    """sqrt(Σ Σx²) with per-leaf Σx² in matmul form (paper's reduction)."""
-    sq = [tcu_reduce(jnp.square(g.astype(jnp.float32)))
-          for g in jax.tree.leaves(tree)]
+def global_norm(tree, *, path: str | None = None) -> jax.Array:
+    """sqrt(Σ Σx²) with per-leaf Σx² through the dispatch switch (the
+    paper's matmul-form reduction on ``fused``, ``jnp.sum`` on
+    ``baseline``; ``auto`` picks per leaf size)."""
+    sq = [dispatch.reduce(
+        jnp.square(g.astype(jnp.float32)).reshape(1, -1), path=path)[0]
+        for g in jax.tree.leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(sq)))
 
 
 def adamw_update(grads, opt_state, params, cfg: OptConfig):
     """-> (new_params, new_opt_state, metrics). params/grads f32."""
     step = opt_state["step"] + 1
-    gnorm = global_norm(grads)
+    gnorm = global_norm(grads, path=cfg.kernel_path)
     scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
     lr = lr_at(cfg, step)
     b1, b2 = cfg.b1, cfg.b2

@@ -40,6 +40,11 @@ class ServeConfig:
     eos_token: int = 2
     greedy: bool = True
     temperature: float = 1.0
+    # explicit repro.core.dispatch path for every core op in the served
+    # model (attention, SSD, MoE). None keeps the bundle's own setting
+    # (usually "auto"); a value rebuilds the bundle with the path baked
+    # into the jitted prefill/decode steps — no env-var reliance.
+    kernel_path: str | None = None
 
 
 @dataclasses.dataclass
@@ -74,6 +79,12 @@ class ServingEngine:
     ``serve_wave`` handles one admitted wave."""
 
     def __init__(self, bundle: Bundle, params, cfg: ServeConfig):
+        if cfg.kernel_path is not None and \
+                bundle.cfg.kernel_path != cfg.kernel_path:
+            from repro.models import build  # lazy: engine is model-agnostic
+
+            bundle = build(dataclasses.replace(
+                bundle.cfg, kernel_path=cfg.kernel_path))
         self.bundle = bundle
         self.cfg = cfg
         self.params = params

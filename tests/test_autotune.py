@@ -1,0 +1,211 @@
+"""Autotune subsystem tests: bucketing, the heuristic fallback, table
+round-trip (write -> load -> ``auto`` resolves per the table), env-var
+overrides, and the checked-in default's freshness."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, dispatch
+from repro.kernels import backend
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    autotune.invalidate_cache()
+    yield
+    autotune.invalidate_cache()
+
+
+def _write_table(path, entries):
+    table = {"version": autotune.TABLE_VERSION,
+             "backend": jax.default_backend(),
+             "jax": jax.__version__,
+             "entries": entries}
+    autotune.save_table(table, path)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+
+
+def test_bucket_key_bands_and_dtypes():
+    assert autotune.bucket_key("reduce", 16, jnp.float32) == "reduce/f32/4"
+    assert autotune.bucket_key("reduce", 31, jnp.float32) == "reduce/f32/4"
+    assert autotune.bucket_key("reduce", 32, jnp.bfloat16) == "reduce/bf16/5"
+    assert autotune.bucket_key("scan", 1, None) == "scan/f32/0"
+    # kernel-registry names alias onto the dispatch-level table keys
+    assert autotune.bucket_key("segmented_reduce", 16, jnp.float32) == \
+        "reduce/f32/4"
+    # band clamp
+    assert autotune.band(1 << 40) == autotune.MAX_BAND
+
+
+def test_heuristic_crossover_off_tpu():
+    if backend.on_tpu():
+        pytest.skip("CPU-only expectations")
+    assert autotune.heuristic("reduce", 16) == "fused"
+    assert autotune.heuristic("reduce", 8192) == "baseline"
+    # non-crossover ops keep the static choice at any size
+    assert autotune.heuristic("attention", 8192) == "fused"
+    assert autotune.heuristic("ssd", 8192) == "fused"
+    # candidate filtering: kernel-level call sites never get "baseline"
+    assert autotune.heuristic(
+        "reduce", 8192, candidates=("fused", "tile", "interpret")) == "fused"
+
+
+# ---------------------------------------------------------------------------
+# table round-trip + auto resolution (the acceptance contract)
+
+
+def test_table_roundtrip_auto_flips_across_buckets(tmp_path, monkeypatch):
+    """`auto` provably changes its choice across segment-size buckets per
+    the persisted table."""
+    path = tmp_path / "table.json"
+    _write_table(path, {
+        "reduce/f32/4": {"path": "fused", "us": {"fused": 1.0}},
+        "reduce/f32/12": {"path": "baseline", "us": {"baseline": 1.0}},
+    })
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    loaded = autotune.load_table(path)
+    assert loaded["entries"]["reduce/f32/4"]["path"] == "fused"
+    # the exact resolver every dispatch op calls:
+    assert dispatch.resolve_path(op="reduce", n=16,
+                                 dtype=jnp.float32) == "fused"
+    assert dispatch.resolve_path(op="reduce", n=4096,
+                                 dtype=jnp.float32) == "baseline"
+    # and the results still agree regardless of which path auto picked
+    small = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    big = jax.random.normal(jax.random.PRNGKey(1), (2, 4096))
+    np.testing.assert_allclose(np.asarray(dispatch.reduce(small)),
+                               np.asarray(small).sum(-1), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dispatch.reduce(big)),
+                               np.asarray(big).sum(-1), rtol=1e-4, atol=1e-2)
+
+
+def test_autotune_off_restores_static_heuristic(tmp_path, monkeypatch):
+    if backend.on_tpu():
+        pytest.skip("CPU-only expectations")
+    path = tmp_path / "table.json"
+    _write_table(path, {
+        "reduce/f32/12": {"path": "baseline", "us": {}},
+    })
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
+    monkeypatch.setenv(autotune.ENV_AUTOTUNE, "off")
+    autotune.invalidate_cache()
+    assert autotune.choose("reduce", 4096, jnp.float32) is None
+    # static auto off-TPU = fused, table and heuristic both bypassed
+    assert dispatch.resolve_path(op="reduce", n=4096,
+                                 dtype=jnp.float32) == "fused"
+    assert backend.resolve_path(op="segmented_reduce", n=4096,
+                                dtype=jnp.float32) == "fused"
+
+
+def test_explicit_path_beats_table(tmp_path, monkeypatch):
+    path = tmp_path / "table.json"
+    _write_table(path, {"reduce/f32/4": {"path": "baseline", "us": {}}})
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    autotune.invalidate_cache()
+    assert dispatch.resolve_path("xla_tile", op="reduce", n=16,
+                                 dtype=jnp.float32) == "xla_tile"
+
+
+def test_table_backend_mismatch_is_ignored(tmp_path, monkeypatch):
+    if backend.on_tpu():
+        pytest.skip("CPU-only expectations")
+    path = tmp_path / "table.json"
+    table = {"version": autotune.TABLE_VERSION, "backend": "tpu",
+             "entries": {"reduce/f32/4": {"path": "baseline", "us": {}}}}
+    path.write_text(json.dumps(table))
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    # falls through to the heuristic (fused for a small reduce off-TPU)
+    assert autotune.choose("reduce", 16, jnp.float32) == "fused"
+
+
+def test_malformed_table_rejected_and_ignored(tmp_path, monkeypatch):
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"version": 1, "entries": {"reduce/f32/4": '
+                   '{"path": "warp"}}}')
+    with pytest.raises(ValueError):
+        autotune.load_table(bad)
+    monkeypatch.setenv(autotune.ENV_TABLE, str(bad))
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    assert autotune.current_table() is None
+    # resolution degrades to the heuristic, never crashes
+    assert autotune.choose("reduce", 16, jnp.float32) in (
+        "fused", "tile")
+
+
+def test_kernel_level_auto_consults_table(tmp_path, monkeypatch):
+    """backend.resolve_path('auto') is shape-aware too, with the table's
+    dispatch-level labels translated onto the kernel registry's
+    implementations (backend's "fused" = the native-op ref = the dispatch
+    layer's "baseline"; the matmul forms have no kernel twin)."""
+    if backend.on_tpu():
+        pytest.skip("CPU-only expectations")
+    path = tmp_path / "table.json"
+    _write_table(path, {
+        "reduce/f32/4": {"path": "interpret", "us": {}},
+        # native op won -> kernel level runs it as its "fused" ref
+        "reduce/f32/12": {"path": "baseline", "us": {}},
+        # matmul form won (no kernel twin) -> fastest measured contender
+        # that has one: interpret (2us) beats baseline (9us) here
+        "reduce/f32/8": {"path": "fused",
+                         "us": {"fused": 1.0, "interpret": 2.0,
+                                "baseline": 9.0}},
+        # matmul form won, nothing translatable recorded -> heuristic
+        "reduce/f32/10": {"path": "fused", "us": {"fused": 1.0}},
+    })
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    assert backend.resolve_path(op="segmented_reduce", n=16,
+                                dtype=jnp.float32) == "interpret"
+    assert backend.resolve_path(op="segmented_reduce", n=4096,
+                                dtype=jnp.float32) == "fused"
+    assert backend.resolve_path(op="segmented_reduce", n=256,
+                                dtype=jnp.float32) == "interpret"
+    assert backend.resolve_path(op="segmented_reduce", n=1024,
+                                dtype=jnp.float32) == "fused"
+
+
+def test_model_ops_keep_fused_default():
+    """attention/ssd never default onto the Pallas kernels via the
+    heuristic — their chunked XLA forms shard under GSPMD and carry knobs
+    the kernels drop; tile is explicit opt-in (or a measured table win)."""
+    assert autotune.heuristic("attention", 16) == "fused"
+    assert autotune.heuristic("ssd", 1 << 15) == "fused"
+
+
+# ---------------------------------------------------------------------------
+# default table + harness
+
+
+def test_default_table_checked_in_and_fresh():
+    assert autotune.DEFAULT_TABLE_PATH.exists(), \
+        "src/repro/core/autotune_default.json must be checked in"
+    problems = autotune.check_default()
+    assert not problems, problems
+
+
+def test_measure_table_smoke():
+    table = autotune.measure_table(ops=("reduce",), bands=(4,),
+                                   dtypes=(jnp.float32,), iters=1)
+    assert table["version"] == autotune.TABLE_VERSION
+    assert table["backend"] == jax.default_backend()
+    (key, ent), = table["entries"].items()
+    assert key == "reduce/f32/4"
+    assert ent["path"] in ent["us"]
+    assert set(ent["us"]) >= set(autotune.OP_CONTENDERS["reduce"])

@@ -319,6 +319,64 @@ def test_ragged_scan_restarts_per_segment():
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
 
+def test_ragged_scan_noncontiguous_raises_eagerly():
+    """The scan's contract: seg_ids must be non-decreasing. With concrete
+    ids and debug=True the violation raises immediately."""
+    from repro.core.ragged import tcu_ragged_segment_scan
+
+    x = jnp.ones((6,), jnp.float32)
+    seg = jnp.asarray([0, 1, 0, 1, 2, 0], jnp.int32)   # id 0 reappears
+    with pytest.raises(ValueError, match="non-decreasing"):
+        tcu_ragged_segment_scan(x, seg, 3, debug=True)
+
+
+def test_ragged_scan_noncontiguous_poisons_under_jit():
+    """Under jit the ids are traced (cannot raise): debug=True NaN-poisons
+    the output instead, so the violation is still loud."""
+    from repro.core.ragged import tcu_ragged_segment_scan
+
+    f = jax.jit(lambda a, s: tcu_ragged_segment_scan(a, s, 3, debug=True))
+    x = jnp.ones((6,), jnp.float32)
+    bad = jnp.asarray([0, 1, 0, 1, 2, 0], jnp.int32)
+    assert np.isnan(np.asarray(f(x, bad))).all()
+    good = jnp.sort(bad)
+    out = np.asarray(f(x, good))
+    assert not np.isnan(out).any()
+    want = np.empty(6, np.float32)
+    segn = np.asarray(good)
+    for i in range(3):
+        m = segn == i
+        want[m] = np.cumsum(np.ones(m.sum(), np.float32))
+    np.testing.assert_allclose(out, want, rtol=1e-5)
+
+
+def test_ragged_scan_contiguous_debug_is_transparent():
+    from repro.core.ragged import tcu_ragged_segment_scan
+
+    rng = np.random.default_rng(7)
+    seg = np.sort(rng.integers(0, 4, 100)).astype(np.int32)
+    x = rng.normal(size=100).astype(np.float32)
+    a = np.asarray(tcu_ragged_segment_scan(jnp.asarray(x), jnp.asarray(seg),
+                                           4))
+    b = np.asarray(tcu_ragged_segment_scan(jnp.asarray(x), jnp.asarray(seg),
+                                           4, debug=True))
+    np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_ragged_reduce_accepts_any_id_order():
+    """The reduce is order-free bucketing — unsorted ids are valid there
+    (only the scan has the contiguity contract)."""
+    from repro.core.ragged import tcu_ragged_segment_reduce
+
+    rng = np.random.default_rng(8)
+    seg = rng.integers(0, 6, 200).astype(np.int32)     # deliberately unsorted
+    x = rng.normal(size=200).astype(np.float32)
+    got = np.asarray(tcu_ragged_segment_reduce(jnp.asarray(x),
+                                               jnp.asarray(seg), 6))
+    want = np.array([x[seg == i].sum() for i in range(6)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("n,s,seed", [
     (2, 1, 0), (17, 3, 1), (100, 12, 2), (399, 7, 3), (400, 5, 4),
 ])

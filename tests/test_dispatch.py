@@ -178,6 +178,34 @@ def test_core_dispatch_ssd_paths():
         np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
 
 
+def test_core_dispatch_ssd_return_state_paths_agree():
+    """The prefill->decode handoff state must agree on every path — the
+    kernel path's padded-state slice (lam zero-pad => decay 1) is the
+    subtle part, exercised here with L not a multiple of the chunk."""
+    b, L, h, p, g, n = 1, 100, 2, 8, 1, 4   # L=100: forces padding
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    x = 0.2 * jax.random.normal(ks[0], (b, L, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+    a = -jnp.exp(0.2 * jax.random.normal(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (b, L, g, n)) / np.sqrt(n)
+    cc = jax.random.normal(ks[4], (b, L, g, n)) / np.sqrt(n)
+    y_want, h_want = dispatch.ssd(x, dt, a, bb, cc, path="baseline",
+                                  return_state=True)
+    assert h_want.shape == (b, h, p, n)
+    for path in ("fused", "interpret"):
+        y_got, h_got = dispatch.ssd(x, dt, a, bb, cc, path=path,
+                                    return_state=True)
+        assert h_got.shape == (b, h, p, n)
+        np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                                   rtol=2e-3, atol=2e-3)
+        # y must be identical with and without the state request
+        y_only = dispatch.ssd(x, dt, a, bb, cc, path=path)
+        np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_only),
+                                   rtol=0, atol=0)
+
+
 def test_env_var_steers_op_execution(monkeypatch):
     """REPRO_KERNEL_PATH reroutes an unannotated call site end to end."""
     x = jnp.ones((2, 130))
@@ -207,3 +235,144 @@ def test_legacy_use_pallas_kwarg_still_works():
         np.asarray(ops.segmented_reduce(x, use_pallas=True)),
         np.asarray(ops.segmented_reduce(x, use_pallas=False)),
         rtol=1e-4, atol=1e-3)
+
+
+def test_conflicting_path_and_use_pallas_warns_path_wins():
+    x = jnp.ones((2, 100))
+    with pytest.warns(UserWarning, match="path= takes precedence"):
+        assert backend.resolve_path("fused", use_pallas=True) == "fused"
+    with pytest.warns(UserWarning, match="path= takes precedence"):
+        got = ops.segmented_reduce(x, path="fused", use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got), 100.0)
+    with pytest.warns(UserWarning):
+        assert backend.resolve_path("tile", use_pallas=False) in (
+            "tile", "interpret")
+
+
+def test_agreeing_path_and_use_pallas_no_warning(recwarn):
+    # interpret runs the same kernel body -> not a conflict with
+    # use_pallas=True; matching values never warn
+    assert backend.resolve_path("interpret", use_pallas=True) == "interpret"
+    assert backend.resolve_path("fused", use_pallas=False) == "fused"
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, UserWarning)]
+
+
+# ---------------------------------------------------------------------------
+# exclusive scan: shift, never inclusive-minus-x (catastrophic cancellation)
+
+
+@pytest.mark.parametrize("path", ["fused", "interpret", "baseline"])
+def test_exclusive_scan_adversarial_magnitudes(path):
+    """exclusive[i] must be exact when the preceding prefix is tiny and
+    x[i] is huge — reconstructing it as ``inclusive - x`` absorbs the
+    prefix into x[i]'s rounding and returns garbage."""
+    x = jnp.asarray([0.1, 0.2, 0.3, 1e8, -1e8, 0.4], jnp.float32)
+    got = np.asarray(dispatch.scan(x, path=path, exclusive=True))
+    want = np.concatenate(
+        [[0.0], np.cumsum(np.asarray(x, np.float64))[:-1]])
+    # positions 0..3 have small true prefixes; the shift keeps them exact
+    np.testing.assert_allclose(got[:4], want[:4], rtol=1e-6, atol=1e-6)
+    assert got.shape == x.shape
+
+
+def test_exclusive_scan_paths_agree_random():
+    x = jax.random.normal(jax.random.PRNGKey(10), (4, 300))
+    want = np.asarray(dispatch.scan(x, path="baseline", exclusive=True))
+    for path in ("fused", "interpret"):
+        got = np.asarray(dispatch.scan(x, path=path, exclusive=True))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# ragged entries (the paper's footnote-4 case through the one switch)
+
+RAGGED_PATHS = ["fused", "xla_tile", "interpret", "baseline"]
+
+
+def _ragged_case(n, s, seed, dtype):
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    x = rng.normal(size=n).astype(np.float32)
+    return jnp.asarray(x).astype(dtype), jnp.asarray(seg)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("path", RAGGED_PATHS)
+def test_ragged_reduce_paths_agree(path, dtype):
+    n, s = 300, 7
+    x, seg = _ragged_case(n, s, 0, dtype)
+    got = np.asarray(dispatch.ragged_reduce(x, seg, s, path=path))
+    xs = np.asarray(x, np.float32)
+    segn = np.asarray(seg)
+    want = np.array([xs[segn == i].sum() for i in range(s)])
+    tol = dict(rtol=1e-4, atol=1e-3) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-1)
+    np.testing.assert_allclose(got, want, **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("path", RAGGED_PATHS)
+def test_ragged_scan_paths_agree(path, dtype):
+    n, s = 300, 7
+    x, seg = _ragged_case(n, s, 1, dtype)
+    got = np.asarray(dispatch.ragged_scan(x, seg, s, path=path))
+    xs = np.asarray(x, np.float32)
+    segn = np.asarray(seg)
+    want = np.empty(n, np.float32)
+    for i in range(s):
+        m = segn == i
+        want[m] = np.cumsum(xs[m])
+    tol = dict(rtol=1e-3, atol=1e-2) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-1)
+    np.testing.assert_allclose(got, want, **tol)
+
+
+@pytest.mark.parametrize("path", ["fused", "baseline"])
+def test_ragged_batched_seg_ids(path):
+    """Per-batch segment assignments (the MoE per-group layout)."""
+    g, n, s = 3, 64, 5
+    rng = np.random.default_rng(2)
+    seg = np.sort(rng.integers(0, s, (g, n)), axis=-1).astype(np.int32)
+    x = rng.normal(size=(g, n)).astype(np.float32)
+    got = np.asarray(dispatch.ragged_reduce(jnp.asarray(x),
+                                            jnp.asarray(seg), s, path=path))
+    want = np.stack([[x[b][seg[b] == i].sum() for i in range(s)]
+                     for b in range(g)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ragged_env_var_steers(monkeypatch):
+    x, seg = _ragged_case(200, 5, 3, jnp.float32)
+    monkeypatch.setenv(backend.ENV_PATH, "baseline")
+    got_b = np.asarray(dispatch.ragged_scan(x, seg, 5))
+    monkeypatch.setenv(backend.ENV_PATH, "fused")
+    got_f = np.asarray(dispatch.ragged_scan(x, seg, 5))
+    np.testing.assert_allclose(got_b, got_f, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# consumer discipline: every model/optim/serving op goes through the switch
+
+
+def test_no_direct_core_primitive_imports_outside_core_kernels():
+    """Same discipline as the compiler-params guard: the dispatch layer is
+    the single source of truth for which formulation runs where. Modules
+    outside repro.core/repro.kernels must not touch the primitives
+    directly — that is exactly the bypass that made REPRO_KERNEL_PATH
+    silently no-op for models, optim, and the ragged ops."""
+    pat = re.compile(
+        r"\b(tcu_segmented_reduce|tcu_scan|tcu_reduce|tcu_weighted_scan"
+        r"|tcu_ragged_segment_reduce|tcu_ragged_segment_scan"
+        r"|ssd_chunked)\b")
+    offenders = []
+    for p in sorted(SRC.rglob("*.py")):
+        rel = p.relative_to(SRC)
+        if rel.parts[0] in ("core", "kernels"):
+            continue
+        if pat.search(p.read_text()):
+            offenders.append(str(rel))
+    assert not offenders, (
+        f"direct repro.core primitive use in {offenders}; route through "
+        "repro.core.dispatch (path= / REPRO_KERNEL_PATH / autotuned auto)"
+    )

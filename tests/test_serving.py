@@ -73,6 +73,27 @@ def test_engine_matches_manual_decode():
     assert got == want
 
 
+def test_engine_explicit_kernel_path_plumbs_into_model():
+    """ServeConfig.kernel_path rebuilds the bundle with the dispatch path
+    baked into the model config — no env-var reliance — and produces the
+    same greedy tokens as the default path (path agreement end to end)."""
+    mod = configs.get("llama3.2-1b")
+    bundle = build(mod.SMOKE)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                        mod.SMOKE.dtype)
+    eng_default = ServingEngine(bundle, params,
+                                ServeConfig(slots=1, max_new=4, eos_token=-1))
+    eng_fused = ServingEngine(bundle, params,
+                              ServeConfig(slots=1, max_new=4, eos_token=-1,
+                                          kernel_path="fused"))
+    assert eng_default.bundle.cfg.kernel_path is None
+    assert eng_fused.bundle.cfg.kernel_path == "fused"
+    prompt = np.arange(5, 13, dtype=np.int32)
+    got_d = eng_default.run([Request(uid=0, prompt=prompt)])[0].tokens
+    got_f = eng_fused.run([Request(uid=0, prompt=prompt)])[0].tokens
+    assert got_d == got_f
+
+
 def test_engine_mamba_family():
     """SSM caches (no seq axis) must serve without padding issues."""
     mod = configs.get("mamba2-1.3b")
