@@ -11,9 +11,61 @@ for the power results. Every benchmark prints a CSV block
 from __future__ import annotations
 
 import time
+import warnings
 
 import jax
 import numpy as np
+
+# Which backend's contender set this run wants: "auto" = whatever the host
+# resolves natively. Set by ``benchmarks.run --backend``.
+BENCH_BACKEND = "auto"
+
+
+def set_bench_backend(backend: str) -> None:
+    global BENCH_BACKEND
+    BENCH_BACKEND = backend
+
+
+def select_paths(labels: dict[str, str]) -> dict[str, str]:
+    """Filter contender rows to dispatch paths resolvable on this host.
+
+    ``labels`` maps row name -> ``repro.core.dispatch`` path label. Rows
+    that cannot run here are skipped with a printed note instead of
+    crashing the sweep: labels that raise on resolution (``tile_gpu`` on a
+    CPU host), labels for a backend other than the one ``--backend``
+    requested, and the generic ``tile`` when it would silently downgrade
+    to the Pallas interpreter (orders of magnitude slower than anything it
+    would be compared against — a downgraded row is noise, not data).
+    """
+    from repro.core import dispatch
+    from repro.kernels import backend as kbackend
+
+    out = {}
+    for name, path in labels.items():
+        try:
+            # probe only, nothing runs: keep the one-time downgrade warning
+            # unconsumed for a later genuine path="tile" execution
+            warned = kbackend._TILE_DOWNGRADE_WARNED
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                resolved = dispatch.resolve_path(path)
+            kbackend._TILE_DOWNGRADE_WARNED = warned
+        except (RuntimeError, ValueError):
+            print(f"# skip {name}: path={path!r} unresolvable on this host "
+                  f"(backend={jax.default_backend()})")
+            continue
+        if BENCH_BACKEND != "auto" and resolved in ("tile_tpu", "tile_gpu") \
+                and resolved != f"tile_{BENCH_BACKEND}":
+            print(f"# skip {name}: path={path!r} resolves to {resolved!r}, "
+                  f"not in the requested --backend {BENCH_BACKEND} "
+                  "contender set")
+            continue
+        if resolved == "interpret" and path != "interpret":
+            print(f"# skip {name}: path={path!r} downgrades to the Pallas "
+                  "interpreter here (no native lowering)")
+            continue
+        out[name] = path
+    return out
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:

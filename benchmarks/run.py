@@ -1,13 +1,19 @@
 """Run every benchmark (one per paper table/figure) and print CSV blocks.
 
-  python -m benchmarks.run            # all
-  python -m benchmarks.run fig10      # substring filter
+  python -m benchmarks.run                  # all
+  python -m benchmarks.run fig10            # substring filter
+  python -m benchmarks.run --backend gpu    # keep only this backend's
+                                            # tile contenders; rows whose
+                                            # path can't resolve on this
+                                            # host are skipped, not fatal
 """
 from __future__ import annotations
 
+import argparse
 import importlib
-import sys
 import time
+
+from benchmarks import common
 
 BENCHES = [
     ("fig2_3_gemm_gemv", "benchmarks.gemm_bench"),
@@ -20,12 +26,22 @@ BENCHES = [
 ]
 
 
-def main() -> None:
-    pat = sys.argv[1] if len(sys.argv) > 1 else ""
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("filter", nargs="?", default="",
+                    help="substring filter on benchmark names")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "cpu", "gpu", "tpu"),
+                    help="which backend's kernel contenders to include; "
+                         "paths unresolvable on the current host are "
+                         "skipped with a note instead of crashing")
+    args = ap.parse_args(argv)
+    common.set_bench_backend(args.backend)
+
     t0 = time.time()
     ran = 0
     for name, module in BENCHES:
-        if pat and pat not in name:
+        if args.filter and args.filter not in name:
             continue
         m = importlib.import_module(module)
         t = time.time()

@@ -4,10 +4,13 @@ Fixed-size input (2^24 elements on this CPU host; the paper used 2^30 on a
 V100), segment size swept over powers of two. Contenders are the dispatch
 layer's paths (repro.core.dispatch — one switch, no ad-hoc imports):
 
-  * ``tcu_tile``  — path="xla_tile": the paper-faithful tile algebra
-  * ``tcu_fused`` — path="fused": the beyond-paper fused matmul form
-  * ``baseline``  — path="baseline": jnp.sum (XLA's native vector reduction
-    = the CUB stand-in)
+  * ``tcu_tile``    — path="xla_tile": the paper-faithful tile algebra
+  * ``tcu_fused``   — path="fused": the beyond-paper fused matmul form
+  * ``baseline``    — path="baseline": jnp.sum (XLA's native vector
+    reduction = the CUB stand-in)
+  * ``tile_kernel`` — path="tile": the explicit Pallas kernel (Pallas-TPU
+    on TPU, Pallas-Triton on GPU); skipped on hosts with no native
+    lowering (see ``common.select_paths`` / ``run.py --backend``)
 
 Derived column ``belems_s`` = billions of half-precision-equivalent elements
 per second (the paper's y-axis).
@@ -17,14 +20,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import elems_per_sec, print_csv, time_fn
+from benchmarks.common import elems_per_sec, print_csv, select_paths, time_fn
 
 TOTAL = 1 << 22
+
+CONTENDERS = {
+    "tcu_tile": "xla_tile",
+    "tcu_fused": "fused",
+    "baseline_sum": "baseline",
+    "tile_kernel": "tile",
+}
 
 
 def run(total: int = TOTAL) -> list:
     rows = []
     x = jax.random.normal(jax.random.PRNGKey(0), (total,), jnp.float32)
+    paths = select_paths(CONTENDERS)
     for log_seg in range(4, 19, 4):
         seg = 1 << log_seg
         segs = total // seg
@@ -33,12 +44,8 @@ def run(total: int = TOTAL) -> list:
         from repro.core import dispatch
 
         fns = {
-            "tcu_tile": jax.jit(
-                lambda a: dispatch.reduce(a, path="xla_tile")),
-            "tcu_fused": jax.jit(
-                lambda a: dispatch.reduce(a, path="fused")),
-            "baseline_sum": jax.jit(
-                lambda a: dispatch.reduce(a, path="baseline")),
+            name: jax.jit(lambda a, p=p: dispatch.reduce(a, path=p))
+            for name, p in paths.items()
         }
         for name, fn in fns.items():
             t = time_fn(fn, xs)

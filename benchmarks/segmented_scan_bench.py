@@ -2,16 +2,23 @@
 
 Contenders (one switch, repro.core.dispatch): the matmul-form scan
 (path="fused") vs XLA's native ``jnp.cumsum`` (path="baseline", the Thrust
-stand-in). Fixed 2^22-element input.
+stand-in) vs the explicit Pallas kernel (path="tile" — TPU or Triton,
+skipped where no native lowering exists). Fixed 2^22-element input.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import elems_per_sec, print_csv, time_fn
+from benchmarks.common import elems_per_sec, print_csv, select_paths, time_fn
 
 TOTAL = 1 << 22
+
+CONTENDERS = {
+    "tcu_scan": "fused",
+    "baseline_cumsum": "baseline",
+    "tile_kernel": "tile",
+}
 
 
 def run(total: int = TOTAL) -> list:
@@ -19,14 +26,14 @@ def run(total: int = TOTAL) -> list:
 
     rows = []
     x = jax.random.normal(jax.random.PRNGKey(0), (total,), jnp.float32)
+    paths = select_paths(CONTENDERS)
     for log_seg in range(4, 19, 2):
         seg = 1 << log_seg
         segs = total // seg
         xs = x.reshape(segs, seg)
         fns = {
-            "tcu_scan": jax.jit(lambda a: dispatch.scan(a, path="fused")),
-            "baseline_cumsum": jax.jit(
-                lambda a: dispatch.scan(a, path="baseline")),
+            name: jax.jit(lambda a, p=p: dispatch.scan(a, path=p))
+            for name, p in paths.items()
         }
         for name, fn in fns.items():
             t = time_fn(fn, xs)

@@ -11,25 +11,37 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import (elems_per_sec, hlo_op_mix, print_csv,
-                               time_fn)
+                               select_paths, time_fn)
 
 N_SEGMENTS = 4096
+
+# row name -> (op, dispatch path); the tile rows are the explicit Pallas
+# kernels (TPU or Triton per host) and drop out via select_paths where no
+# native lowering exists
+CONTENDERS = {
+    "tcu_reduce": ("reduce", "xla_tile"),
+    "base_reduce": ("reduce", "baseline"),
+    "auto_reduce": ("reduce", "auto"),
+    "tile_reduce": ("reduce", "tile"),
+    "tcu_scan": ("scan", "fused"),
+    "base_scan": ("scan", "baseline"),
+    "auto_scan": ("scan", "auto"),
+    "tile_scan": ("scan", "tile"),
+}
 
 
 def run() -> tuple[list, list]:
     from repro.core import dispatch
 
+    keep = select_paths({k: v[1] for k, v in CONTENDERS.items()})
     rows, mix_rows = [], []
     for log_seg in range(4, 14):
         seg = 1 << log_seg
         x = jax.random.normal(jax.random.PRNGKey(1), (N_SEGMENTS, seg))
+        ops = {"reduce": dispatch.reduce, "scan": dispatch.scan}
         cases = {
-            "tcu_reduce": lambda a: dispatch.reduce(a, path="xla_tile"),
-            "base_reduce": lambda a: dispatch.reduce(a, path="baseline"),
-            "auto_reduce": lambda a: dispatch.reduce(a, path="auto"),
-            "tcu_scan": lambda a: dispatch.scan(a, path="fused"),
-            "base_scan": lambda a: dispatch.scan(a, path="baseline"),
-            "auto_scan": lambda a: dispatch.scan(a, path="auto"),
+            name: (lambda a, o=op, p=path: ops[o](a, path=p))
+            for name, (op, path) in CONTENDERS.items() if name in keep
         }
         for name, fn in cases.items():
             t = time_fn(jax.jit(fn), x)

@@ -10,12 +10,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import elems_per_sec, print_csv, time_fn
+from benchmarks.common import elems_per_sec, print_csv, select_paths, time_fn
+
+CONTENDERS = {
+    "ssd_chunked_matmul": "fused",
+    "ssd_sequential": "baseline",
+    "ssd_tile_kernel": "tile",   # Pallas kernel (TPU/Triton); skipped off-accelerator
+}
 
 
 def run() -> list:
     from repro.core import dispatch
 
+    paths = select_paths(CONTENDERS)
     rows = []
     b, h, p, g, n = 2, 4, 64, 1, 64
     for log_l in (9, 11, 13):
@@ -27,15 +34,12 @@ def run() -> list:
         bb = jax.random.normal(ks[3], (b, L, g, n)) / jnp.sqrt(float(n))
         cc = jax.random.normal(ks[4], (b, L, g, n)) / jnp.sqrt(float(n))
 
-        chunked = jax.jit(lambda *t: dispatch.ssd(*t, path="fused"))
-        seq = jax.jit(lambda *t: dispatch.ssd(*t, path="baseline"))
-        t1 = time_fn(chunked, x, dt, a, bb, cc, iters=3)
-        t2 = time_fn(seq, x, dt, a, bb, cc, iters=3)
         toks = b * L
-        rows.append(["ssd_chunked_matmul", L, f"{t1 * 1e3:.2f}",
-                     f"{elems_per_sec(toks, t1) / 1e3:.1f}"])
-        rows.append(["ssd_sequential", L, f"{t2 * 1e3:.2f}",
-                     f"{elems_per_sec(toks, t2) / 1e3:.1f}"])
+        for name, path in paths.items():
+            fn = jax.jit(lambda *t, p=path: dispatch.ssd(*t, path=p))
+            t1 = time_fn(fn, x, dt, a, bb, cc, iters=3)
+            rows.append([name, L, f"{t1 * 1e3:.2f}",
+                         f"{elems_per_sec(toks, t1) / 1e3:.1f}"])
     return rows
 
 

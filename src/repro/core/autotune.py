@@ -10,20 +10,30 @@ ignores. This module makes ``auto`` consult a *measured* table instead:
 * **Buckets** — a call shape maps to ``{op}/{dtype-tag}/{log2-band}``
   (e.g. ``reduce/f32/9`` for a 512-element f32 segmented reduce). Bands
   are powers of two, matching the paper's sweep axes.
-* **Table** — a JSON file mapping bucket -> winning dispatch path, with
-  the raw per-contender timings kept alongside for auditability. Resolution
-  order: ``$REPRO_AUTOTUNE_TABLE`` (explicit file) > the checked-in default
+* **Table** — a JSON file keyed *by backend*: ``{"version": 2,
+  "backends": {"cpu": {"jax": ..., "entries": {bucket: {...}}}}}``. Each
+  backend section maps bucket -> winning dispatch path, with the raw
+  per-contender timings kept alongside for auditability; a table measured
+  on a GPU host merges in as a ``"gpu"`` section and steers *only* GPU
+  hosts — CPU/TPU resolution never reads it. Resolution order:
+  ``$REPRO_AUTOTUNE_TABLE`` (explicit file) > the checked-in default
   (``autotune_default.json``, measured on CPU with kernels in interpret
-  mode) > the built-in heuristic.
+  mode) > the built-in heuristic. Legacy v1 files (one flat ``backend`` +
+  ``entries``) load as a single-section v2 table.
 * **Harness** — :func:`measure_table` times every registered contender of
-  ``repro.core.dispatch`` per bucket and records the argmin. Regenerate
-  with ``python -m repro.core.autotune --write``; CI checks the checked-in
-  default for staleness with ``--check``.
-* **Fallbacks** — a table measured on a different backend is ignored; a
-  missing bucket falls back to :func:`heuristic` (deterministic: the
-  paper's small-segment crossover off-TPU, the tile kernel on TPU);
+  ``repro.core.dispatch`` per bucket and records the argmin for the host's
+  backend. Regenerate with ``python -m repro.core.autotune --write``
+  (merges into an existing multi-backend file — run it on a GPU host to
+  add the ``gpu`` section without touching the CPU one); CI checks the
+  checked-in default for staleness with ``--check``.
+* **Fallbacks** — a missing bucket (or a section for a different backend
+  only) falls back to :func:`heuristic` (deterministic: the paper's
+  small-segment crossover off-accelerator, the tile kernel on TPU/GPU);
   ``REPRO_AUTOTUNE=off`` disables table *and* heuristic, restoring the
-  pre-autotune static choice (tile on TPU, fused elsewhere).
+  pre-autotune static choice (tile on TPU/GPU, fused elsewhere). An
+  *explicitly requested* table (``$REPRO_AUTOTUNE_TABLE``) that is
+  malformed — unknown backend keys, bad paths, unparseable JSON — fails
+  loudly instead of silently degrading; only the implicit default degrades.
 
 Numerical contract: every contender of an op agrees to tolerance (the
 dispatch-path agreement tests), so the table only moves work between
@@ -46,8 +56,12 @@ from repro.kernels import backend
 ENV_AUTOTUNE = "REPRO_AUTOTUNE"          # "off"/"0"/"static" -> static auto
 ENV_TABLE = "REPRO_AUTOTUNE_TABLE"       # path to a JSON table
 DEFAULT_TABLE_PATH = Path(__file__).with_name("autotune_default.json")
-TABLE_VERSION = 1
+TABLE_VERSION = 2
 MAX_BAND = 20
+
+# the backend axis of the table; jax.default_backend() spellings normalise
+# onto these keys
+KNOWN_BACKENDS = ("cpu", "gpu", "tpu")
 
 # Ops with a measured matmul-form vs native-op crossover (the paper's
 # reduction/scan family). Other ops (attention, ssd, rmsnorm) keep the
@@ -59,8 +73,8 @@ CROSSOVER_OPS = ("reduce", "scan", "weighted_scan",
 HEURISTIC_CROSSOVER = 512
 
 # Model-level ops whose ``auto`` default keeps the chunked/fused XLA form
-# even on TPU: those forms shard under GSPMD and carry knobs (SSD chunk
-# size, matmul dtype) the Pallas kernels drop, and the flash kernel falls
+# even on TPU/GPU: those forms shard under GSPMD and carry knobs (SSD chunk
+# size, matmul dtype) the Pallas kernels drop, and the flash kernels fall
 # back to the materialised oracle on unaligned lengths. The kernels are
 # opted in explicitly (path="tile") or via a measured table entry.
 FUSED_DEFAULT_OPS = ("attention", "ssd")
@@ -75,8 +89,9 @@ DEFAULT_DTYPES = (jnp.float32, jnp.bfloat16)
 
 # Contenders the harness times per op (dispatch-level paths). ``xla_tile``
 # only differs from ``fused`` for reduce (core's scan IS the tile algebra);
-# ``tile`` is appended on TPU; ``interpret`` is validation-only (orders of
-# magnitude slow on CPU) and excluded from measurement.
+# ``tile`` is appended on hosts with a native Pallas lowering (TPU or GPU);
+# ``interpret`` is validation-only (orders of magnitude slow on CPU) and
+# excluded from measurement.
 OP_CONTENDERS = {
     "reduce": ("fused", "xla_tile", "baseline"),
     "scan": ("fused", "baseline"),
@@ -84,6 +99,12 @@ OP_CONTENDERS = {
     "ragged_reduce": ("fused", "baseline"),
     "ragged_scan": ("fused", "baseline"),
 }
+
+
+def current_backend() -> str:
+    """jax.default_backend() normalised onto the table's backend keys."""
+    b = jax.default_backend()
+    return "gpu" if b in ("cuda", "rocm") else b
 
 
 # ---------------------------------------------------------------------------
@@ -121,26 +142,61 @@ def invalidate_cache() -> None:
 
 def _valid_paths() -> tuple[str, ...]:
     # dispatch-level paths minus "auto" (a table must be fully resolved)
-    return ("fused", "xla_tile", "tile", "interpret", "baseline")
+    return ("fused", "xla_tile", "tile", "tile_tpu", "tile_gpu",
+            "interpret", "baseline")
 
 
-def load_table(path: str | Path) -> dict:
-    """Load and validate a table; raises ValueError on a malformed file."""
-    with open(path) as f:
-        table = json.load(f)
-    if not isinstance(table, dict) or table.get("version") != TABLE_VERSION:
-        raise ValueError(
-            f"autotune table {path}: version {table.get('version')!r} != "
-            f"{TABLE_VERSION}")
-    entries = table.get("entries")
+def _check_entries(entries: Any, where: str) -> None:
     if not isinstance(entries, dict) or not entries:
-        raise ValueError(f"autotune table {path}: no entries")
+        raise ValueError(f"autotune table {where}: no entries")
     ok = _valid_paths()
     for key, ent in entries.items():
         if not isinstance(ent, dict) or ent.get("path") not in ok:
             raise ValueError(
-                f"autotune table {path}: entry {key!r} has invalid path "
+                f"autotune table {where}: entry {key!r} has invalid path "
                 f"{ent.get('path') if isinstance(ent, dict) else ent!r}")
+
+
+def load_table(path: str | Path) -> dict:
+    """Load and validate a table; raises ValueError on a malformed file.
+
+    Returns the v2 shape ``{"version": 2, "backends": {key: {"jax": ...,
+    "entries": {...}}}}``; legacy v1 files (flat ``backend``/``entries``)
+    are up-converted. Unknown backend keys are an error — a typo'd or
+    future-format table must fail loudly, never silently steer nothing.
+    """
+    with open(path) as f:
+        table = json.load(f)
+    if not isinstance(table, dict):
+        raise ValueError(f"autotune table {path}: not a JSON object")
+    version = table.get("version")
+    if version == 1:  # legacy single-backend layout
+        bk = table.get("backend")
+        bk = "gpu" if bk in ("cuda", "rocm") else bk  # old raw spellings
+        if bk not in KNOWN_BACKENDS:
+            raise ValueError(
+                f"autotune table {path}: unknown backend key {bk!r}; "
+                f"expected one of {KNOWN_BACKENDS}")
+        _check_entries(table.get("entries"), str(path))
+        return {"version": TABLE_VERSION,
+                "backends": {bk: {"jax": table.get("jax"),
+                                  "entries": table["entries"]}}}
+    if version != TABLE_VERSION:
+        raise ValueError(
+            f"autotune table {path}: version {version!r} != {TABLE_VERSION}")
+    backends = table.get("backends")
+    if not isinstance(backends, dict) or not backends:
+        raise ValueError(f"autotune table {path}: no backend sections")
+    for bk, section in backends.items():
+        if bk not in KNOWN_BACKENDS:
+            raise ValueError(
+                f"autotune table {path}: unknown backend key {bk!r}; "
+                f"expected one of {KNOWN_BACKENDS}")
+        if not isinstance(section, dict):
+            raise ValueError(
+                f"autotune table {path}: backend {bk!r} section is not an "
+                "object")
+        _check_entries(section.get("entries"), f"{path} [{bk}]")
     return table
 
 
@@ -149,6 +205,19 @@ def save_table(table: dict, path: str | Path) -> None:
         json.dump(table, f, indent=1, sort_keys=True)
         f.write("\n")
     invalidate_cache()
+
+
+def merge_tables(base: dict | None, new: dict) -> dict:
+    """Overlay ``new``'s backend sections onto ``base`` (v2 shapes).
+
+    This is how a GPU-measured table drops into the checked-in default
+    unchanged: only the sections the new measurement covers are replaced.
+    """
+    merged = {"version": TABLE_VERSION, "backends": {}}
+    if base is not None:
+        merged["backends"].update(base.get("backends", {}))
+    merged["backends"].update(new.get("backends", {}))
+    return merged
 
 
 def table_path() -> Path | None:
@@ -160,17 +229,40 @@ def table_path() -> Path | None:
 
 
 def current_table() -> dict | None:
-    """The active, validated table (cached per path), or None."""
+    """The active, validated table (cached per path), or None.
+
+    An *explicitly requested* table (``$REPRO_AUTOTUNE_TABLE``) that fails
+    to load raises — pointing resolution at a table and getting the
+    heuristic would be a silent no-op. The implicit checked-in default
+    degrades to None instead (CI lints it separately).
+    """
     path = table_path()
     if path is None:
         return None
+    explicit = bool(os.environ.get(ENV_TABLE, "").strip())
     key = str(path)
     if key not in _TABLE_CACHE:
         try:
             _TABLE_CACHE[key] = load_table(path)
-        except (OSError, ValueError, json.JSONDecodeError):
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            if explicit:
+                raise ValueError(
+                    f"{ENV_TABLE}={path} is unusable: {e}") from e
             _TABLE_CACHE[key] = None
     return _TABLE_CACHE[key]
+
+
+def current_entries() -> dict | None:
+    """The active table's entries for *this host's* backend, or None.
+
+    The backend key is the isolation boundary: a ``gpu`` section is never
+    consulted on a CPU/TPU host (its crossovers do not transfer).
+    """
+    table = current_table()
+    if table is None:
+        return None
+    section = table["backends"].get(current_backend())
+    return section["entries"] if section else None
 
 
 def enabled() -> bool:
@@ -187,18 +279,23 @@ def heuristic(op: str, n: int, dtype: Any = None,
               candidates: Iterable[str] | None = None) -> str:
     """Deterministic shape-aware fallback (no measurement needed).
 
-    On TPU the tile kernel is native for the reduction/scan family;
-    model-level ops (``FUSED_DEFAULT_OPS``) keep their chunked XLA forms
-    there (see that constant for why). Off-TPU the paper's crossover
-    applies to the reduction/scan family: matmul-form ``fused`` for small
-    segments, the native XLA op beyond ``HEURISTIC_CROSSOVER``. Everything
-    else keeps the static ``fused``.
+    On TPU and GPU the tile kernels are native for the reduction/scan
+    family; model-level ops (``FUSED_DEFAULT_OPS``) keep their chunked XLA
+    forms there (see that constant for why). On GPU the paper's crossover
+    still applies between the Triton kernel and the native vector op
+    (arXiv:1903.03640 measures the same small-segment regime), so large
+    segments fall back to ``baseline``. Off-accelerator the crossover is
+    between the matmul-form ``fused`` and the native op. Everything else
+    keeps the static ``fused``.
     """
     op = _OP_ALIAS.get(op, op)
     if op in FUSED_DEFAULT_OPS:
         want = "fused"
     elif backend.on_tpu() and backend.has_pallas_tpu():
         want = "tile"
+    elif backend.on_gpu() and backend.has_pallas_triton():
+        want = "baseline" if (op in CROSSOVER_OPS
+                              and n > HEURISTIC_CROSSOVER) else "tile"
     elif op in CROSSOVER_OPS and n > HEURISTIC_CROSSOVER:
         want = "baseline"
     else:
@@ -217,7 +314,17 @@ def heuristic(op: str, n: int, dtype: Any = None,
 # i.e. the dispatch layer's "baseline"; the matmul forms ("fused"/
 # "xla_tile") live in repro.core and have no kernel-registry twin.
 _KERNEL_EQUIV = {"baseline": "fused", "tile": "tile",
+                 "tile_tpu": "tile_tpu", "tile_gpu": "tile_gpu",
                  "interpret": "interpret"}
+
+
+def _backend_compatible(path: str) -> bool:
+    """A table entry may only steer onto a tile backend this host lowers."""
+    if path == "tile_tpu":
+        return backend.native_tile_backend() == "tile_tpu"
+    if path == "tile_gpu":
+        return backend.native_tile_backend() == "tile_gpu"
+    return True
 
 
 def choose(op: str, n: int, dtype: Any = None,
@@ -227,8 +334,9 @@ def choose(op: str, n: int, dtype: Any = None,
 
     Returns a concrete path, or None when autotuning is disabled
     (``REPRO_AUTOTUNE=off``) — the caller then applies the static choice.
-    A table measured on a different backend is ignored (its crossovers do
-    not transfer); a missing bucket falls back to :func:`heuristic`.
+    Only the table section for this host's backend is consulted (a
+    GPU-measured section never steers CPU/TPU); a missing bucket falls
+    back to :func:`heuristic`.
 
     ``level="kernel"`` translates the table's dispatch-level labels onto
     the kernel registry's implementations via ``_KERNEL_EQUIV`` (a naive
@@ -238,10 +346,10 @@ def choose(op: str, n: int, dtype: Any = None,
     """
     if not enabled():
         return None
-    table = current_table()
-    if table is not None and table.get("backend") == jax.default_backend():
-        ent = table["entries"].get(bucket_key(op, n, dtype))
-        if ent is not None:
+    entries = current_entries()
+    if entries is not None:
+        ent = entries.get(bucket_key(op, n, dtype))
+        if ent is not None and _backend_compatible(ent["path"]):
             if level == "kernel":
                 if ent["path"] in _KERNEL_EQUIV:
                     return _KERNEL_EQUIV[ent["path"]]
@@ -298,10 +406,14 @@ def measure_table(
     dtypes: Iterable[Any] = DEFAULT_DTYPES,
     iters: int = 3,
 ) -> dict:
-    """Time every contender per (op, dtype, band) bucket -> table dict.
+    """Time every contender per (op, dtype, band) bucket -> a v2 table
+    holding one section for this host's backend.
 
     Runs through ``repro.core.dispatch`` (the same entry every consumer
-    uses), so the table steers exactly what it measured.
+    uses), so the table steers exactly what it measured. Merge the result
+    into a multi-backend file with :func:`merge_tables` (what ``--write``
+    does) — measuring on a GPU host adds/refreshes the ``gpu`` section
+    without touching the others.
     """
     from repro.core import dispatch  # deferred: dispatch imports us
 
@@ -312,12 +424,12 @@ def measure_table(
         "ragged_reduce": dispatch.ragged_reduce,
         "ragged_scan": dispatch.ragged_scan,
     }
-    on_tpu = backend.on_tpu() and backend.has_pallas_tpu()
+    native = backend.native_tile_backend()
     entries: dict[str, dict] = {}
     rng = jax.random.PRNGKey(0)
     for op in ops:
         contenders = OP_CONTENDERS[op]
-        if on_tpu and op in ("reduce", "scan", "weighted_scan"):
+        if native and op in ("reduce", "scan", "weighted_scan"):
             contenders = contenders + ("tile",)
         for dtype in dtypes:
             for b in bands:
@@ -343,31 +455,37 @@ def measure_table(
                 }
     return {
         "version": TABLE_VERSION,
-        "backend": jax.default_backend(),
-        "jax": jax.__version__,
-        "entries": entries,
+        "backends": {current_backend(): {"jax": jax.__version__,
+                                         "entries": entries}},
     }
 
 
 def check_default(default_path: str | Path = DEFAULT_TABLE_PATH) -> list[str]:
     """Structural staleness check for the checked-in default table.
 
-    Parses/validates the file and regenerates the *key set* the harness
-    would produce today (no timing involved); returns a list of problems
-    (empty = fresh). Winning paths are machine-dependent and deliberately
-    not compared.
+    Parses/validates the file (including backend keys) and regenerates the
+    *key set* the harness would produce today for this host's backend (no
+    timing involved); returns a list of problems (empty = fresh). Winning
+    paths are machine-dependent and deliberately not compared; sections for
+    *other* backends are validated structurally but their bucket sets are
+    not compared (they were measured on hardware this host doesn't have).
     """
     problems: list[str] = []
     try:
         table = load_table(default_path)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         return [f"unparseable: {e}"]
+    bk = current_backend()
+    section = table["backends"].get(bk)
+    if section is None:
+        return [f"no section for this host's backend {bk!r} "
+                f"(have: {sorted(table['backends'])})"]
     want = set()
     for op in OP_CONTENDERS:
         for dtype in DEFAULT_DTYPES:
             for b in DEFAULT_BANDS:
                 want.add(bucket_key(op, 1 << b, dtype))
-    have = set(table["entries"])
+    have = set(section["entries"])
     if missing := sorted(want - have):
         problems.append(f"missing buckets: {missing}")
     if extra := sorted(have - want):
@@ -381,7 +499,8 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         description="Measure/refresh the dispatch autotune table.")
     ap.add_argument("--write", action="store_true",
-                    help="measure and write the table")
+                    help="measure this host's backend and merge the section "
+                         "into the table file")
     ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH),
                     help="output path for --write")
     ap.add_argument("--check", action="store_true",
@@ -398,11 +517,19 @@ def main(argv: list[str] | None = None) -> int:
             print(f"autotune default table OK ({DEFAULT_TABLE_PATH})")
         return 1 if problems else 0
     if args.write:
-        table = measure_table(iters=args.iters)
+        measured = measure_table(iters=args.iters)
+        base = None
+        if Path(args.out).exists():
+            try:
+                base = load_table(args.out)
+            except (OSError, ValueError, json.JSONDecodeError):
+                base = None  # overwrite an unusable file
+        table = merge_tables(base, measured)
         save_table(table, args.out)
-        n = len(table["entries"])
-        print(f"wrote {n} buckets to {args.out} "
-              f"(backend={table['backend']}, jax={table['jax']})")
+        bk = current_backend()
+        n = len(table["backends"][bk]["entries"])
+        print(f"wrote {n} buckets for backend={bk} to {args.out} "
+              f"(sections: {sorted(table['backends'])}, jax={jax.__version__})")
         return 0
     ap.print_help()
     return 2

@@ -8,13 +8,17 @@ comparison from a single ``path=`` argument instead of ad-hoc imports:
 
   ``fused``      beyond-paper fused matmul form (repro.core, XLA)
   ``xla_tile``   paper-faithful tile algebra in pure XLA (repro.core)
-  ``tile``       explicit Pallas tile kernel (native on TPU)
+  ``tile``       explicit Pallas tile kernel for this host's backend
+                 (Pallas-TPU on TPU, Pallas-Triton on GPU)
+  ``tile_tpu``   force the Pallas-TPU kernel (raises off-TPU)
+  ``tile_gpu``   force the Pallas-Triton kernel (raises off-GPU)
   ``interpret``  Pallas kernel body through the interpreter (CPU validation)
   ``baseline``   XLA's native vector op (jnp.sum / jnp.cumsum / segment_sum
                  / sequential scan)
   ``auto``       per-shape measured choice via ``repro.core.autotune``
-                 (falls back to the static "tile on TPU, fused elsewhere"
-                 when ``REPRO_AUTOTUNE=off`` or no shape is known)
+                 (backend-keyed tables; falls back to the static "tile on
+                 TPU/GPU, fused elsewhere" when ``REPRO_AUTOTUNE=off`` or
+                 no shape is known)
 
 ``path=None`` defers to ``REPRO_KERNEL_PATH``, then ``auto``. Every op here
 is shape-bucketed for the autotuner by its *segment size* (trailing-axis
@@ -38,7 +42,8 @@ from repro.core.scan import tcu_scan, tcu_weighted_scan
 from repro.core.ssd import ssd_chunked
 from repro.kernels import backend, ops, ref
 
-PATHS = ("auto", "fused", "xla_tile", "tile", "interpret", "baseline")
+PATHS = ("auto", "fused", "xla_tile", "tile", "tile_tpu", "tile_gpu",
+         "interpret", "baseline")
 
 
 def resolve_path(path: str | None = None, *, op: str | None = None,

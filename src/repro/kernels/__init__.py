@@ -11,6 +11,9 @@ mode, selectable per call or via ``REPRO_KERNEL_PATH``):
   fused_rmsnorm.py    RMSNorm with MXU Σx²              (paper §8 future work)
   ssd_scan.py         Mamba-2 SSD = weighted tile scan  (beyond-paper)
   flash_attention.py  blocked attention, matmul-form ℓ  (beyond-paper)
+  layout.py           shared padding/fold glue (both kernel backends)
+  triton/             Pallas-Triton (GPU) twins of all five kernels,
+                      registered as the ``tile_gpu`` entries
 """
 from repro.kernels import backend
 from repro.kernels.backend import (

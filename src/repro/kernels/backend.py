@@ -1,29 +1,37 @@
-"""Version shim + dispatch layer for every Pallas kernel in the repo.
+"""Version shim + multi-backend dispatch layer for every Pallas kernel in
+the repo.
 
-Why this exists: the Pallas-TPU private surface renames things across JAX
+Why this exists: the Pallas private surfaces rename things across JAX
 releases (``pltpu.TPUCompilerParams`` on 0.4.x became ``pltpu.CompilerParams``
-on 0.5+, field sets drift too). Hard-coding one spelling in each kernel broke
-all of them at once; this module is the single place that knows which JAX is
-installed. Kernels call :func:`compiler_params` instead of touching ``pltpu``
-classes, and the public wrappers register with :func:`register_op` so every
-call site picks its execution path through one switch:
+on 0.5+, same drift on the Triton side, field sets move too). Hard-coding
+one spelling in each kernel broke all of them at once; this module is the
+single place that knows which JAX is installed and which accelerator is
+active. Kernels call :func:`compiler_params` instead of touching
+``pltpu``/``plgpu`` classes, and the public wrappers register with
+:func:`register_op` so every call site picks its execution path through one
+switch:
 
   ``fused``      the XLA reference path (``repro.kernels.ref`` /
-                 ``repro.core``) — default off-TPU
-  ``tile``       the explicit Pallas tile kernel — native on TPU, silently
-                 downgraded to ``interpret`` elsewhere (there is no TPU to
-                 compile for)
+                 ``repro.core``) — default off-accelerator
+  ``tile``       the explicit Pallas tile kernel for *this host's* backend:
+                 resolves to ``tile_tpu`` on TPU, ``tile_gpu`` on GPU
+                 (Pallas-Triton), and downgrades to ``interpret`` elsewhere
+                 with a one-time warning (there is nothing to compile for)
+  ``tile_tpu``   force the Pallas-TPU kernel — raises off-TPU
+  ``tile_gpu``   force the Pallas-Triton kernel — raises off-GPU
   ``interpret``  the Pallas kernel body through the interpreter — how the
                  kernels are validated on CPU
-  ``auto``       ``tile`` on TPU, ``fused`` otherwise
+  ``auto``       ``tile`` on TPU/GPU, ``fused`` otherwise
 
 Selection precedence: per-call ``path=`` kwarg > per-call legacy
 ``use_pallas=`` bool > ``REPRO_KERNEL_PATH`` env var > ``auto``. Passing
 both ``path=`` and ``use_pallas=`` with conflicting values warns and honours
 ``path=``. ``auto`` consults the measured per-shape crossover table in
-``repro.core.autotune`` when the call shape is known, falling back to the
-static choice (tile on TPU, fused elsewhere) otherwise or when
-``REPRO_AUTOTUNE=off``.
+``repro.core.autotune`` (keyed by backend — a GPU-measured table never
+steers a CPU/TPU host) when the call shape is known, falling back to the
+static choice (tile on TPU/GPU, fused elsewhere) otherwise or when
+``REPRO_AUTOTUNE=off``. ``auto`` never selects a ``tile_*`` label the host
+cannot lower natively.
 """
 from __future__ import annotations
 
@@ -36,7 +44,7 @@ from typing import Any, Callable
 import jax
 
 ENV_PATH = "REPRO_KERNEL_PATH"
-PATHS = ("auto", "fused", "tile", "interpret")
+PATHS = ("auto", "fused", "tile", "tile_tpu", "tile_gpu", "interpret")
 
 
 # ---------------------------------------------------------------------------
@@ -48,6 +56,11 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def on_gpu() -> bool:
+    """True when the default JAX backend is a GPU (CUDA or ROCm)."""
+    return jax.default_backend() in ("gpu", "cuda", "rocm")
+
+
 def has_pallas_tpu() -> bool:
     """True when this JAX ships the Pallas-TPU lowering at all."""
     try:
@@ -55,6 +68,24 @@ def has_pallas_tpu() -> bool:
         return True
     except ImportError:
         return False
+
+
+def has_pallas_triton() -> bool:
+    """True when this JAX ships the Pallas-Triton (GPU) lowering at all."""
+    try:
+        from repro.kernels.triton import compat
+    except ImportError:  # pragma: no cover — broken install
+        return False
+    return compat.available()
+
+
+def native_tile_backend() -> str | None:
+    """The concrete tile path this host lowers natively, or None."""
+    if on_tpu() and has_pallas_tpu():
+        return "tile_tpu"
+    if on_gpu() and has_pallas_triton():
+        return "tile_gpu"
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -82,13 +113,25 @@ def _accepted_fields(cls: type) -> set[str]:
     return set(inspect.signature(cls).parameters)
 
 
-def compiler_params(**kwargs: Any):
-    """Construct compiler params portably.
+def compiler_params(backend: str = "tpu", **kwargs: Any):
+    """Construct compiler params portably for either Pallas backend.
 
-    Fields unknown to the installed JAX (the field set drifts between
-    releases) are dropped rather than raising, so kernels can request newer
-    knobs without pinning a JAX version.
+    ``backend="tpu"`` (default) builds the Pallas-TPU params;
+    ``backend="gpu"`` defers to the Triton shim in
+    ``repro.kernels.triton.compat`` (the only module allowed to import
+    ``jax.experimental.pallas.triton``). Fields unknown to the installed
+    JAX (the field sets drift between releases) are dropped rather than
+    raising, so kernels can request newer knobs without pinning a JAX
+    version.
     """
+    if backend in ("gpu", "triton"):
+        from repro.kernels.triton import compat
+
+        return compat.compiler_params(**kwargs)
+    if backend != "tpu":
+        raise ValueError(
+            f"unknown compiler-params backend {backend!r}; "
+            "expected 'tpu' or 'gpu'")
     cls = compiler_params_cls()
     fields = _accepted_fields(cls)
     if "dimension_semantics" in kwargs and kwargs["dimension_semantics"]:
@@ -105,12 +148,32 @@ def compiler_params(**kwargs: Any):
 # them (their nearest kernel-level equivalent is the fused XLA path)
 _DISPATCH_ONLY = ("baseline", "xla_tile")
 
+_TILE_DOWNGRADE_WARNED = False
+
+
+def _warn_tile_downgrade() -> None:
+    """One-time notice that the generic ``tile`` label fell back to the
+    interpreter — silent interpreter execution looks like a hang at real
+    sizes, so say so once per process."""
+    global _TILE_DOWNGRADE_WARNED
+    if _TILE_DOWNGRADE_WARNED:
+        return
+    _TILE_DOWNGRADE_WARNED = True
+    warnings.warn(
+        f"path='tile' has no native Pallas lowering on the "
+        f"{jax.default_backend()!r} backend (tile_tpu needs a TPU, tile_gpu "
+        "a GPU with Pallas-Triton); running the kernel body through the "
+        "Pallas interpreter instead. Pass path='interpret' explicitly to "
+        "silence this one-time warning.",
+        UserWarning, stacklevel=5)
+
 
 def resolve_path(path: str | None = None, *,
                  use_pallas: bool | None = None,
                  op: str | None = None, n: int | None = None,
                  dtype: Any = None) -> str:
-    """Resolve a concrete execution path: ``fused`` | ``tile`` | ``interpret``.
+    """Resolve a concrete execution path:
+    ``fused`` | ``tile_tpu`` | ``tile_gpu`` | ``interpret``.
 
     ``path`` is the explicit per-call choice; ``use_pallas`` is the legacy
     bool (True → kernel, False → fused, None → unspecified); with neither,
@@ -119,16 +182,21 @@ def resolve_path(path: str | None = None, *,
     emitted (``path='interpret'`` with ``use_pallas=True`` is *not* a
     conflict — interpret runs the same kernel body).
 
+    The generic ``tile`` resolves per backend (TPU kernel on TPU, Triton
+    kernel on GPU, interpreter + one-time warning elsewhere); the explicit
+    ``tile_tpu``/``tile_gpu`` labels raise a clear error on the wrong host.
+
     ``op``/``n``/``dtype`` describe the call shape; with them, ``auto``
-    consults the measured crossover table (``repro.core.autotune``)
-    instead of the static TPU check.
+    consults the measured, backend-keyed crossover table
+    (``repro.core.autotune``) instead of the static backend check.
     """
     if use_pallas is not None:
         implied = "tile" if use_pallas else "fused"
         if path is None:
             path = implied
         elif (use_pallas and path == "fused") or \
-                (not use_pallas and path in ("tile", "interpret")):
+                (not use_pallas and path in ("tile", "tile_tpu", "tile_gpu",
+                                             "interpret")):
             warnings.warn(
                 f"conflicting path={path!r} and use_pallas={use_pallas}; "
                 "path= takes precedence (use_pallas= is legacy)",
@@ -139,17 +207,38 @@ def resolve_path(path: str | None = None, *,
             path = "fused"
     if path not in PATHS:
         raise ValueError(f"unknown kernel path {path!r}; expected one of {PATHS}")
+    native = native_tile_backend()
     if path == "auto":
         choice = None
         if op is not None and n is not None:
             from repro.core import autotune  # deferred: autotune imports us
 
-            choice = autotune.choose(op, n, dtype,
-                                     candidates=("fused", "tile", "interpret"),
-                                     level="kernel")
-        path = choice or ("tile" if on_tpu() and has_pallas_tpu() else "fused")
-    if path == "tile" and not on_tpu():
-        path = "interpret"  # nothing to compile the tile kernel for
+            choice = autotune.choose(
+                op, n, dtype,
+                candidates=("fused", "tile", "tile_tpu", "tile_gpu",
+                            "interpret"),
+                level="kernel")
+            # auto must never force a tile backend this host can't lower
+            if choice in ("tile_tpu", "tile_gpu") and choice != native:
+                choice = None
+        path = choice or ("tile" if native else "fused")
+    if path == "tile":
+        if native is None:
+            _warn_tile_downgrade()
+            return "interpret"  # nothing to compile the tile kernel for
+        return native
+    if path == "tile_tpu" and native != "tile_tpu":
+        raise RuntimeError(
+            "path='tile_tpu' requires a TPU host with the Pallas-TPU "
+            f"lowering (active backend: {jax.default_backend()!r}); use "
+            "path='interpret' for CPU validation or path='tile' for "
+            "backend-appropriate selection")
+    if path == "tile_gpu" and native != "tile_gpu":
+        raise RuntimeError(
+            "path='tile_gpu' requires a GPU host with the Pallas-Triton "
+            f"lowering (active backend: {jax.default_backend()!r}); use "
+            "path='interpret' for CPU validation or path='tile' for "
+            "backend-appropriate selection")
     return path
 
 
@@ -159,20 +248,27 @@ def resolve_path(path: str | None = None, *,
 
 @dataclasses.dataclass(frozen=True)
 class PallasOp:
-    """One kernel family: the Pallas tile entry (must accept an
-    ``interpret=`` kwarg) and its fused-XLA reference twin."""
+    """One kernel family: the Pallas tile entries per backend (each must
+    accept an ``interpret=`` kwarg) and the fused-XLA reference twin.
+
+    ``tile`` is the Pallas-TPU entry (also the body the ``interpret`` path
+    runs); ``tile_gpu`` the Pallas-Triton twin, or None while a family has
+    no GPU kernel yet.
+    """
 
     name: str
     tile: Callable[..., Any]
     fused: Callable[..., Any]
+    tile_gpu: Callable[..., Any] | None = None
 
 
 _REGISTRY: dict[str, PallasOp] = {}
 
 
 def register_op(name: str, *, tile: Callable[..., Any],
-                fused: Callable[..., Any]) -> PallasOp:
-    op = PallasOp(name=name, tile=tile, fused=fused)
+                fused: Callable[..., Any],
+                tile_gpu: Callable[..., Any] | None = None) -> PallasOp:
+    op = PallasOp(name=name, tile=tile, fused=fused, tile_gpu=tile_gpu)
     _REGISTRY[name] = op
     return op
 
@@ -214,4 +310,10 @@ def pallas_op(name: str, *args: Any, path: str | None = None,
     p = resolve_path(path, use_pallas=use_pallas, op=name, n=n, dtype=dt)
     if p == "fused":
         return op.fused(*args, **kwargs)
+    if p == "tile_gpu":
+        if op.tile_gpu is None:
+            raise RuntimeError(
+                f"{name}: no Pallas-Triton (GPU) kernel registered for this "
+                "op; use path='tile_tpu', 'interpret', or 'fused'")
+        return op.tile_gpu(*args, interpret=False, **kwargs)
     return op.tile(*args, interpret=(p == "interpret"), **kwargs)

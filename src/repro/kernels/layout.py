@@ -1,0 +1,75 @@
+"""Shared layout/padding glue for the kernel wrappers.
+
+Both kernel backends (the Pallas-TPU twins in this package and the
+Pallas-Triton twins in ``repro.kernels.triton``) wrap the same shape-strict
+kernels in the same way: flatten leading dims, zero-pad to the backend's
+tile multiples, run, slice the valid block back out. The padding algebra is
+backend-independent — only the multiples differ (128-lane MXU tiles vs
+16-wide tensor-core MMA fragments) — so it lives here once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    rem = (-x.shape[axis]) % multiple
+    if not rem:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def nrows(lead: tuple[int, ...]) -> int:
+    """Product of the leading (batch-like) dims a wrapper flattens away."""
+    rows = 1
+    for s in lead:
+        rows *= s
+    return rows
+
+
+def ssd_fold(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array):
+    """Model layout -> kernel layout for the SSD chunk-scan kernels.
+
+    Folds ``(B, H)`` into one grid axis, broadcasts the G kv-like groups
+    over the H heads, and pre-weights the inputs: ``xdt = dt * x``,
+    ``lam = dt * a``. Returns ``(xdt (BH, L, P), lam (BH, L),
+    bb (BH, L, N), cc (BH, L, N))`` in f32, unpadded — the caller applies
+    its backend's tile-multiple padding (zero-padding is harmless: lam = 0
+    means decay 1 and input 0).
+    """
+    bsz, seqlen, nheads, hdim = x.shape
+    ngroups, nstate = b.shape[2], b.shape[3]
+    rep = nheads // ngroups
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    xdt = jnp.moveaxis(xdt, 2, 1).reshape(bsz * nheads, seqlen, hdim)
+    lam = (dt.astype(jnp.float32) * a.astype(jnp.float32))
+    lam = jnp.moveaxis(lam, 2, 1).reshape(bsz * nheads, seqlen)
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    bb = jnp.moveaxis(bb, 2, 1).reshape(bsz * nheads, seqlen, nstate)
+    cc = jnp.moveaxis(cc, 2, 1).reshape(bsz * nheads, seqlen, nstate)
+    return xdt, lam, bb, cc
+
+
+def ssd_unfold(y: jax.Array, state: jax.Array, *, bsz: int, nheads: int,
+               seqlen: int, hdim: int, nstate: int, out_dtype,
+               return_state: bool):
+    """Kernel layout back to model layout; slices padding off.
+
+    ``y`` is (BH, L_pad, P_pad), ``state`` (BH, N_pad, P_pad); the
+    zero-padding of b/x keeps the valid state block exact, so slicing is
+    enough. Returns ``y (B, L, H, P)`` (cast to ``out_dtype``) and, when
+    requested, the final state ``(B, H, P, N)`` f32 (matching
+    ``ssd_chunked``).
+    """
+    y = y[:, :seqlen, :hdim].reshape(bsz, nheads, seqlen, hdim)
+    y = jnp.moveaxis(y, 1, 2).astype(out_dtype)
+    if not return_state:
+        return y
+    st = state[:, :nstate, :hdim].reshape(bsz, nheads, nstate, hdim)
+    return y, jnp.swapaxes(st, -1, -2)

@@ -1,13 +1,15 @@
 """Public wrappers for the Pallas kernels, dispatched through
 ``repro.kernels.backend``.
 
-Every op registers a (tile, fused) pair with :func:`backend.register_op`:
-the *tile* entry is the padding/layout glue in this module feeding the
-shape-strict, MXU-aligned Pallas kernel (native on TPU, interpret mode on
-CPU); the *fused* entry is the pure-jnp oracle in ``ref.py``. The execution
-path is chosen per call (``path=`` / legacy ``use_pallas=``), via the
-``REPRO_KERNEL_PATH`` env var, or automatically (kernel on TPU, fused XLA
-elsewhere) — see the backend module docstring for precedence.
+Every op registers a (tile, fused[, tile_gpu]) triple with
+:func:`backend.register_op`: the *tile* entry is the padding/layout glue in
+this module feeding the shape-strict, MXU-aligned Pallas-TPU kernel (native
+on TPU, interpret mode on CPU); the *tile_gpu* entry is the Pallas-Triton
+twin's glue (``repro.kernels.triton.ops``, native on GPU); the *fused*
+entry is the pure-jnp oracle in ``ref.py``. The execution path is chosen
+per call (``path=`` / legacy ``use_pallas=``), via the ``REPRO_KERNEL_PATH``
+env var, or automatically (kernel on TPU/GPU, fused XLA elsewhere) — see
+the backend module docstring for precedence.
 """
 from __future__ import annotations
 
@@ -18,6 +20,9 @@ import jax.numpy as jnp
 
 from repro.kernels import backend, ref
 from repro.kernels.backend import pallas_op
+from repro.kernels.layout import nrows as _nrows
+from repro.kernels.layout import pad_axis as _pad_axis
+from repro.kernels.layout import ssd_fold, ssd_unfold
 
 if backend.has_pallas_tpu():
     from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -30,6 +35,11 @@ else:  # pragma: no cover — JAX without the Pallas-TPU lowering
     _flash_kernel = _rmsnorm_kernel = _ssd_kernel = None
     _reduce_kernel = _scan_kernel = None
 
+if backend.has_pallas_triton():
+    from repro.kernels.triton import ops as triton_ops
+else:  # pragma: no cover — JAX without the Pallas-Triton lowering
+    triton_ops = None
+
 
 def _require_pallas(kernel, name: str):
     if kernel is None:
@@ -39,25 +49,14 @@ def _require_pallas(kernel, name: str):
     return kernel
 
 
+def _gpu_entry(fn_name: str):
+    """The Triton glue entry, or None when this JAX has no Pallas-Triton."""
+    return getattr(triton_ops, fn_name) if triton_ops is not None else None
+
+
 LANES = 128
 
 on_tpu = backend.on_tpu  # re-exported; historical home of this probe
-
-
-def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
-    rem = (-x.shape[axis]) % multiple
-    if not rem:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad)
-
-
-def _nrows(lead: tuple[int, ...]) -> int:
-    rows = 1
-    for s in lead:
-        rows *= s
-    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -130,7 +129,7 @@ def weighted_scan(x: jax.Array, log_a: jax.Array, *, path: str | None = None,
 
 
 # ---------------------------------------------------------------------------
-# rmsnorm (differentiable: both paths share one custom VJP)
+# rmsnorm (differentiable: all paths share one custom VJP)
 
 
 def _rmsnorm_tile_fwd(x, w, eps, interpret):
@@ -145,6 +144,8 @@ def _rmsnorm_tile_fwd(x, w, eps, interpret):
 def _rmsnorm_dispatch(kind, x, w, eps):
     if kind == "fused":
         return ref.rmsnorm_ref(x, w, eps=eps)
+    if kind == "tile_gpu":
+        return triton_ops.rmsnorm_tile_gpu_fwd(x, w, eps, False)
     return _rmsnorm_tile_fwd(x, w, eps, kind == "interpret")
 
 
@@ -167,6 +168,13 @@ def _rmsnorm_tile(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
     return _rmsnorm_dispatch("interpret" if interpret else "tile", x, w, eps)
 
 
+def _rmsnorm_tile_gpu(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                      interpret: bool = False) -> jax.Array:
+    if interpret:  # interpret validation runs outside the VJP wrapper too
+        return triton_ops.rmsnorm_tile_gpu_fwd(x, w, eps, True)
+    return _rmsnorm_dispatch("tile_gpu", x, w, eps)
+
+
 def _rmsnorm_fused(x: jax.Array, w: jax.Array, *,
                    eps: float = 1e-6) -> jax.Array:
     return _rmsnorm_dispatch("fused", x, w, eps)
@@ -175,7 +183,7 @@ def _rmsnorm_fused(x: jax.Array, w: jax.Array, *,
 def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
             path: str | None = None,
             use_pallas: bool | None = None) -> jax.Array:
-    """RMSNorm over the last axis (differentiable; Pallas fwd on TPU)."""
+    """RMSNorm over the last axis (differentiable; Pallas fwd on TPU/GPU)."""
     return pallas_op("rmsnorm", x, w, eps=eps, path=path,
                      use_pallas=use_pallas)
 
@@ -195,31 +203,20 @@ def _ssd_tile(
     interpret: bool = False,
 ):
     bsz, seqlen, nheads, hdim = x.shape
-    ngroups, nstate = b.shape[2], b.shape[3]
-    rep = nheads // ngroups
+    nstate = b.shape[3]
     # fold (B, H) and broadcast groups; pad P (lane dim) and L to 128
-    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
-    xdt = jnp.moveaxis(xdt, 2, 1).reshape(bsz * nheads, seqlen, hdim)
-    lam = (dt.astype(jnp.float32) * a.astype(jnp.float32))
-    lam = jnp.moveaxis(lam, 2, 1).reshape(bsz * nheads, seqlen)
-    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
-    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
-    bb = jnp.moveaxis(bb, 2, 1).reshape(bsz * nheads, seqlen, nstate)
-    cc = jnp.moveaxis(cc, 2, 1).reshape(bsz * nheads, seqlen, nstate)
+    xdt, lam, bb, cc = ssd_fold(x, dt, a, b, c)
     xdt = _pad_axis(_pad_axis(xdt, 2, LANES), 1, LANES)
     lam = _pad_axis(lam, 1, LANES)
     bb = _pad_axis(_pad_axis(bb, 2, 8), 1, LANES)
     cc = _pad_axis(_pad_axis(cc, 2, 8), 1, LANES)
     y, state = _require_pallas(_ssd_kernel, "ssd_scan")(
         xdt, lam, bb, cc, interpret=interpret)
-    y = y[:, :seqlen, :hdim].reshape(bsz, nheads, seqlen, hdim)
-    y = jnp.moveaxis(y, 1, 2).astype(x.dtype)
-    if not return_state:
-        return y
     # kernel state is (B*H, N_pad, P_pad); zero-padding of b/x keeps the
     # valid block exact — slice and match ssd_chunked's (B, H, P, N)
-    st = state[:, :nstate, :hdim].reshape(bsz, nheads, nstate, hdim)
-    return y, jnp.swapaxes(st, -1, -2)
+    return ssd_unfold(y, state, bsz=bsz, nheads=nheads, seqlen=seqlen,
+                      hdim=hdim, nstate=nstate, out_dtype=x.dtype,
+                      return_state=return_state)
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
@@ -264,12 +261,19 @@ def attention(
 # registry
 
 backend.register_op("segmented_reduce", tile=_reduce_tile,
-                    fused=ref.segmented_reduce_ref)
+                    fused=ref.segmented_reduce_ref,
+                    tile_gpu=_gpu_entry("reduce_tile_gpu"))
 backend.register_op("segmented_scan", tile=_scan_tile,
-                    fused=ref.segmented_scan_ref)
+                    fused=ref.segmented_scan_ref,
+                    tile_gpu=_gpu_entry("scan_tile_gpu"))
 backend.register_op("weighted_scan", tile=_weighted_scan_tile,
-                    fused=ref.weighted_scan_ref)
-backend.register_op("rmsnorm", tile=_rmsnorm_tile, fused=_rmsnorm_fused)
-backend.register_op("ssd_scan", tile=_ssd_tile, fused=ref.ssd_scan_ref)
+                    fused=ref.weighted_scan_ref,
+                    tile_gpu=_gpu_entry("weighted_scan_tile_gpu"))
+backend.register_op("rmsnorm", tile=_rmsnorm_tile, fused=_rmsnorm_fused,
+                    tile_gpu=(_rmsnorm_tile_gpu if triton_ops is not None
+                              else None))
+backend.register_op("ssd_scan", tile=_ssd_tile, fused=ref.ssd_scan_ref,
+                    tile_gpu=_gpu_entry("ssd_tile_gpu"))
 backend.register_op("attention", tile=_attention_tile,
-                    fused=ref.flash_attention_ref)
+                    fused=ref.flash_attention_ref,
+                    tile_gpu=_gpu_entry("attention_tile_gpu"))

@@ -1,0 +1,33 @@
+"""Pallas-Triton (GPU) twins of every Pallas-TPU kernel in the parent
+package — the paper's algorithms on the hardware the paper targeted.
+
+Each kernel expresses segmented reduction/scan as chained tensor-core MMA
+fragments (ones-vector reduction, upper-triangular-matmul scan) with
+GPU-appropriate block shapes and grid schedules: CUDA grids are parallel,
+so every sequential carry the TPU twins thread through a grid dimension +
+VMEM scratch becomes an in-kernel ``fori_loop`` with register carries here.
+
+The kernels register as the ``tile_gpu`` entries of the
+``repro.kernels.backend`` op registry (see ``repro.kernels.ops``); the
+generic ``tile`` path resolves to them on GPU hosts. On CPU the whole
+subsystem is validated through Pallas interpret mode.
+
+Import discipline: only ``repro.kernels.triton.compat`` may touch
+``jax.experimental.pallas.triton`` (grep-guard enforced).
+"""
+from repro.kernels.triton.compat import available, compiler_params
+from repro.kernels.triton.flash_attention import triton_flash_attention
+from repro.kernels.triton.fused_rmsnorm import triton_fused_rmsnorm
+from repro.kernels.triton.ssd_scan import triton_ssd_chunk_scan
+from repro.kernels.triton.tcu_reduce import triton_segmented_reduce
+from repro.kernels.triton.tcu_scan import triton_segmented_scan
+
+__all__ = [
+    "available",
+    "compiler_params",
+    "triton_flash_attention",
+    "triton_fused_rmsnorm",
+    "triton_segmented_reduce",
+    "triton_segmented_scan",
+    "triton_ssd_chunk_scan",
+]

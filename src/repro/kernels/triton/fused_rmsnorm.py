@@ -1,0 +1,92 @@
+"""Pallas-Triton kernel: RMSNorm with a matmul-form sum-of-squares (GPU twin
+of ``repro.kernels.fused_rmsnorm``).
+
+Same algebra as the TPU twin: the row reduction is fed through the tensor
+core as ``(x∘x) @ 1`` with the all-ones RHS doubling as the lane broadcast
+(every output lane holds the row's sum of squares, so no cross-lane shuffle
+is needed before the elementwise normalisation — the effect the V100 paper
+needed Listing-3 layout hacks for).
+
+GPU restructure: a (128, 8192) f32 row block does not fit in a CTA's
+registers, so the kernel makes two passes over the feature dim in
+``BLOCK_D`` chunks — pass 1 accumulates the chained sum-of-squares MMA,
+pass 2 re-reads x (L2-hot) and writes the normalised output. Unlike the TPU
+twin, the feature dim may be zero-padded: the true ``d`` is a separate
+static divisor, so Σx² over the padded row is exact.
+
+Grid: ``(rows / BLOCK_R,)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import backend
+
+TILE = 16  # tensor-core MMA fragment edge
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, d: int,
+                    block_d: int, nchunks: int):
+    ones = jnp.ones((block_d, TILE), jnp.float32)
+
+    def ssq_body(k, acc):
+        xx = pl.load(
+            x_ref, (slice(None), pl.dslice(k * block_d, block_d))
+        ).astype(jnp.float32)
+        # (x∘x) @ 1 : matmul-form row reduction, lanes replicated
+        return acc + jax.lax.dot_general(
+            xx * xx, ones, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    ssq = jax.lax.fori_loop(
+        0, nchunks, ssq_body,
+        jnp.zeros((x_ref.shape[0], TILE), jnp.float32))
+    # lanes are identical; collapse without arithmetic, divide by the TRUE d
+    rstd = jax.lax.rsqrt(jnp.max(ssq, axis=1, keepdims=True) / d + eps)
+
+    def norm_body(k, _):
+        sl = (slice(None), pl.dslice(k * block_d, block_d))
+        xx = pl.load(x_ref, sl).astype(jnp.float32)
+        w = pl.load(w_ref, (slice(None), sl[1])).astype(jnp.float32)  # (1, BD)
+        pl.store(o_ref, sl, (xx * rstd * w).astype(o_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, nchunks, norm_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "d", "block_r",
+                                             "block_d", "interpret"))
+def triton_fused_rmsnorm(
+    x: jax.Array, w: jax.Array, *, eps: float = 1e-6, d: int | None = None,
+    block_r: int = 16, block_d: int = 128, interpret: bool = False,
+) -> jax.Array:
+    """RMSNorm rows of ``x (rows, d_pad)`` by ``w (d_pad,)``.
+
+    ``rows % block_r == 0`` and ``d_pad % block_d == 0`` (wrapper pads the
+    feature dim with zeros and passes the true feature count as ``d``).
+    """
+    rows, d_pad = x.shape
+    if d is None:
+        d = d_pad
+    if rows % block_r or d_pad % block_d:
+        raise ValueError(
+            f"shape {x.shape} must tile {(block_r, block_d)}")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps, d=d, block_d=block_d,
+                          nchunks=d_pad // block_d),
+        grid=(rows // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d_pad), x.dtype),
+        compiler_params=backend.compiler_params(
+            backend="gpu", num_warps=8, num_stages=2),
+        interpret=interpret,
+        name="triton_fused_rmsnorm",
+    )(x, w.reshape(1, d_pad))

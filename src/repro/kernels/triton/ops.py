@@ -1,0 +1,151 @@
+"""Padding/layout glue for the Pallas-Triton twins — the ``tile_gpu``
+entries of the ``repro.kernels.backend`` op registry.
+
+Mirrors the TPU glue in ``repro.kernels.ops`` with GPU tile multiples
+(16-wide tensor-core MMA fragments instead of 128-lane MXU tiles) and GPU
+layouts (row-major segment rows — no transposed LoadTile). Registration
+happens in ``repro.kernels.ops`` next to the TPU entries; nothing here
+imports that module (it imports us).
+
+Every wrapper takes ``interpret=``: True runs the kernel body through the
+Pallas interpreter (how CI validates this subsystem on CPU); False compiles
+through Triton and therefore requires a GPU — forcing ``path="tile_gpu"``
+on a non-GPU host raises immediately rather than failing inside the
+compiler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import backend, ref
+from repro.kernels.layout import nrows, pad_axis, ssd_fold, ssd_unfold
+from repro.kernels.triton.flash_attention import triton_flash_attention
+from repro.kernels.triton.fused_rmsnorm import triton_fused_rmsnorm
+from repro.kernels.triton.ssd_scan import TILE, triton_ssd_chunk_scan
+from repro.kernels.triton.tcu_reduce import triton_segmented_reduce
+from repro.kernels.triton.tcu_scan import triton_segmented_scan
+
+BLOCK_S = 32   # segment rows per program (reduce/scan)
+BLOCK_N = 64   # column chunk per chained MMA
+SSD_Q = 64     # SSD chunk length
+
+
+def _require_gpu(interpret: bool, name: str) -> None:
+    if not interpret and not backend.on_gpu():
+        raise RuntimeError(
+            f"{name}: path='tile_gpu' compiles through Pallas-Triton and "
+            f"needs a GPU, but the active JAX backend is "
+            f"{jax.default_backend()!r}; use path='interpret' for CPU "
+            "validation, or the backend-agnostic path='tile' / 'auto'")
+
+
+# ---------------------------------------------------------------------------
+# segmented reduce / scan
+
+
+def reduce_tile_gpu(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    _require_gpu(interpret, "segmented_reduce")
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    flat = x.reshape(-1, n)
+    # row-major LoadTile: rows are segments; pad to the block grid
+    xp = pad_axis(pad_axis(flat, 0, BLOCK_S), 1, BLOCK_N)
+    out = triton_segmented_reduce(xp, block_s=BLOCK_S, block_n=BLOCK_N,
+                                  interpret=interpret)
+    return out[: flat.shape[0]].reshape(lead)
+
+
+def scan_tile_gpu(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    _require_gpu(interpret, "segmented_scan")
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    flat = pad_axis(pad_axis(x.reshape(-1, n), 0, BLOCK_S), 1, BLOCK_N)
+    out = triton_segmented_scan(flat, block_s=BLOCK_S, block_n=BLOCK_N,
+                                interpret=interpret)
+    return out[: nrows(lead), :n].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# weighted scan (the SSD kernel degenerated to N = P = 1, B = C = 1)
+
+
+def weighted_scan_tile_gpu(x: jax.Array, log_a: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    _require_gpu(interpret, "weighted_scan")
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    rows = nrows(lead)
+    xf = x.reshape(rows, n).astype(jnp.float32)
+    la = log_a.reshape(rows, n).astype(jnp.float32)
+    # state dim N=1 and head dim P=1, padded to one MMA fragment edge:
+    # b = c = e_1 make the recurrence y_t = h_t = exp(la_t) h_{t-1} + x_t.
+    xp = pad_axis(pad_axis(xf[..., None], 2, TILE), 1, SSD_Q)
+    lap = pad_axis(la, 1, SSD_Q)   # pad with 0 ⇒ decay 1, input 0: harmless
+    e1 = jnp.ones((rows, n, 1), jnp.float32)
+    e1 = pad_axis(pad_axis(e1, 2, TILE), 1, SSD_Q)
+    y, _ = triton_ssd_chunk_scan(xp, lap, e1, e1, q=SSD_Q,
+                                 interpret=interpret)
+    return y[:, :n, 0].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm (forward only — ops.rmsnorm wraps every path in one custom VJP)
+
+
+def rmsnorm_tile_gpu_fwd(x: jax.Array, w: jax.Array, eps: float,
+                         interpret: bool) -> jax.Array:
+    _require_gpu(interpret, "rmsnorm")
+    lead, d = x.shape[:-1], x.shape[-1]
+    flat = pad_axis(pad_axis(x.reshape(-1, d), 0, 16), 1, 128)
+    wp = pad_axis(w, 0, 128)
+    out = triton_fused_rmsnorm(flat, wp, eps=eps, d=d, interpret=interpret)
+    return out[: nrows(lead), :d].reshape(*lead, d)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+
+
+def ssd_tile_gpu(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)    positive step sizes
+    a: jax.Array,       # (H,)         negative decay rates
+    b: jax.Array,       # (B, L, G, N)
+    c: jax.Array,       # (B, L, G, N)
+    *,
+    return_state: bool = False,
+    interpret: bool = False,
+):
+    _require_gpu(interpret, "ssd_scan")
+    bsz, seqlen, nheads, hdim = x.shape
+    nstate = b.shape[3]
+    xdt, lam, bb, cc = ssd_fold(x, dt, a, b, c)
+    # pad P and N to the MMA fragment edge, L to the chunk length
+    xdt = pad_axis(pad_axis(xdt, 2, TILE), 1, SSD_Q)
+    lam = pad_axis(lam, 1, SSD_Q)
+    bb = pad_axis(pad_axis(bb, 2, TILE), 1, SSD_Q)
+    cc = pad_axis(pad_axis(cc, 2, TILE), 1, SSD_Q)
+    y, state = triton_ssd_chunk_scan(xdt, lam, bb, cc, q=SSD_Q,
+                                     interpret=interpret)
+    return ssd_unfold(y, state, bsz=bsz, nheads=nheads, seqlen=seqlen,
+                      hdim=hdim, nstate=nstate, out_dtype=x.dtype,
+                      return_state=return_state)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def attention_tile_gpu(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    scale: float | None = None, interpret: bool = False,
+) -> jax.Array:
+    _require_gpu(interpret, "attention")
+    lq, lk, d = q.shape[2], k.shape[2], q.shape[3]
+    if lq % 64 or lk % 64 or d % TILE:  # kernel is block-strict -> oracle
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    return triton_flash_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, interpret=interpret)

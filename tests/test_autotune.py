@@ -1,6 +1,7 @@
 """Autotune subsystem tests: bucketing, the heuristic fallback, table
-round-trip (write -> load -> ``auto`` resolves per the table), env-var
-overrides, and the checked-in default's freshness."""
+round-trip (write -> load -> ``auto`` resolves per the table), backend
+keying (a GPU section never steers a CPU host; unknown backend keys fail
+loudly), env-var overrides, and the checked-in default's freshness."""
 import json
 
 import jax
@@ -19,11 +20,11 @@ def _fresh_cache():
     autotune.invalidate_cache()
 
 
-def _write_table(path, entries):
+def _write_table(path, entries, backend_name=None):
     table = {"version": autotune.TABLE_VERSION,
-             "backend": jax.default_backend(),
-             "jax": jax.__version__,
-             "entries": entries}
+             "backends": {backend_name or autotune.current_backend(): {
+                 "jax": jax.__version__,
+                 "entries": entries}}}
     autotune.save_table(table, path)
     return table
 
@@ -45,7 +46,7 @@ def test_bucket_key_bands_and_dtypes():
 
 
 def test_heuristic_crossover_off_tpu():
-    if backend.on_tpu():
+    if backend.on_tpu() or backend.on_gpu():
         pytest.skip("CPU-only expectations")
     assert autotune.heuristic("reduce", 16) == "fused"
     assert autotune.heuristic("reduce", 8192) == "baseline"
@@ -74,7 +75,9 @@ def test_table_roundtrip_auto_flips_across_buckets(tmp_path, monkeypatch):
     monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
     autotune.invalidate_cache()
     loaded = autotune.load_table(path)
-    assert loaded["entries"]["reduce/f32/4"]["path"] == "fused"
+    bk = autotune.current_backend()
+    assert loaded["backends"][bk]["entries"]["reduce/f32/4"]["path"] == \
+        "fused"
     # the exact resolver every dispatch op calls:
     assert dispatch.resolve_path(op="reduce", n=16,
                                  dtype=jnp.float32) == "fused"
@@ -90,8 +93,42 @@ def test_table_roundtrip_auto_flips_across_buckets(tmp_path, monkeypatch):
                                np.asarray(big).sum(-1), rtol=1e-4, atol=1e-2)
 
 
+def test_v1_legacy_table_still_loads(tmp_path, monkeypatch):
+    """Pre-backend-axis tables (flat backend+entries) up-convert on load."""
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps({
+        "version": 1, "backend": autotune.current_backend(),
+        "jax": jax.__version__,
+        "entries": {"reduce/f32/4": {"path": "baseline", "us": {}}},
+    }))
+    loaded = autotune.load_table(path)
+    assert loaded["version"] == autotune.TABLE_VERSION
+    bk = autotune.current_backend()
+    assert loaded["backends"][bk]["entries"]["reduce/f32/4"]["path"] == \
+        "baseline"
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    assert autotune.choose("reduce", 16, jnp.float32) == "baseline"
+
+
+def test_v1_raw_gpu_spellings_normalise():
+    """Old measure_table wrote jax.default_backend() verbatim — 'cuda' and
+    'rocm' must up-convert onto the 'gpu' section, not fail validation."""
+    import json as _json
+    import tempfile
+    for spelling in ("cuda", "rocm"):
+        with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                         delete=False) as f:
+            _json.dump({"version": 1, "backend": spelling,
+                        "entries": {"reduce/f32/4": {"path": "fused",
+                                                     "us": {}}}}, f)
+        loaded = autotune.load_table(f.name)
+        assert "gpu" in loaded["backends"], spelling
+
+
 def test_autotune_off_restores_static_heuristic(tmp_path, monkeypatch):
-    if backend.on_tpu():
+    if backend.on_tpu() or backend.on_gpu():
         pytest.skip("CPU-only expectations")
     path = tmp_path / "table.json"
     _write_table(path, {
@@ -118,33 +155,104 @@ def test_explicit_path_beats_table(tmp_path, monkeypatch):
                                  dtype=jnp.float32) == "xla_tile"
 
 
-def test_table_backend_mismatch_is_ignored(tmp_path, monkeypatch):
-    if backend.on_tpu():
+# ---------------------------------------------------------------------------
+# backend keying (the GPU-table satellite contract)
+
+
+def test_other_backend_section_never_consulted(tmp_path, monkeypatch):
+    """A section measured on different hardware must not steer this host:
+    the gpu/tpu sections say 'baseline' for a bucket where this host's
+    heuristic says 'fused' — resolution must return the heuristic."""
+    if backend.on_tpu() or backend.on_gpu():
         pytest.skip("CPU-only expectations")
     path = tmp_path / "table.json"
-    table = {"version": autotune.TABLE_VERSION, "backend": "tpu",
-             "entries": {"reduce/f32/4": {"path": "baseline", "us": {}}}}
+    table = {"version": autotune.TABLE_VERSION, "backends": {
+        "gpu": {"jax": jax.__version__, "entries": {
+            "reduce/f32/4": {"path": "baseline", "us": {}}}},
+        "tpu": {"jax": jax.__version__, "entries": {
+            "reduce/f32/4": {"path": "baseline", "us": {}}}},
+    }}
     path.write_text(json.dumps(table))
     monkeypatch.setenv(autotune.ENV_TABLE, str(path))
     monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
     autotune.invalidate_cache()
+    assert autotune.current_entries() is None   # no section for this host
     # falls through to the heuristic (fused for a small reduce off-TPU)
     assert autotune.choose("reduce", 16, jnp.float32) == "fused"
+    assert dispatch.resolve_path(op="reduce", n=16,
+                                 dtype=jnp.float32) == "fused"
 
 
-def test_malformed_table_rejected_and_ignored(tmp_path, monkeypatch):
+def test_env_table_unknown_backend_fails_loudly(tmp_path, monkeypatch):
+    """$REPRO_AUTOTUNE_TABLE with unknown backend keys must raise, not
+    silently fall back to the heuristic."""
+    path = tmp_path / "table.json"
+    path.write_text(json.dumps({
+        "version": autotune.TABLE_VERSION, "backends": {
+            "warpspeed": {"entries": {
+                "reduce/f32/4": {"path": "fused", "us": {}}}}}}))
+    with pytest.raises(ValueError, match="unknown backend key"):
+        autotune.load_table(path)
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    with pytest.raises(ValueError, match="unknown backend key"):
+        autotune.current_table()
+    with pytest.raises(ValueError):
+        autotune.choose("reduce", 16, jnp.float32)
+
+
+def test_env_table_malformed_fails_loudly(tmp_path, monkeypatch):
+    """Same discipline for any malformed explicit table: pointing
+    resolution at a table and getting the heuristic is a silent no-op."""
     bad = tmp_path / "bad.json"
-    bad.write_text('{"version": 1, "entries": {"reduce/f32/4": '
-                   '{"path": "warp"}}}')
+    bad.write_text('{"version": 2, "backends": {"cpu": {"entries": '
+                   '{"reduce/f32/4": {"path": "warp"}}}}}')
     with pytest.raises(ValueError):
         autotune.load_table(bad)
     monkeypatch.setenv(autotune.ENV_TABLE, str(bad))
     monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
     autotune.invalidate_cache()
-    assert autotune.current_table() is None
-    # resolution degrades to the heuristic, never crashes
-    assert autotune.choose("reduce", 16, jnp.float32) in (
-        "fused", "tile")
+    with pytest.raises(ValueError, match="unusable"):
+        autotune.current_table()
+
+
+def test_backend_incompatible_tile_entry_ignored(tmp_path, monkeypatch):
+    """A hand-written cpu-section entry forcing tile_gpu must never make
+    ``auto`` select an unlowerable backend — resolution falls back to the
+    heuristic instead of raising mid-dispatch."""
+    if backend.on_gpu():
+        pytest.skip("needs a host without native Triton lowering")
+    path = tmp_path / "table.json"
+    _write_table(path, {
+        "reduce/f32/4": {"path": "tile_gpu", "us": {}},
+    })
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    choice = autotune.choose("reduce", 16, jnp.float32)
+    assert choice != "tile_gpu"
+    # and end-to-end auto never raises
+    x = jnp.ones((4, 16))
+    np.testing.assert_allclose(np.asarray(dispatch.reduce(x)), 16.0)
+
+
+def test_merge_tables_keeps_other_sections(tmp_path):
+    """--write on a GPU host must drop its section in without touching the
+    CPU one (and vice versa)."""
+    base = {"version": autotune.TABLE_VERSION, "backends": {
+        "cpu": {"jax": "x", "entries": {
+            "reduce/f32/4": {"path": "fused", "us": {}}}}}}
+    new = {"version": autotune.TABLE_VERSION, "backends": {
+        "gpu": {"jax": "y", "entries": {
+            "reduce/f32/4": {"path": "tile_gpu", "us": {}}}}}}
+    merged = autotune.merge_tables(base, new)
+    assert set(merged["backends"]) == {"cpu", "gpu"}
+    assert merged["backends"]["cpu"]["entries"]["reduce/f32/4"]["path"] == \
+        "fused"
+    assert merged["backends"]["gpu"]["entries"]["reduce/f32/4"]["path"] == \
+        "tile_gpu"
 
 
 def test_kernel_level_auto_consults_table(tmp_path, monkeypatch):
@@ -152,7 +260,7 @@ def test_kernel_level_auto_consults_table(tmp_path, monkeypatch):
     dispatch-level labels translated onto the kernel registry's
     implementations (backend's "fused" = the native-op ref = the dispatch
     layer's "baseline"; the matmul forms have no kernel twin)."""
-    if backend.on_tpu():
+    if backend.on_tpu() or backend.on_gpu():
         pytest.skip("CPU-only expectations")
     path = tmp_path / "table.json"
     _write_table(path, {
@@ -200,12 +308,20 @@ def test_default_table_checked_in_and_fresh():
     assert not problems, problems
 
 
+def test_default_table_backend_keys_are_known():
+    """The lint CI runs on the checked-in default: every section key must
+    be a known backend (load_table enforces it)."""
+    table = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
+    assert set(table["backends"]) <= set(autotune.KNOWN_BACKENDS)
+
+
 def test_measure_table_smoke():
     table = autotune.measure_table(ops=("reduce",), bands=(4,),
                                    dtypes=(jnp.float32,), iters=1)
     assert table["version"] == autotune.TABLE_VERSION
-    assert table["backend"] == jax.default_backend()
-    (key, ent), = table["entries"].items()
+    bk = autotune.current_backend()
+    assert set(table["backends"]) == {bk}
+    (key, ent), = table["backends"][bk]["entries"].items()
     assert key == "reduce/f32/4"
     assert ent["path"] in ent["us"]
     assert set(ent["us"]) >= set(autotune.OP_CONTENDERS["reduce"])

@@ -2,6 +2,7 @@
 agreement of the fused / tile / interpret paths for reduce, scan, and
 weighted scan (fp32 and bf16)."""
 import re
+import warnings
 from pathlib import Path
 
 import jax
@@ -49,19 +50,84 @@ def test_no_raw_compiler_params_outside_backend():
     )
 
 
+def test_no_pallas_triton_import_outside_triton_package():
+    """Same discipline for the GPU twin subsystem: only
+    ``repro.kernels.triton`` may import ``jax.experimental.pallas.triton``
+    (and within the package, only its ``compat`` shim does)."""
+    pat = re.compile(
+        r"^\s*(?:import\s+jax\.experimental\.pallas\.triton"
+        r"|from\s+jax\.experimental\.pallas\.triton\s+import"
+        r"|from\s+jax\.experimental\.pallas\s+import\s+[^\n]*\btriton\b)",
+        re.MULTILINE)
+    offenders = []
+    for p in sorted(SRC.rglob("*.py")):
+        rel = p.relative_to(SRC)
+        if rel.parts[:2] == ("kernels", "triton"):
+            if rel.name != "compat.py" and pat.search(p.read_text()):
+                offenders.append(f"{rel} (only compat.py may)")
+            continue
+        if pat.search(p.read_text()):
+            offenders.append(str(rel))
+    assert not offenders, (
+        f"raw jax.experimental.pallas.triton import in {offenders}; "
+        "route through repro.kernels.triton.compat / "
+        "backend.compiler_params(backend='gpu')"
+    )
+
+
 # ---------------------------------------------------------------------------
 # path resolution
 
 
 def test_resolve_path_defaults_off_tpu(monkeypatch):
     monkeypatch.delenv(backend.ENV_PATH, raising=False)
-    if backend.on_tpu():
+    if backend.native_tile_backend() is not None:
         pytest.skip("CPU-only expectations")
     assert backend.resolve_path() == "fused"
     assert backend.resolve_path("tile") == "interpret"   # nothing to compile
     assert backend.resolve_path("interpret") == "interpret"
     assert backend.resolve_path(use_pallas=True) == "interpret"
     assert backend.resolve_path(use_pallas=False) == "fused"
+
+
+def test_tile_downgrade_warns_once_then_stays_silent(monkeypatch):
+    """The off-accelerator tile→interpret downgrade must say so ONCE —
+    naming the resolved backend and the way to silence it — and never
+    again in the same process."""
+    if backend.native_tile_backend() is not None:
+        pytest.skip("downgrade only happens off-accelerator")
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
+    monkeypatch.setattr(backend, "_TILE_DOWNGRADE_WARNED", False)
+    with pytest.warns(UserWarning, match="interpret") as rec:
+        assert backend.resolve_path("tile") == "interpret"
+    msg = str(rec[0].message)
+    assert jax.default_backend() in msg          # names the backend
+    assert "path='interpret'" in msg             # names the silencer
+    # second resolution: no warning at all
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert backend.resolve_path("tile") == "interpret"
+    # an explicit interpret request never warns
+    monkeypatch.setattr(backend, "_TILE_DOWNGRADE_WARNED", False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert backend.resolve_path("interpret") == "interpret"
+
+
+def test_explicit_tile_backend_labels_are_strict():
+    """tile_tpu / tile_gpu force a backend and must raise clearly on the
+    wrong host (the generic 'tile' is the lenient spelling)."""
+    native = backend.native_tile_backend()
+    if native != "tile_tpu":
+        with pytest.raises(RuntimeError, match="tile_tpu"):
+            backend.resolve_path("tile_tpu")
+        with pytest.raises(RuntimeError, match="requires a TPU"):
+            dispatch.reduce(jnp.ones((2, 64)), path="tile_tpu")
+    if native != "tile_gpu":
+        with pytest.raises(RuntimeError, match="tile_gpu"):
+            backend.resolve_path("tile_gpu")
+    if native is not None:
+        assert backend.resolve_path("tile") == native
 
 
 def test_resolve_path_env_override(monkeypatch):

@@ -1,0 +1,256 @@
+"""Pallas-Triton (GPU) twin validation: every kernel body through the
+Pallas interpreter on CPU vs the pure-jnp oracles in kernels/ref.py —
+fp32 at tight tolerance, bf16 loose — plus the tile_gpu path contract
+(forcing it off-GPU raises; ``auto`` never selects it there).
+
+This module is what the dedicated CI job runs under
+``REPRO_KERNEL_PATH=interpret``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.kernels import backend, ops, ref
+from repro.kernels.triton import ops as tops
+from repro.kernels.triton.fused_rmsnorm import triton_fused_rmsnorm
+from repro.kernels.triton.flash_attention import triton_flash_attention
+from repro.kernels.triton.ssd_scan import triton_ssd_chunk_scan
+from repro.kernels.triton.tcu_reduce import triton_segmented_reduce
+from repro.kernels.triton.tcu_scan import triton_segmented_scan
+
+
+def _tol(dtype):
+    return dict(rtol=1e-4, atol=1e-3) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-1)
+
+
+# ---------------------------------------------------------------------------
+# tcu_reduce twin
+
+
+@pytest.mark.parametrize("s,n", [(32, 64), (64, 256), (96, 448)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_triton_reduce_kernel_shapes(s, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(s + n), (s, n)).astype(dtype)
+    got = triton_segmented_reduce(x, interpret=True)
+    want = np.asarray(x, np.float32).sum(axis=-1)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", [50, 129, 1000])
+def test_triton_reduce_glue_padding(n):
+    """The tile_gpu glue pads arbitrary segment sizes (paper §4.1)."""
+    x = jax.random.normal(jax.random.PRNGKey(n), (5, n))
+    got = tops.reduce_tile_gpu(x, interpret=True)
+    np.testing.assert_allclose(got, ref.segmented_reduce_ref(x),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_triton_reduce_kernel_rejects_unaligned():
+    with pytest.raises(ValueError):
+        triton_segmented_reduce(jnp.zeros((33, 64)), interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# tcu_scan twin
+
+
+@pytest.mark.parametrize("s,n", [(32, 64), (64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_triton_scan_kernel_shapes(s, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(s + n), (s, n)).astype(dtype)
+    got = triton_segmented_scan(x, interpret=True)
+    want = np.cumsum(np.asarray(x, np.float32), axis=-1)
+    tol = dict(rtol=1e-3, atol=1e-3) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-1)
+    np.testing.assert_allclose(got, want, **tol)
+
+
+def test_triton_scan_carry_across_chunks():
+    """Chained-MMA carry: constant input => scan is i+1 everywhere, which
+    only holds if the R @ E carry threads every 64-column chunk."""
+    x = jnp.ones((32, 320), jnp.float32)
+    got = np.asarray(triton_segmented_scan(x, interpret=True))
+    want = np.tile(np.arange(1, 321, dtype=np.float32), (32, 1))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [50, 129, 640])
+def test_triton_scan_glue_padding(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (3, n))
+    got = tops.scan_tile_gpu(x, interpret=True)
+    np.testing.assert_allclose(got, ref.segmented_scan_ref(x),
+                               rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# fused_rmsnorm twin
+
+
+@pytest.mark.parametrize("rows,d", [(16, 128), (32, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_triton_rmsnorm_kernel(rows, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(rows + d), (rows, d)).astype(
+        dtype)
+    w = (1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (d,))).astype(
+        dtype)
+    got = triton_fused_rmsnorm(x, w, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_triton_rmsnorm_glue_pads_feature_dim():
+    """Unlike the TPU twin, the GPU glue zero-pads d and divides by the
+    TRUE d — the padded Σx² must stay exact."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (7, 100))
+    w = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(3), (100,))
+    got = tops.rmsnorm_tile_gpu_fwd(x, w, 1e-6, True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.rmsnorm_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan twin (+ weighted scan degeneration)
+
+
+@pytest.mark.parametrize("bh,L,p,n", [(2, 128, 16, 16), (1, 192, 32, 16)])
+def test_triton_ssd_kernel_vs_sequential(bh, L, p, n):
+    key = jax.random.PRNGKey(bh * L)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xdt = 0.1 * jax.random.normal(k1, (bh, L, p))
+    lam = -0.5 * jax.random.uniform(k2, (bh, L))
+    b = jax.random.normal(k3, (bh, L, n)) / np.sqrt(n)
+    c = jax.random.normal(k4, (bh, L, n)) / np.sqrt(n)
+    y, state = triton_ssd_chunk_scan(xdt, lam, b, c, interpret=True)
+
+    # sequential oracle: h_t = exp(lam_t) h_{t-1} + b_t xdt_t^T ; y = c_t.h_t
+    xa, la, ba, ca = map(np.asarray, (xdt, lam, b, c))
+    yref = np.zeros((bh, L, p), np.float32)
+    for i in range(bh):
+        h = np.zeros((n, p), np.float32)
+        for t in range(L):
+            h = np.exp(la[i, t]) * h + np.outer(ba[i, t], xa[i, t])
+            yref[i, t] = ca[i, t] @ h
+    np.testing.assert_allclose(y, yref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(state[-1], h, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_triton_ssd_glue_vs_ref_with_state(dtype):
+    """tile_gpu glue (fold + 16-pad) against ref, L not a chunk multiple."""
+    b, L, h, p, g, n = 2, 100, 4, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = (0.2 * jax.random.normal(ks[0], (b, L, h, p))).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    bb = jax.random.normal(ks[3], (b, L, g, n)) / np.sqrt(n)
+    cc = jax.random.normal(ks[4], (b, L, g, n)) / np.sqrt(n)
+    y, st = tops.ssd_tile_gpu(x, dt, a, bb, cc, return_state=True,
+                              interpret=True)
+    yw, stw = ref.ssd_scan_ref(x, dt, a, bb, cc, return_state=True)
+    tol = dict(rtol=2e-3, atol=2e-3) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yw, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(stw), **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_triton_weighted_scan_glue(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 160)).astype(dtype)
+    la = (-jax.random.uniform(jax.random.PRNGKey(5), (2, 160))).astype(dtype)
+    got = tops.weighted_scan_tile_gpu(x, la, interpret=True)
+    want = ref.weighted_scan_ref(x.astype(jnp.float32),
+                                 la.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention twin
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (4, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_triton_flash_attention_vs_ref(causal, hq, hkv, dtype):
+    b, lq, lk, d = 1, 128, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(hq * 10 + causal), 3)
+    q = jax.random.normal(ks[0], (b, hq, lq, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, lk, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, lk, d)).astype(dtype)
+    got = triton_flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = dict(rtol=2e-3, atol=2e-3) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_triton_flash_attention_sliding_window():
+    b, h, L, d = 1, 2, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, h, L, d))
+    k = jax.random.normal(ks[1], (b, h, L, d))
+    v = jax.random.normal(ks[2], (b, h, L, d))
+    got = triton_flash_attention(q, k, v, causal=True, window=96,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=96)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_triton_attention_glue_unaligned_falls_back():
+    """Block-strict kernel: unaligned lengths route to the oracle, so the
+    tile_gpu path never crashes on odd decode shapes."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (1, 2, 100, 32))
+    k = jax.random.normal(ks[1], (1, 2, 100, 32))
+    v = jax.random.normal(ks[2], (1, 2, 100, 32))
+    got = tops.attention_tile_gpu(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# the tile_gpu path contract on a non-GPU host
+
+
+@pytest.mark.skipif(backend.on_gpu(), reason="contract is for non-GPU hosts")
+def test_tile_gpu_off_gpu_raises_clear_error():
+    x = jnp.ones((2, 100))
+    with pytest.raises(RuntimeError, match="tile_gpu"):
+        backend.resolve_path("tile_gpu")
+    with pytest.raises(RuntimeError, match="requires a GPU"):
+        ops.segmented_reduce(x, path="tile_gpu")
+    with pytest.raises(RuntimeError, match="requires a GPU"):
+        dispatch.reduce(x, path="tile_gpu")
+    # the glue itself also refuses to compile off-GPU (defence in depth)
+    with pytest.raises(RuntimeError, match="needs a GPU"):
+        tops.reduce_tile_gpu(x, interpret=False)
+
+
+@pytest.mark.skipif(backend.on_gpu(), reason="contract is for non-GPU hosts")
+def test_auto_never_selects_tile_gpu_off_gpu(monkeypatch):
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
+    for n in (16, 512, 1 << 14):
+        p = backend.resolve_path(op="segmented_reduce", n=n,
+                                 dtype=jnp.float32)
+        assert p != "tile_gpu"
+        assert dispatch.resolve_path(op="reduce", n=n,
+                                     dtype=jnp.float32) != "tile_gpu"
+
+
+def test_registry_has_gpu_twins_for_all_five():
+    """The tentpole contract: every kernel family carries a Triton twin."""
+    if not backend.has_pallas_triton():
+        pytest.skip("this JAX has no Pallas-Triton lowering")
+    for name in ("segmented_reduce", "segmented_scan", "weighted_scan",
+                 "rmsnorm", "ssd_scan", "attention"):
+        assert backend.get_op(name).tile_gpu is not None, name
