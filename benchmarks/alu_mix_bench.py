@@ -22,12 +22,12 @@ def run() -> list:
     rows = []
     x = jax.random.normal(jax.random.PRNGKey(0), (512, 4096))
     cases = {
-        "reduce_tcu_tile": lambda a: dispatch.reduce(a, path="xla_tile"),
-        "reduce_vector": lambda a: dispatch.reduce(a, path="baseline"),
-        "scan_tcu": lambda a: dispatch.scan(a, path="fused"),
-        "scan_vector": lambda a: dispatch.scan(a, path="baseline"),
+        "reduce_tcu_tile": lambda a: dispatch.reduce(a, policy="xla_tile"),
+        "reduce_vector": lambda a: dispatch.reduce(a, policy="baseline"),
+        "scan_tcu": lambda a: dispatch.scan(a, policy="fused"),
+        "scan_vector": lambda a: dispatch.scan(a, policy="baseline"),
         "rmsnorm_tcu": lambda a: a * jax.lax.rsqrt(
-            dispatch.reduce(a * a, path="fused")[..., None] / a.shape[-1]
+            dispatch.reduce(a * a, policy="fused")[..., None] / a.shape[-1]
             + 1e-6),
         "rmsnorm_vector": lambda a: a * jax.lax.rsqrt(
             jnp.mean(a * a, axis=-1, keepdims=True) + 1e-6),

@@ -11,7 +11,6 @@ for the power results. Every benchmark prints a CSV block
 from __future__ import annotations
 
 import time
-import warnings
 
 import jax
 import numpy as np
@@ -37,19 +36,19 @@ def select_paths(labels: dict[str, str]) -> dict[str, str]:
     to the Pallas interpreter (orders of magnitude slower than anything it
     would be compared against — a downgraded row is noise, not data).
     """
-    from repro.core import dispatch
-    from repro.kernels import backend as kbackend
+    import dataclasses
 
+    from repro.core import policy as kpolicy
+
+    # probe under interpret_fallback="silent": resolution only, nothing
+    # runs, and the one-time downgrade warning stays unconsumed for a
+    # later genuine path="tile" execution
+    probe = dataclasses.replace(kpolicy.get_policy(),
+                                interpret_fallback="silent")
     out = {}
     for name, path in labels.items():
         try:
-            # probe only, nothing runs: keep the one-time downgrade warning
-            # unconsumed for a later genuine path="tile" execution
-            warned = kbackend._TILE_DOWNGRADE_WARNED
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore")
-                resolved = dispatch.resolve_path(path)
-            kbackend._TILE_DOWNGRADE_WARNED = warned
+            resolved = probe.resolve(explicit=path)
         except (RuntimeError, ValueError):
             print(f"# skip {name}: path={path!r} unresolvable on this host "
                   f"(backend={jax.default_backend()})")

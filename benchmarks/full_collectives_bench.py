@@ -19,10 +19,10 @@ def run() -> list:
         n = 1 << log_n
         x = jax.random.normal(jax.random.PRNGKey(2), (n,))
         cases = {
-            "tcu_full_reduce": lambda a: dispatch.reduce(a, path="xla_tile"),
-            "base_full_reduce": lambda a: dispatch.reduce(a, path="baseline"),
-            "tcu_full_scan": lambda a: dispatch.scan(a, path="fused"),
-            "base_full_scan": lambda a: dispatch.scan(a, path="baseline"),
+            "tcu_full_reduce": lambda a: dispatch.reduce(a, policy="xla_tile"),
+            "base_full_reduce": lambda a: dispatch.reduce(a, policy="baseline"),
+            "tcu_full_scan": lambda a: dispatch.scan(a, policy="fused"),
+            "base_full_scan": lambda a: dispatch.scan(a, policy="baseline"),
         }
         for name, fn in cases.items():
             t = time_fn(jax.jit(fn), x)

@@ -6,6 +6,13 @@
                                             # tile contenders; rows whose
                                             # path can't resolve on this
                                             # host are skipped, not fatal
+  python -m benchmarks.run --policy reduce=tile,scan=baseline
+                                            # pin per-op choices for the
+                                            # sweep's "auto" rows (JSON
+                                            # policy objects work too);
+                                            # --kernel-path <label> is the
+                                            # deprecated spelling of
+                                            # --policy <label>
 """
 from __future__ import annotations
 
@@ -35,8 +42,22 @@ def main(argv: list[str] | None = None) -> None:
                     help="which backend's kernel contenders to include; "
                          "paths unresolvable on the current host are "
                          "skipped with a note instead of crashing")
+    ap.add_argument("--policy", default=None,
+                    help="KernelPolicy the sweep runs under: a path "
+                         "label, an op=path,op=path override list (pins "
+                         "per-op choices for the auto rows), or a JSON "
+                         "object of policy fields")
+    ap.add_argument("--kernel-path", default=None,
+                    help="deprecated alias for --policy <path-label>")
     args = ap.parse_args(argv)
     common.set_bench_backend(args.backend)
+
+    from repro.core import policy as kpolicy
+
+    pol = kpolicy.policy_from_cli(args.policy, args.kernel_path,
+                                  "deprecated:benchmarks.run.kernel_path")
+    if pol is not None:
+        kpolicy.set_policy(pol)
 
     t0 = time.time()
     ran = 0

@@ -44,7 +44,7 @@ def run(total: int = TOTAL) -> list:
         from repro.core import dispatch
 
         fns = {
-            name: jax.jit(lambda a, p=p: dispatch.reduce(a, path=p))
+            name: jax.jit(lambda a, p=p: dispatch.reduce(a, policy=p))
             for name, p in paths.items()
         }
         for name, fn in fns.items():

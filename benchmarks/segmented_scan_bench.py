@@ -32,7 +32,7 @@ def run(total: int = TOTAL) -> list:
         segs = total // seg
         xs = x.reshape(segs, seg)
         fns = {
-            name: jax.jit(lambda a, p=p: dispatch.scan(a, path=p))
+            name: jax.jit(lambda a, p=p: dispatch.scan(a, policy=p))
             for name, p in paths.items()
         }
         for name, fn in fns.items():

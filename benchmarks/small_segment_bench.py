@@ -40,7 +40,10 @@ def run() -> tuple[list, list]:
         x = jax.random.normal(jax.random.PRNGKey(1), (N_SEGMENTS, seg))
         ops = {"reduce": dispatch.reduce, "scan": dispatch.scan}
         cases = {
-            name: (lambda a, o=op, p=path: ops[o](a, path=p))
+            # the "auto" rows pass policy=None (the ambient policy), so a
+            # run.py --policy op=path override steers exactly them
+            name: (lambda a, o=op, p=path: ops[o](
+                a, policy=(None if p == "auto" else p)))
             for name, (op, path) in CONTENDERS.items() if name in keep
         }
         for name, fn in cases.items():

@@ -36,7 +36,7 @@ def run() -> list:
 
         toks = b * L
         for name, path in paths.items():
-            fn = jax.jit(lambda *t, p=path: dispatch.ssd(*t, path=p))
+            fn = jax.jit(lambda *t, p=path: dispatch.ssd(*t, policy=p))
             t1 = time_fn(fn, x, dt, a, bb, cc, iters=3)
             rows.append([name, L, f"{t1 * 1e3:.2f}",
                          f"{elems_per_sec(toks, t1) / 1e3:.1f}"])

@@ -1,0 +1,22 @@
+"""JAX/Pallas reproduction of "Accelerating Reduction and Scan Using
+Tensor Core Units", grown into a small model/serving stack.
+
+The stable public surface is :mod:`repro.ops` (the paper's ops under a
+:class:`~repro.core.policy.KernelPolicy`); everything else is internal
+plumbing. Both are imported lazily so ``import repro`` stays cheap.
+"""
+from __future__ import annotations
+
+__all__ = ["ops"]
+
+
+def __getattr__(name):
+    if name == "ops":
+        import repro.ops as ops
+
+        return ops
+    if name == "KernelPolicy":
+        from repro.core.policy import KernelPolicy
+
+        return KernelPolicy
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

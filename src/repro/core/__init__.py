@@ -20,7 +20,13 @@ from repro.core.scan import (
     tcu_segmented_scan,
     tcu_weighted_scan,
 )
-from repro.core import autotune, dispatch
+from repro.core import autotune, dispatch, policy
+from repro.core.policy import (
+    KernelPolicy,
+    get_policy,
+    set_policy,
+    using_policy,
+)
 from repro.core.tiles import (
     DEFAULT_TILE,
     l_matrix,
@@ -33,8 +39,13 @@ from repro.core.tiles import (
 
 __all__ = [
     "DEFAULT_TILE",
+    "KernelPolicy",
     "autotune",
     "dispatch",
+    "get_policy",
+    "policy",
+    "set_policy",
+    "using_policy",
     "dist_exclusive_carry",
     "dist_reduce",
     "dist_scan",

@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import json
 import math
-import os
 import time
 from pathlib import Path
 from typing import Any, Iterable
@@ -51,10 +50,13 @@ from typing import Any, Iterable
 import jax
 import jax.numpy as jnp
 
+from repro.core import policy as kpolicy
 from repro.kernels import backend
 
-ENV_AUTOTUNE = "REPRO_AUTOTUNE"          # "off"/"0"/"static" -> static auto
-ENV_TABLE = "REPRO_AUTOTUNE_TABLE"       # path to a JSON table
+# env-var names, re-exported for callers; repro.core.policy is the only
+# module that parses them (they land here as KernelPolicy fields)
+ENV_AUTOTUNE = kpolicy.ENV_AUTOTUNE      # "off"/"0"/"static" -> static auto
+ENV_TABLE = kpolicy.ENV_TABLE            # path to a JSON table
 DEFAULT_TABLE_PATH = Path(__file__).with_name("autotune_default.json")
 TABLE_VERSION = 2
 MAX_BAND = 20
@@ -220,26 +222,29 @@ def merge_tables(base: dict | None, new: dict) -> dict:
     return merged
 
 
-def table_path() -> Path | None:
-    """The active table file: $REPRO_AUTOTUNE_TABLE, else the default."""
-    env = os.environ.get(ENV_TABLE, "").strip()
-    if env:
-        return Path(env)
+def table_path(policy: kpolicy.KernelPolicy | None = None) -> Path | None:
+    """The active table file: the policy's ``autotune_table`` (the env
+    var's one home, ``repro.core.policy``, feeds it), else the default."""
+    pol = policy if policy is not None else kpolicy.get_policy()
+    if pol.autotune_table:
+        return Path(pol.autotune_table)
     return DEFAULT_TABLE_PATH if DEFAULT_TABLE_PATH.exists() else None
 
 
-def current_table() -> dict | None:
+def current_table(policy: kpolicy.KernelPolicy | None = None) -> dict | None:
     """The active, validated table (cached per path), or None.
 
-    An *explicitly requested* table (``$REPRO_AUTOTUNE_TABLE``) that fails
-    to load raises — pointing resolution at a table and getting the
-    heuristic would be a silent no-op. The implicit checked-in default
-    degrades to None instead (CI lints it separately).
+    An *explicitly requested* table (``policy.autotune_table``, i.e.
+    ``$REPRO_AUTOTUNE_TABLE``) that fails to load raises — pointing
+    resolution at a table and getting the heuristic would be a silent
+    no-op. The implicit checked-in default degrades to None instead (CI
+    lints it separately).
     """
-    path = table_path()
+    pol = policy if policy is not None else kpolicy.get_policy()
+    path = table_path(pol)
     if path is None:
         return None
-    explicit = bool(os.environ.get(ENV_TABLE, "").strip())
+    explicit = bool(pol.autotune_table)
     key = str(path)
     if key not in _TABLE_CACHE:
         try:
@@ -252,23 +257,25 @@ def current_table() -> dict | None:
     return _TABLE_CACHE[key]
 
 
-def current_entries() -> dict | None:
+def current_entries(policy: kpolicy.KernelPolicy | None = None
+                    ) -> dict | None:
     """The active table's entries for *this host's* backend, or None.
 
     The backend key is the isolation boundary: a ``gpu`` section is never
     consulted on a CPU/TPU host (its crossovers do not transfer).
     """
-    table = current_table()
+    table = current_table(policy)
     if table is None:
         return None
     section = table["backends"].get(current_backend())
     return section["entries"] if section else None
 
 
-def enabled() -> bool:
-    """False when ``REPRO_AUTOTUNE`` asks for the static heuristic."""
-    return os.environ.get(ENV_AUTOTUNE, "").strip().lower() not in (
-        "off", "0", "static", "false")
+def enabled(policy: kpolicy.KernelPolicy | None = None) -> bool:
+    """False when the policy asks for the static heuristic
+    (``autotune="off"``, i.e. ``REPRO_AUTOTUNE=off``)."""
+    pol = policy if policy is not None else kpolicy.get_policy()
+    return pol.autotune != "off"
 
 
 # ---------------------------------------------------------------------------
@@ -329,11 +336,14 @@ def _backend_compatible(path: str) -> bool:
 
 def choose(op: str, n: int, dtype: Any = None,
            candidates: Iterable[str] | None = None, *,
-           level: str = "dispatch") -> str | None:
+           level: str = "dispatch",
+           policy: kpolicy.KernelPolicy | None = None) -> str | None:
     """Resolve ``auto`` for one call shape.
 
-    Returns a concrete path, or None when autotuning is disabled
-    (``REPRO_AUTOTUNE=off``) — the caller then applies the static choice.
+    ``policy`` carries the autotune mode and table source (None = the
+    active policy); :meth:`KernelPolicy.resolve` passes itself here.
+    Returns a concrete path, or None when the policy disables autotuning
+    (``autotune="off"``) — the caller then applies the static choice.
     Only the table section for this host's backend is consulted (a
     GPU-measured section never steers CPU/TPU); a missing bucket falls
     back to :func:`heuristic`.
@@ -344,9 +354,9 @@ def choose(op: str, n: int, dtype: Any = None,
     *matmul-form* "fused" won); when the measured winner has no kernel
     twin, the fastest recorded contender that does is chosen instead.
     """
-    if not enabled():
+    if not enabled(policy):
         return None
-    entries = current_entries()
+    entries = current_entries(policy)
     if entries is not None:
         ent = entries.get(bucket_key(op, n, dtype))
         if ent is not None and _backend_compatible(ent["path"]):
@@ -442,11 +452,11 @@ def measure_table(
                         x, seg, s = args
                         fn = jax.jit(
                             lambda a, i, p=path, o=op: fns[o](
-                                a, i, s, path=p))
+                                a, i, s, policy=p))
                         timings[path] = _time_fn(fn, x, seg, iters=iters)
                     else:
                         fn = jax.jit(
-                            lambda *a, p=path, o=op: fns[o](*a, path=p))
+                            lambda *a, p=path, o=op: fns[o](*a, policy=p))
                         timings[path] = _time_fn(fn, *args, iters=iters)
                 winner = min(timings, key=timings.get)
                 entries[bucket_key(op, n, dtype)] = {

@@ -20,18 +20,24 @@ comparison from a single ``path=`` argument instead of ad-hoc imports:
                  TPU/GPU, fused elsewhere" when ``REPRO_AUTOTUNE=off`` or
                  no shape is known)
 
-``path=None`` defers to ``REPRO_KERNEL_PATH``, then ``auto``. Every op here
-is shape-bucketed for the autotuner by its *segment size* (trailing-axis
-length; sequence length for attention/ssd).
+Which contender runs is decided by the active :class:`repro.core.policy.
+KernelPolicy` (the repo's single resolution algorithm): every op here
+accepts ``policy=`` (a ``KernelPolicy``, or a string shorthand) plus the
+per-call ``path=`` label, which beats the policy. With neither, the
+active policy applies — its process default is built from
+``REPRO_KERNEL_PATH``/``REPRO_AUTOTUNE*`` by ``repro.core.policy``, the
+only module that reads those env vars. The stable public surface over
+these ops is :mod:`repro.ops`. Every op here is shape-bucketed for the
+autotuner by its *segment size* (trailing-axis length; sequence length
+for attention/ssd).
 """
 from __future__ import annotations
-
-import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
+from repro.core import autotune  # noqa: F401  (re-export: measured tables)
+from repro.core import policy as kpolicy
 from repro.core.ragged import (
     guard_contiguous,
     tcu_ragged_segment_reduce,
@@ -40,35 +46,36 @@ from repro.core.ragged import (
 from repro.core.reduce import tcu_segmented_reduce
 from repro.core.scan import tcu_scan, tcu_weighted_scan
 from repro.core.ssd import ssd_chunked
-from repro.kernels import backend, ops, ref
+from repro.kernels import backend, ops, ref  # noqa: F401  (backend: probes)
 
-PATHS = ("auto", "fused", "xla_tile", "tile", "tile_tpu", "tile_gpu",
-         "interpret", "baseline")
+PATHS = kpolicy.DISPATCH_PATHS
+
+
+def _resolve(op: str, n: int | None, dtype, policy, path: str | None) -> str:
+    """Per-op entry into the policy resolver (dispatch level)."""
+    return kpolicy.as_policy(policy).resolve(op=op, n=n, dtype=dtype,
+                                             explicit=path)
 
 
 def resolve_path(path: str | None = None, *, op: str | None = None,
                  n: int | None = None, dtype=None) -> str:
-    """Like :func:`backend.resolve_path` but admitting the two extra
-    algorithm-level paths (``xla_tile``, ``baseline``).
-
-    ``op``/``n``/``dtype`` describe the call shape: with them, ``auto``
-    resolves through the measured per-shape crossover table
-    (:mod:`repro.core.autotune`) instead of the static TPU check.
-    """
-    if path is None:
-        path = os.environ.get(backend.ENV_PATH, "").strip().lower() or "auto"
-    if path not in PATHS:
-        raise ValueError(f"unknown path {path!r}; expected one of {PATHS}")
-    if path == "auto" and op is not None and n is not None:
-        path = autotune.choose(op, n, dtype) or "auto"
-    if path in ("xla_tile", "baseline"):
-        return path
-    return backend.resolve_path(path)
+    """Deprecated: delegate to the active :class:`~repro.core.policy.
+    KernelPolicy` (dispatch level — admits ``xla_tile``/``baseline``).
+    New code resolves via ``repro.core.policy.get_policy().resolve(...)``
+    or passes ``policy=`` to the ops."""
+    kpolicy.warn_once(
+        "deprecated:dispatch.resolve_path",
+        "repro.core.dispatch.resolve_path is deprecated; resolution lives "
+        "on repro.core.policy.KernelPolicy.resolve (pass policy= to the "
+        "ops, or call get_policy().resolve(...))")
+    return kpolicy.get_policy().resolve(op=op, n=n, dtype=dtype,
+                                        explicit=path)
 
 
-def reduce(x: jax.Array, *, path: str | None = None) -> jax.Array:
+def reduce(x: jax.Array, *, policy=None, path: str | None = None
+           ) -> jax.Array:
     """Segmented sum over the last axis -> f32 ``(...,)``."""
-    p = resolve_path(path, op="reduce", n=x.shape[-1], dtype=x.dtype)
+    p = _resolve("reduce", x.shape[-1], x.dtype, policy, path)
     if p == "fused":
         return tcu_segmented_reduce(x, formulation="fused")
     if p == "xla_tile":
@@ -78,10 +85,10 @@ def reduce(x: jax.Array, *, path: str | None = None) -> jax.Array:
     return ops.segmented_reduce(x, path=p)
 
 
-def scan(x: jax.Array, *, path: str | None = None,
+def scan(x: jax.Array, *, policy=None, path: str | None = None,
          exclusive: bool = False) -> jax.Array:
     """Prefix sum over the last axis -> f32, same shape."""
-    p = resolve_path(path, op="scan", n=x.shape[-1], dtype=x.dtype)
+    p = _resolve("scan", x.shape[-1], x.dtype, policy, path)
     if p in ("fused", "xla_tile"):  # core's scan IS the tile algebra, fused
         return tcu_scan(x, exclusive=exclusive)
     if p == "baseline":
@@ -97,10 +104,10 @@ def scan(x: jax.Array, *, path: str | None = None,
     return out
 
 
-def weighted_scan(x: jax.Array, log_a: jax.Array, *,
+def weighted_scan(x: jax.Array, log_a: jax.Array, *, policy=None,
                   path: str | None = None) -> jax.Array:
     """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` -> f32."""
-    p = resolve_path(path, op="weighted_scan", n=x.shape[-1], dtype=x.dtype)
+    p = _resolve("weighted_scan", x.shape[-1], x.dtype, policy, path)
     if p in ("fused", "xla_tile"):
         return tcu_weighted_scan(x, log_a)
     if p == "baseline":
@@ -113,7 +120,7 @@ def weighted_scan(x: jax.Array, log_a: jax.Array, *,
 
 
 def ragged_reduce(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
-                  path: str | None = None) -> jax.Array:
+                  policy=None, path: str | None = None) -> jax.Array:
     """Bucketed segmented sum: ``x (..., n)`` + ``seg_ids`` -> f32
     ``(..., n_segments)``.
 
@@ -122,14 +129,15 @@ def ragged_reduce(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
     ragged kernel yet, so ``tile``/``interpret`` run the matmul form.
     ``seg_ids`` may carry leading batch dims; any id order is valid.
     """
-    p = resolve_path(path, op="ragged_reduce", n=x.shape[-1], dtype=x.dtype)
+    p = _resolve("ragged_reduce", x.shape[-1], x.dtype, policy, path)
     if p == "baseline":
         return _segment_sum_baseline(x, seg_ids, n_segments)
     return tcu_ragged_segment_reduce(x, seg_ids, n_segments)
 
 
 def ragged_scan(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
-                path: str | None = None, debug: bool = False) -> jax.Array:
+                policy=None, path: str | None = None,
+                debug: bool = False) -> jax.Array:
     """Within-segment inclusive prefix sum -> f32, same shape as ``x``.
 
     Requires non-decreasing ``seg_ids`` on *every* path (see
@@ -138,7 +146,7 @@ def ragged_scan(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
     ``jnp.cumsum`` + ``segment_sum`` + a gather. ``tile``/``interpret``
     run the matmul form (no Pallas ragged kernel yet).
     """
-    p = resolve_path(path, op="ragged_scan", n=x.shape[-1], dtype=x.dtype)
+    p = _resolve("ragged_scan", x.shape[-1], x.dtype, policy, path)
     if p == "baseline":
         out = _ragged_scan_baseline(x, seg_ids, n_segments)
         return guard_contiguous(seg_ids, out) if debug else out
@@ -181,7 +189,7 @@ def _ragged_scan_baseline(x: jax.Array, seg_ids: jax.Array,
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, window: int | None = None,
-              scale: float | None = None,
+              scale: float | None = None, policy=None,
               path: str | None = None) -> jax.Array:
     """Multi-head attention in model layout: ``q (B, Sq, Hq, D)``,
     ``k``/``v`` ``(B, Sk, Hkv, D)`` -> ``(B, Sq, Hq, D)``.
@@ -191,7 +199,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     reduction); ``tile``/``interpret`` the Pallas flash kernel;
     ``baseline`` plain materialised softmax attention.
     """
-    p = resolve_path(path, op="attention", n=q.shape[1], dtype=q.dtype)
+    p = _resolve("attention", q.shape[1], q.dtype, policy, path)
     if p in ("fused", "xla_tile"):
         from repro.models.xla_attention import chunked_attention  # lazy: cycle
 
@@ -206,7 +214,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
-        c: jax.Array, *, path: str | None = None,
+        c: jax.Array, *, policy=None, path: str | None = None,
         chunk: int | None = None, matmul_dtype=None,
         return_state: bool = False):
     """Mamba-2 SSD scan -> ``y (B, L, H, P)``; with ``return_state=True``
@@ -217,7 +225,7 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     ``chunk``/``matmul_dtype`` tune the chunked XLA form only (the Pallas
     kernel's chunk is fixed at the MXU edge).
     """
-    p = resolve_path(path, op="ssd", n=x.shape[1], dtype=x.dtype)
+    p = _resolve("ssd", x.shape[1], x.dtype, policy, path)
     if p in ("fused", "xla_tile"):
         kw = {}
         if chunk is not None:

@@ -1,0 +1,472 @@
+"""`KernelPolicy` — the single home for kernel-selection state.
+
+The paper's contribution is one idea (express reduction/scan as TCU
+matmuls and pick the matmul form where it wins), but by PR 3 the *choice*
+of formulation was smeared across four mechanisms: two overlapping
+``resolve_path()`` functions (``repro.core.dispatch`` and
+``repro.kernels.backend``), bare ``path=`` strings on every op,
+``kernel_path`` fields duplicated on ``ModelConfig``/``OptConfig``/
+``ServeConfig``, and ``REPRO_KERNEL_PATH``/``REPRO_AUTOTUNE*`` env vars
+re-read at call sites. This module replaces all of that with one object:
+
+* :class:`KernelPolicy` — a frozen, hashable dataclass capturing the full
+  selection state: global ``path``, per-op overrides (``op_paths``), a
+  ``backend`` preference, the ``autotune`` mode and table source, and the
+  off-accelerator ``interpret_fallback`` behaviour. Hashable means it can
+  ride through ``jit`` static args and config dataclasses unchanged.
+* :meth:`KernelPolicy.resolve` — THE resolution algorithm. Both legacy
+  entry points (``dispatch.resolve_path``, ``backend.resolve_path``)
+  delegate here with a one-time deprecation warning; nothing else in the
+  repo decides which formulation runs.
+* A process-default policy built from the env vars — **this module is the
+  only place that reads** ``REPRO_KERNEL_PATH`` / ``REPRO_AUTOTUNE`` /
+  ``REPRO_AUTOTUNE_TABLE`` (a grep-guard test enforces it).
+* :func:`get_policy` / :func:`set_policy` / :func:`using_policy` — a
+  context-var based active policy, so overrides are scoped, thread-safe,
+  and safe under ``jit`` tracing (the policy is read eagerly at trace
+  time, never captured as a tracer).
+
+The stable public surface for running ops under a policy is
+:mod:`repro.ops`.
+
+String shorthands (accepted everywhere a policy is):
+
+* ``"fused"`` (any bare path label) — run exactly this path; per-call it
+  overlays the active policy with ``path=<label>`` and clears per-op
+  overrides.
+* ``"attention=fused,reduce=tile"`` — per-op overrides (a bare label mixed
+  in sets the global path: ``"baseline,attention=fused"``).
+* ``'{"path": "auto", "autotune": "off"}'`` — JSON field overrides.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import json
+import os
+import warnings
+from typing import Any, Iterator, Mapping
+
+# The env vars (parsed ONLY here; other modules may re-export the names):
+ENV_PATH = "REPRO_KERNEL_PATH"         # default path label
+ENV_AUTOTUNE = "REPRO_AUTOTUNE"        # "off"/"0"/"static"/"false" -> off
+ENV_TABLE = "REPRO_AUTOTUNE_TABLE"     # explicit autotune table file
+
+# Path labels by level. "dispatch" admits the algorithm-level contenders
+# the paper compares (xla_tile, baseline); "kernel" is the
+# implementation-level subset the Pallas registry understands.
+DISPATCH_PATHS = ("auto", "fused", "xla_tile", "tile", "tile_tpu",
+                  "tile_gpu", "interpret", "baseline")
+KERNEL_PATHS = ("auto", "fused", "tile", "tile_tpu", "tile_gpu",
+                "interpret")
+_DISPATCH_ONLY = ("xla_tile", "baseline")
+
+BACKENDS = ("cpu", "gpu", "tpu")
+AUTOTUNE_MODES = ("on", "off")
+INTERPRET_FALLBACKS = ("warn", "silent", "error")
+
+# Canonical (dispatch-level) op names a policy can carry overrides for;
+# the kernel-registry spellings alias onto them so one override steers
+# both layers. Unknown keys are rejected at construction — a typo'd
+# override that silently no-ops is exactly the failure mode this
+# subsystem exists to remove.
+KNOWN_OPS = ("reduce", "scan", "weighted_scan", "ragged_reduce",
+             "ragged_scan", "rmsnorm", "attention", "ssd")
+OP_ALIASES = {"segmented_reduce": "reduce", "segmented_scan": "scan",
+              "ssd_scan": "ssd"}
+
+
+# ---------------------------------------------------------------------------
+# one-time warnings (deprecation shims warn once per process, not per call)
+
+
+_WARNED: set[str] = set()
+
+
+def warn_once(key: str, message: str, category: type = DeprecationWarning,
+              stacklevel: int = 3) -> None:
+    """Emit ``message`` the first time ``key`` is seen this process."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, category, stacklevel=stacklevel + 1)
+
+
+_TILE_DOWNGRADE_WARNED = False
+
+
+def _warn_tile_downgrade() -> None:
+    """One-time notice that the generic ``tile`` label fell back to the
+    interpreter — silent interpreter execution looks like a hang at real
+    sizes, so say so once per process."""
+    global _TILE_DOWNGRADE_WARNED
+    if _TILE_DOWNGRADE_WARNED:
+        return
+    _TILE_DOWNGRADE_WARNED = True
+    import jax
+
+    warnings.warn(
+        f"path='tile' has no native Pallas lowering on the "
+        f"{jax.default_backend()!r} backend (tile_tpu needs a TPU, tile_gpu "
+        "a GPU with Pallas-Triton); running the kernel body through the "
+        "Pallas interpreter instead. Pass path='interpret' explicitly to "
+        "silence this one-time warning.",
+        UserWarning, stacklevel=5)
+
+
+# ---------------------------------------------------------------------------
+# the policy object
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Full kernel-selection state, frozen and hashable.
+
+    ``path``
+        Global path label (any of :data:`DISPATCH_PATHS`).
+    ``op_paths``
+        Per-op overrides that beat ``path`` — a mapping (or tuple of
+        ``(op, path)`` pairs; normalised to a sorted tuple so the policy
+        stays hashable), e.g. ``{"attention": "fused"}``.
+    ``backend``
+        Tile-backend preference: None (host-native), ``"tpu"``/``"gpu"``
+        (the generic ``tile`` label forces that backend's kernel, raising
+        off-host like the explicit ``tile_tpu``/``tile_gpu`` labels), or
+        ``"cpu"`` (``tile`` runs the interpreter, silently — an explicit
+        CPU choice is not a downgrade).
+    ``autotune``
+        ``"on"`` (shape-aware ``auto`` via the measured table / heuristic)
+        or ``"off"`` (static ``auto``: tile on TPU/GPU, fused elsewhere).
+    ``autotune_table``
+        Explicit table file. None falls back to the checked-in default;
+        a set-but-unusable table fails loudly (see ``repro.core.autotune``).
+    ``interpret_fallback``
+        What the generic ``tile`` does off-accelerator: ``"warn"`` (run the
+        interpreter, warn once), ``"silent"``, or ``"error"``.
+    """
+
+    path: str = "auto"
+    op_paths: tuple = ()
+    backend: str | None = None
+    autotune: str = "on"
+    autotune_table: str | None = None
+    interpret_fallback: str = "warn"
+
+    def __post_init__(self):
+        pairs = self.op_paths
+        if isinstance(pairs, Mapping):
+            pairs = pairs.items()
+        pairs = tuple(sorted(
+            (OP_ALIASES.get(str(op), str(op)), str(p)) for op, p in pairs))
+        object.__setattr__(self, "op_paths", pairs)
+        if self.path not in DISPATCH_PATHS:
+            raise ValueError(
+                f"unknown path {self.path!r}; expected one of "
+                f"{DISPATCH_PATHS}")
+        for op, p in pairs:
+            if op not in KNOWN_OPS:
+                raise ValueError(
+                    f"op_paths: unknown op {op!r}; expected one of "
+                    f"{KNOWN_OPS} (or a kernel-registry alias "
+                    f"{tuple(OP_ALIASES)}) — a typo here would silently "
+                    "no-op")
+            if p not in DISPATCH_PATHS:
+                raise ValueError(
+                    f"op_paths[{op!r}]: unknown path {p!r}; expected one "
+                    f"of {DISPATCH_PATHS}")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of "
+                f"{BACKENDS} or None")
+        if self.autotune not in AUTOTUNE_MODES:
+            raise ValueError(
+                f"unknown autotune mode {self.autotune!r}; expected one of "
+                f"{AUTOTUNE_MODES}")
+        if self.interpret_fallback not in INTERPRET_FALLBACKS:
+            raise ValueError(
+                f"unknown interpret_fallback {self.interpret_fallback!r}; "
+                f"expected one of {INTERPRET_FALLBACKS}")
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec: "KernelPolicy | Mapping | str",
+                  base: "KernelPolicy | None" = None) -> "KernelPolicy":
+        """Coerce a policy spec onto ``base`` (default: a fresh policy).
+
+        Accepts a :class:`KernelPolicy` (returned as-is), a mapping of
+        field overrides, or a string: a bare path label, an
+        ``op=path,op=path`` shorthand (a bare label mixed in sets the
+        global path), or a JSON object of field overrides.
+        """
+        if isinstance(spec, KernelPolicy):
+            return spec
+        if base is None:
+            base = cls()
+        if isinstance(spec, Mapping):
+            return dataclasses.replace(base, **dict(spec))
+        if not isinstance(spec, str):
+            raise TypeError(
+                f"cannot build a KernelPolicy from {type(spec).__name__}: "
+                f"{spec!r}")
+        s = spec.strip()
+        if s.startswith("{"):
+            fields = json.loads(s)
+            if not isinstance(fields, dict):
+                raise ValueError(
+                    f"policy JSON must be an object, got: {s!r}")
+            return dataclasses.replace(base, **fields)
+        if "=" in s:
+            overrides = dict(base.op_paths)
+            path = base.path
+            for part in s.split(","):
+                part = part.strip()
+                if not part:
+                    continue
+                if "=" in part:
+                    op, _, p = part.partition("=")
+                    overrides[op.strip()] = p.strip()
+                else:
+                    path = part
+            return dataclasses.replace(base, path=path,
+                                       op_paths=tuple(overrides.items()))
+        return dataclasses.replace(base, path=s, op_paths=())
+
+    # -- resolution ---------------------------------------------------------
+
+    def for_op(self, op: str | None) -> str:
+        """The label this policy requests for ``op`` (override > global).
+
+        Kernel-registry spellings alias onto the canonical op names, so
+        an ``op_paths={"reduce": ...}`` override also steers a direct
+        ``kernels.ops.segmented_reduce`` call.
+        """
+        if op is not None:
+            op = OP_ALIASES.get(op, op)
+            for name, p in self.op_paths:
+                if name == op:
+                    return p
+        return self.path
+
+    def resolve(self, op: str | None = None, n: int | None = None,
+                dtype: Any = None, *, level: str = "dispatch",
+                explicit: str | None = None) -> str:
+        """Resolve one call to a concrete execution path.
+
+        This is the repo's ONLY resolution algorithm; the legacy
+        ``dispatch.resolve_path`` / ``backend.resolve_path`` entry points
+        delegate here.
+
+        ``op``/``n``/``dtype`` describe the call shape: with them,
+        ``auto`` consults the measured per-shape crossover table
+        (``repro.core.autotune``, gated by this policy's ``autotune`` /
+        ``autotune_table``) instead of the static backend check.
+
+        ``level`` is ``"dispatch"`` (admits the algorithm-level
+        ``xla_tile``/``baseline`` contenders) or ``"kernel"`` (the Pallas
+        registry's subset; policy-sourced dispatch-only labels downgrade
+        to their nearest kernel equivalent, ``fused``).
+
+        ``explicit`` is a per-call label that beats everything in the
+        policy (the ``path=`` kwarg); it is validated against ``level``'s
+        label set.
+        """
+        from repro.kernels import backend as kb  # deferred: avoids a cycle
+
+        valid = DISPATCH_PATHS if level == "dispatch" else KERNEL_PATHS
+        if explicit is not None:
+            if explicit not in valid:
+                noun = "path" if level == "dispatch" else "kernel path"
+                raise ValueError(
+                    f"unknown {noun} {explicit!r}; expected one of {valid}")
+            label = explicit
+        else:
+            label = self.for_op(op)
+            if level == "kernel" and label in _DISPATCH_ONLY:
+                # the env var / policy is process-wide, so kernel-level
+                # call sites run the nearest kernel-level equivalent
+                label = "fused"
+        native = kb.native_tile_backend()
+        if label == "auto":
+            choice = None
+            if op is not None and n is not None:
+                from repro.core import autotune  # deferred: imports us
+
+                if level == "kernel":
+                    choice = autotune.choose(
+                        op, n, dtype,
+                        candidates=("fused", "tile", "tile_tpu", "tile_gpu",
+                                    "interpret"),
+                        level="kernel", policy=self)
+                else:
+                    choice = autotune.choose(op, n, dtype, policy=self)
+                # auto must never force a tile backend the host can't lower
+                if choice in ("tile_tpu", "tile_gpu") and choice != native:
+                    choice = None
+            label = choice or ("tile" if native else "fused")
+            if level == "kernel" and label in _DISPATCH_ONLY:
+                label = "fused"
+        if label in _DISPATCH_ONLY:
+            return label
+        if label == "tile":
+            if self.backend == "cpu":
+                return "interpret"   # explicit CPU preference, no downgrade
+            if self.backend in ("gpu", "tpu"):
+                label = f"tile_{self.backend}"   # strict checks below
+            elif native is None:
+                if self.interpret_fallback == "error":
+                    import jax
+
+                    raise RuntimeError(
+                        "path='tile' has no native Pallas lowering on the "
+                        f"{jax.default_backend()!r} backend and this "
+                        "policy's interpret_fallback='error' forbids the "
+                        "interpreter downgrade")
+                if self.interpret_fallback == "warn":
+                    _warn_tile_downgrade()
+                return "interpret"   # nothing to compile the tile kernel for
+            else:
+                return native
+        if label == "tile_tpu" and native != "tile_tpu":
+            import jax
+
+            raise RuntimeError(
+                "path='tile_tpu' requires a TPU host with the Pallas-TPU "
+                f"lowering (active backend: {jax.default_backend()!r}); use "
+                "path='interpret' for CPU validation or path='tile' for "
+                "backend-appropriate selection")
+        if label == "tile_gpu" and native != "tile_gpu":
+            import jax
+
+            raise RuntimeError(
+                "path='tile_gpu' requires a GPU host with the Pallas-Triton "
+                f"lowering (active backend: {jax.default_backend()!r}); use "
+                "path='interpret' for CPU validation or path='tile' for "
+                "backend-appropriate selection")
+        return label
+
+
+# ---------------------------------------------------------------------------
+# the process default (built from the env vars — the ONLY place they are
+# read) and the context-var active policy
+
+
+_DEFAULT_CACHE: dict[tuple, KernelPolicy] = {}
+
+
+def default_policy() -> KernelPolicy:
+    """The process-default policy, built from the env vars.
+
+    Parsed once per distinct env-var state (memoised on the raw values, so
+    tests that monkeypatch the environment see the change without a
+    process restart — the *parsing* still has exactly one home).
+    """
+    raw = (os.environ.get(ENV_PATH, ""), os.environ.get(ENV_AUTOTUNE, ""),
+           os.environ.get(ENV_TABLE, ""))
+    if raw not in _DEFAULT_CACHE:
+        path = raw[0].strip().lower() or "auto"
+        mode = "off" if raw[1].strip().lower() in (
+            "off", "0", "static", "false") else "on"
+        table = raw[2].strip() or None
+        _DEFAULT_CACHE[raw] = KernelPolicy(path=path, autotune=mode,
+                                           autotune_table=table)
+    return _DEFAULT_CACHE[raw]
+
+
+_ACTIVE: contextvars.ContextVar[KernelPolicy | None] = \
+    contextvars.ContextVar("repro_kernel_policy", default=None)
+
+
+def get_policy() -> KernelPolicy:
+    """The active policy: the innermost override, else the env default."""
+    pol = _ACTIVE.get()
+    return pol if pol is not None else default_policy()
+
+
+def set_policy(policy: "KernelPolicy | Mapping | str | None"
+               ) -> contextvars.Token:
+    """Install ``policy`` as the active policy (None restores the env
+    default). Returns a token for :func:`reset_policy`; prefer the scoped
+    :func:`using_policy` unless the override should outlive the frame."""
+    pol = None if policy is None else \
+        KernelPolicy.from_spec(policy, base=get_policy())
+    return _ACTIVE.set(pol)
+
+
+def reset_policy(token: contextvars.Token) -> None:
+    """Undo a :func:`set_policy` (restores the previous active policy)."""
+    _ACTIVE.reset(token)
+
+
+@contextlib.contextmanager
+def using_policy(policy: "KernelPolicy | Mapping | str | None"
+                 ) -> Iterator[KernelPolicy]:
+    """Scoped policy override; nests and restores on exit.
+
+    Context-var based, so it is thread-safe and ``jit``-trace-safe (the
+    policy is read eagerly at trace time).
+    """
+    token = set_policy(policy)
+    try:
+        yield get_policy()
+    finally:
+        reset_policy(token)
+
+
+def coerce_config_policy(policy, kernel_path: str | None,
+                         owner: str) -> KernelPolicy | None:
+    """Shared ``__post_init__`` shim for configs that hold a policy.
+
+    Folds the deprecated ``kernel_path=`` string (warns once, keyed by
+    ``owner``) into ``policy`` and coerces strings/mappings absolutely
+    via :meth:`KernelPolicy.from_spec` (a config is a durable artifact —
+    it must not capture whatever policy happens to be active at
+    construction time). Returns the coerced policy, or None (= defer to
+    the active policy at call time).
+    """
+    if kernel_path is not None:
+        warn_once(
+            f"deprecated:{owner}.kernel_path",
+            f"{owner}(kernel_path=...) is deprecated; pass policy= "
+            "(a KernelPolicy or a path-label string)", stacklevel=5)
+        if policy is None:
+            policy = kernel_path
+    if policy is not None and not isinstance(policy, KernelPolicy):
+        policy = KernelPolicy.from_spec(policy)
+    return policy
+
+
+def policy_from_cli(policy_arg: str | None, kernel_path_arg: str | None,
+                    warn_key: str) -> KernelPolicy | None:
+    """Shared ``--policy`` / deprecated ``--kernel-path`` merge for CLIs.
+
+    ``--kernel-path <label>`` warns once and acts as ``--policy <label>``
+    unless ``--policy`` was also given. The spec is applied on top of the
+    env-derived default policy (CLIs are process entry points — the env
+    vars must keep steering whatever the flags don't override). Returns
+    None when neither flag was passed.
+    """
+    spec = policy_arg
+    if kernel_path_arg is not None:
+        warn_once(warn_key, "--kernel-path is deprecated; use --policy")
+        spec = spec if spec is not None else kernel_path_arg
+    if spec is None:
+        return None
+    return KernelPolicy.from_spec(spec, base=default_policy())
+
+
+def as_policy(policy: "KernelPolicy | Mapping | str | None" = None
+              ) -> KernelPolicy:
+    """Coerce a per-call ``policy=`` argument.
+
+    None means the active policy; strings/mappings overlay it (a bare
+    path label additionally clears per-op overrides — "run exactly this
+    path"). Configs that persist a policy coerce absolutely via
+    :meth:`KernelPolicy.from_spec` instead.
+    """
+    if policy is None:
+        return get_policy()
+    if isinstance(policy, KernelPolicy):
+        return policy
+    return KernelPolicy.from_spec(policy, base=get_policy())

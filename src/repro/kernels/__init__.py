@@ -3,7 +3,9 @@
 Each kernel module pairs with a pure-jnp oracle in ``ref.py``; the public
 entry points live in ``ops.py`` and route through the version-shimmed
 dispatch layer in ``backend.py`` (fused XLA vs Pallas tile vs interpret
-mode, selectable per call or via ``REPRO_KERNEL_PATH``):
+mode, selected by the active ``repro.core.policy.KernelPolicy`` — per
+call via ``policy=``/``path=``, or process-wide; the stable façade is
+``repro.ops``):
 
   backend.py          version shim + capability probes + pallas_op dispatch
   tcu_reduce.py       matmul-form segmented reduction   (paper §4)

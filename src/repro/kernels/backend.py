@@ -23,26 +23,32 @@ switch:
                  kernels are validated on CPU
   ``auto``       ``tile`` on TPU/GPU, ``fused`` otherwise
 
-Selection precedence: per-call ``path=`` kwarg > per-call legacy
-``use_pallas=`` bool > ``REPRO_KERNEL_PATH`` env var > ``auto``. Passing
-both ``path=`` and ``use_pallas=`` with conflicting values warns and honours
-``path=``. ``auto`` consults the measured per-shape crossover table in
+Which path runs is decided by the active :class:`repro.core.policy.
+KernelPolicy` — the single resolution algorithm for the whole repo. This
+module keeps the registry, the capability probes, and the compiler-params
+shim; selection state (path, per-op overrides, backend preference,
+autotune mode, env-var parsing) lives entirely in ``repro.core.policy``.
+Precedence: per-call ``path=`` kwarg > per-call legacy ``use_pallas=``
+bool > per-call / active ``policy`` (whose process default is built from
+``REPRO_KERNEL_PATH`` and friends) > ``auto``. Passing both ``path=`` and
+``use_pallas=`` with conflicting values warns and honours ``path=``.
+``auto`` consults the measured per-shape crossover table in
 ``repro.core.autotune`` (keyed by backend — a GPU-measured table never
 steers a CPU/TPU host) when the call shape is known, falling back to the
-static choice (tile on TPU/GPU, fused elsewhere) otherwise or when
-``REPRO_AUTOTUNE=off``. ``auto`` never selects a ``tile_*`` label the host
-cannot lower natively.
+static choice (tile on TPU/GPU, fused elsewhere) otherwise or when the
+policy disables autotuning. ``auto`` never selects a ``tile_*`` label the
+host cannot lower natively.
 """
 from __future__ import annotations
 
 import dataclasses
 import inspect
-import os
 import warnings
 from typing import Any, Callable
 
 import jax
 
+# the env var's *name*; it is parsed only by repro.core.policy
 ENV_PATH = "REPRO_KERNEL_PATH"
 PATHS = ("auto", "fused", "tile", "tile_tpu", "tile_gpu", "interpret")
 
@@ -140,106 +146,53 @@ def compiler_params(backend: str = "tpu", **kwargs: Any):
 
 
 # ---------------------------------------------------------------------------
-# path resolution
+# path resolution — delegated to repro.core.policy (the one resolve
+# implementation in the repo)
 
 
-# algorithm-level contenders that only repro.core.dispatch understands; the
-# env var is shared process-wide, so kernel-level call sites must tolerate
-# them (their nearest kernel-level equivalent is the fused XLA path)
-_DISPATCH_ONLY = ("baseline", "xla_tile")
+def _merge_use_pallas(path: str | None,
+                      use_pallas: bool | None) -> str | None:
+    """Fold the legacy ``use_pallas`` bool into an explicit path label.
 
-_TILE_DOWNGRADE_WARNED = False
-
-
-def _warn_tile_downgrade() -> None:
-    """One-time notice that the generic ``tile`` label fell back to the
-    interpreter — silent interpreter execution looks like a hang at real
-    sizes, so say so once per process."""
-    global _TILE_DOWNGRADE_WARNED
-    if _TILE_DOWNGRADE_WARNED:
-        return
-    _TILE_DOWNGRADE_WARNED = True
-    warnings.warn(
-        f"path='tile' has no native Pallas lowering on the "
-        f"{jax.default_backend()!r} backend (tile_tpu needs a TPU, tile_gpu "
-        "a GPU with Pallas-Triton); running the kernel body through the "
-        "Pallas interpreter instead. Pass path='interpret' explicitly to "
-        "silence this one-time warning.",
-        UserWarning, stacklevel=5)
+    True → ``tile``, False → ``fused``, None → unspecified. When both
+    ``path=`` and ``use_pallas=`` are passed with conflicting values,
+    ``path=`` wins and a ``UserWarning`` is emitted (``path='interpret'``
+    with ``use_pallas=True`` is *not* a conflict — interpret runs the same
+    kernel body).
+    """
+    if use_pallas is None:
+        return path
+    implied = "tile" if use_pallas else "fused"
+    if path is None:
+        return implied
+    if (use_pallas and path == "fused") or \
+            (not use_pallas and path in ("tile", "tile_tpu", "tile_gpu",
+                                         "interpret")):
+        warnings.warn(
+            f"conflicting path={path!r} and use_pallas={use_pallas}; "
+            "path= takes precedence (use_pallas= is legacy)",
+            UserWarning, stacklevel=4)
+    return path
 
 
 def resolve_path(path: str | None = None, *,
                  use_pallas: bool | None = None,
                  op: str | None = None, n: int | None = None,
                  dtype: Any = None) -> str:
-    """Resolve a concrete execution path:
-    ``fused`` | ``tile_tpu`` | ``tile_gpu`` | ``interpret``.
+    """Deprecated: delegate to the active :class:`~repro.core.policy.
+    KernelPolicy` (kernel level). Kept for callers of the pre-policy API;
+    new code resolves via ``repro.core.policy.get_policy().resolve(...,
+    level="kernel")`` or simply passes ``policy=`` to the ops."""
+    from repro.core import policy as kpolicy
 
-    ``path`` is the explicit per-call choice; ``use_pallas`` is the legacy
-    bool (True → kernel, False → fused, None → unspecified); with neither,
-    ``$REPRO_KERNEL_PATH`` applies, then ``auto``. When both are passed
-    with conflicting values, ``path=`` wins and a ``UserWarning`` is
-    emitted (``path='interpret'`` with ``use_pallas=True`` is *not* a
-    conflict — interpret runs the same kernel body).
-
-    The generic ``tile`` resolves per backend (TPU kernel on TPU, Triton
-    kernel on GPU, interpreter + one-time warning elsewhere); the explicit
-    ``tile_tpu``/``tile_gpu`` labels raise a clear error on the wrong host.
-
-    ``op``/``n``/``dtype`` describe the call shape; with them, ``auto``
-    consults the measured, backend-keyed crossover table
-    (``repro.core.autotune``) instead of the static backend check.
-    """
-    if use_pallas is not None:
-        implied = "tile" if use_pallas else "fused"
-        if path is None:
-            path = implied
-        elif (use_pallas and path == "fused") or \
-                (not use_pallas and path in ("tile", "tile_tpu", "tile_gpu",
-                                             "interpret")):
-            warnings.warn(
-                f"conflicting path={path!r} and use_pallas={use_pallas}; "
-                "path= takes precedence (use_pallas= is legacy)",
-                UserWarning, stacklevel=3)
-    if path is None:
-        path = os.environ.get(ENV_PATH, "").strip().lower() or "auto"
-        if path in _DISPATCH_ONLY:
-            path = "fused"
-    if path not in PATHS:
-        raise ValueError(f"unknown kernel path {path!r}; expected one of {PATHS}")
-    native = native_tile_backend()
-    if path == "auto":
-        choice = None
-        if op is not None and n is not None:
-            from repro.core import autotune  # deferred: autotune imports us
-
-            choice = autotune.choose(
-                op, n, dtype,
-                candidates=("fused", "tile", "tile_tpu", "tile_gpu",
-                            "interpret"),
-                level="kernel")
-            # auto must never force a tile backend this host can't lower
-            if choice in ("tile_tpu", "tile_gpu") and choice != native:
-                choice = None
-        path = choice or ("tile" if native else "fused")
-    if path == "tile":
-        if native is None:
-            _warn_tile_downgrade()
-            return "interpret"  # nothing to compile the tile kernel for
-        return native
-    if path == "tile_tpu" and native != "tile_tpu":
-        raise RuntimeError(
-            "path='tile_tpu' requires a TPU host with the Pallas-TPU "
-            f"lowering (active backend: {jax.default_backend()!r}); use "
-            "path='interpret' for CPU validation or path='tile' for "
-            "backend-appropriate selection")
-    if path == "tile_gpu" and native != "tile_gpu":
-        raise RuntimeError(
-            "path='tile_gpu' requires a GPU host with the Pallas-Triton "
-            f"lowering (active backend: {jax.default_backend()!r}); use "
-            "path='interpret' for CPU validation or path='tile' for "
-            "backend-appropriate selection")
-    return path
+    kpolicy.warn_once(
+        "deprecated:backend.resolve_path",
+        "repro.kernels.backend.resolve_path is deprecated; resolution "
+        "lives on repro.core.policy.KernelPolicy.resolve (pass policy= to "
+        "the ops, or call get_policy().resolve(..., level='kernel'))")
+    path = _merge_use_pallas(path, use_pallas)
+    return kpolicy.get_policy().resolve(op=op, n=n, dtype=dtype,
+                                        level="kernel", explicit=path)
 
 
 # ---------------------------------------------------------------------------
@@ -293,13 +246,20 @@ def available_ops() -> list[str]:
 _SIZE_IS_LAST_DIM = ("segmented_reduce", "segmented_scan", "weighted_scan")
 
 
-def pallas_op(name: str, *args: Any, path: str | None = None,
+def pallas_op(name: str, *args: Any, policy: Any = None,
+              path: str | None = None,
               use_pallas: bool | None = None, **kwargs: Any) -> Any:
-    """Run a registered op through the path switch (see module docstring).
+    """Run a registered op through the policy switch (see module
+    docstring).
 
-    For the reduction/scan family the first array argument's trailing
-    dimension is the op's segment size, enabling shape-aware ``auto``.
+    ``policy`` is a :class:`repro.core.policy.KernelPolicy` (or string
+    shorthand; None = the active policy); ``path``/``use_pallas`` are the
+    per-call legacy spellings and beat the policy. For the reduction/scan
+    family the first array argument's trailing dimension is the op's
+    segment size, enabling shape-aware ``auto``.
     """
+    from repro.core import policy as kpolicy
+
     op = get_op(name)
     n = dt = None
     if name in _SIZE_IS_LAST_DIM:
@@ -307,7 +267,9 @@ def pallas_op(name: str, *args: Any, path: str | None = None,
             if hasattr(a, "shape") and getattr(a, "ndim", 0) >= 1:
                 n, dt = a.shape[-1], a.dtype
                 break
-    p = resolve_path(path, use_pallas=use_pallas, op=name, n=n, dtype=dt)
+    path = _merge_use_pallas(path, use_pallas)
+    p = kpolicy.as_policy(policy).resolve(op=name, n=n, dtype=dt,
+                                          level="kernel", explicit=path)
     if p == "fused":
         return op.fused(*args, **kwargs)
     if p == "tile_gpu":

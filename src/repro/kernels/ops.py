@@ -7,9 +7,10 @@ this module feeding the shape-strict, MXU-aligned Pallas-TPU kernel (native
 on TPU, interpret mode on CPU); the *tile_gpu* entry is the Pallas-Triton
 twin's glue (``repro.kernels.triton.ops``, native on GPU); the *fused*
 entry is the pure-jnp oracle in ``ref.py``. The execution path is chosen
-per call (``path=`` / legacy ``use_pallas=``), via the ``REPRO_KERNEL_PATH``
-env var, or automatically (kernel on TPU/GPU, fused XLA elsewhere) — see
-the backend module docstring for precedence.
+per call (``policy=`` / ``path=`` / legacy ``use_pallas=``) or by the
+active ``repro.core.policy.KernelPolicy`` (whose process default follows
+``REPRO_KERNEL_PATH``) — see the backend module docstring for precedence;
+the stable public façade over these ops is ``repro.ops``.
 """
 from __future__ import annotations
 
@@ -74,10 +75,11 @@ def _reduce_tile(x: jax.Array, *, interpret: bool = False) -> jax.Array:
     return out[: flat.shape[0]].reshape(lead)
 
 
-def segmented_reduce(x: jax.Array, *, path: str | None = None,
+def segmented_reduce(x: jax.Array, *, policy=None, path: str | None = None,
                      use_pallas: bool | None = None) -> jax.Array:
     """Sum over the last axis of ``x (..., n)`` -> f32 ``(...,)``."""
-    return pallas_op("segmented_reduce", x, path=path, use_pallas=use_pallas)
+    return pallas_op("segmented_reduce", x, policy=policy, path=path,
+                     use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -93,10 +95,11 @@ def _scan_tile(x: jax.Array, *, interpret: bool = False) -> jax.Array:
     return out[: _nrows(lead), :n].reshape(*lead, n)
 
 
-def segmented_scan(x: jax.Array, *, path: str | None = None,
+def segmented_scan(x: jax.Array, *, policy=None, path: str | None = None,
                    use_pallas: bool | None = None) -> jax.Array:
     """Inclusive prefix-sum over the last axis -> f32, same shape."""
-    return pallas_op("segmented_scan", x, path=path, use_pallas=use_pallas)
+    return pallas_op("segmented_scan", x, policy=policy, path=path,
+                     use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -121,10 +124,11 @@ def _weighted_scan_tile(x: jax.Array, log_a: jax.Array, *,
     return y[:, :n, 0].reshape(*lead, n)
 
 
-def weighted_scan(x: jax.Array, log_a: jax.Array, *, path: str | None = None,
+def weighted_scan(x: jax.Array, log_a: jax.Array, *, policy=None,
+                  path: str | None = None,
                   use_pallas: bool | None = None) -> jax.Array:
     """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` -> f32."""
-    return pallas_op("weighted_scan", x, log_a, path=path,
+    return pallas_op("weighted_scan", x, log_a, policy=policy, path=path,
                      use_pallas=use_pallas)
 
 
@@ -134,6 +138,8 @@ def weighted_scan(x: jax.Array, log_a: jax.Array, *, path: str | None = None,
 
 def _rmsnorm_tile_fwd(x, w, eps, interpret):
     lead, d = x.shape[:-1], x.shape[-1]
+    if d % LANES:  # kernel is lane-strict; unaligned d -> oracle (the
+        return ref.rmsnorm_ref(x, w, eps=eps)  # same idiom as attention)
     flat = _pad_axis(x.reshape(-1, d), 0, 128)
     out = _require_pallas(_rmsnorm_kernel, "rmsnorm")(
         flat, w, eps=eps, interpret=interpret)
@@ -181,10 +187,10 @@ def _rmsnorm_fused(x: jax.Array, w: jax.Array, *,
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
-            path: str | None = None,
+            policy=None, path: str | None = None,
             use_pallas: bool | None = None) -> jax.Array:
     """RMSNorm over the last axis (differentiable; Pallas fwd on TPU/GPU)."""
-    return pallas_op("rmsnorm", x, w, eps=eps, path=path,
+    return pallas_op("rmsnorm", x, w, eps=eps, policy=policy, path=path,
                      use_pallas=use_pallas)
 
 
@@ -220,11 +226,11 @@ def _ssd_tile(
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
-             c: jax.Array, *, path: str | None = None,
+             c: jax.Array, *, policy=None, path: str | None = None,
              use_pallas: bool | None = None, return_state: bool = False):
     """Mamba-2 SSD scan -> (B, L, H, P) in the input dtype; with
     ``return_state=True`` also the final state (B, H, P, N) f32."""
-    return pallas_op("ssd_scan", x, dt, a, b, c, path=path,
+    return pallas_op("ssd_scan", x, dt, a, b, c, policy=policy, path=path,
                      use_pallas=use_pallas, return_state=return_state)
 
 
@@ -249,31 +255,81 @@ def _attention_tile(
 def attention(
     q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal: bool = True, window: int | None = None,
-    scale: float | None = None, path: str | None = None,
+    scale: float | None = None, policy=None, path: str | None = None,
     use_pallas: bool | None = None,
 ) -> jax.Array:
     """Multi-head attention (B, Hq, Lq, D) x (B, Hkv, Lk, D) -> (B, Hq, Lq, D)."""
     return pallas_op("attention", q, k, v, causal=causal, window=window,
-                     scale=scale, path=path, use_pallas=use_pallas)
+                     scale=scale, policy=policy, path=path,
+                     use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------
 # registry
 
-backend.register_op("segmented_reduce", tile=_reduce_tile,
+
+def _diff_via_ref(kernel_fn, ref_fn):
+    """Make a kernel entry differentiable: backward through the oracle.
+
+    ``pallas_call`` has no JVP rule in interpret mode (and only partial
+    autodiff support natively), so a train step that reaches a kernel
+    path would crash. Every kernel agrees with its ``ref.py`` twin to
+    tolerance (the dispatch-agreement tests), so the same trick rmsnorm
+    already uses generalises: run the kernel forward, differentiate the
+    reference formulation (numerically identical) backward. ``kwargs``
+    are static per call and must be accepted by both twins.
+    """
+    if kernel_fn is None:
+        return None
+
+    @functools.wraps(kernel_fn)
+    def wrapped(*args, interpret=False, **kwargs):
+        run = jax.custom_vjp(
+            lambda *arrs: kernel_fn(*arrs, interpret=interpret, **kwargs))
+
+        def fwd(*arrs):
+            return run(*arrs), arrs
+
+        def bwd(res, g):
+            _, vjp = jax.vjp(lambda *a: ref_fn(*a, **kwargs), *res)
+            return vjp(g)
+
+        run.defvjp(fwd, bwd)
+        return run(*args)
+
+    return wrapped
+
+
+backend.register_op("segmented_reduce",
+                    tile=_diff_via_ref(_reduce_tile,
+                                       ref.segmented_reduce_ref),
                     fused=ref.segmented_reduce_ref,
-                    tile_gpu=_gpu_entry("reduce_tile_gpu"))
-backend.register_op("segmented_scan", tile=_scan_tile,
+                    tile_gpu=_diff_via_ref(_gpu_entry("reduce_tile_gpu"),
+                                           ref.segmented_reduce_ref))
+backend.register_op("segmented_scan",
+                    tile=_diff_via_ref(_scan_tile, ref.segmented_scan_ref),
                     fused=ref.segmented_scan_ref,
-                    tile_gpu=_gpu_entry("scan_tile_gpu"))
-backend.register_op("weighted_scan", tile=_weighted_scan_tile,
+                    tile_gpu=_diff_via_ref(_gpu_entry("scan_tile_gpu"),
+                                           ref.segmented_scan_ref))
+backend.register_op("weighted_scan",
+                    tile=_diff_via_ref(_weighted_scan_tile,
+                                       ref.weighted_scan_ref),
                     fused=ref.weighted_scan_ref,
-                    tile_gpu=_gpu_entry("weighted_scan_tile_gpu"))
+                    tile_gpu=_diff_via_ref(
+                        _gpu_entry("weighted_scan_tile_gpu"),
+                        ref.weighted_scan_ref))
+# rmsnorm carries its own custom VJP (all paths share it) — no wrapper
 backend.register_op("rmsnorm", tile=_rmsnorm_tile, fused=_rmsnorm_fused,
                     tile_gpu=(_rmsnorm_tile_gpu if triton_ops is not None
                               else None))
-backend.register_op("ssd_scan", tile=_ssd_tile, fused=ref.ssd_scan_ref,
-                    tile_gpu=_gpu_entry("ssd_tile_gpu"))
-backend.register_op("attention", tile=_attention_tile,
+backend.register_op("ssd_scan",
+                    tile=_diff_via_ref(_ssd_tile, ref.ssd_scan_ref),
+                    fused=ref.ssd_scan_ref,
+                    tile_gpu=_diff_via_ref(_gpu_entry("ssd_tile_gpu"),
+                                           ref.ssd_scan_ref))
+backend.register_op("attention",
+                    tile=_diff_via_ref(_attention_tile,
+                                       ref.flash_attention_ref),
                     fused=ref.flash_attention_ref,
-                    tile_gpu=_gpu_entry("attention_tile_gpu"))
+                    tile_gpu=_diff_via_ref(_gpu_entry("attention_tile_gpu"),
+                                           ref.flash_attention_ref))

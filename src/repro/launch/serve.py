@@ -30,11 +30,19 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
     from repro.core import dispatch
+    from repro.core import policy as kpolicy
 
+    ap.add_argument("--policy", default=None,
+                    help="KernelPolicy for every core op in the served "
+                         "model: a path label, an op=path,op=path override "
+                         "list, or a JSON object of policy fields "
+                         "(default: the active policy)")
     ap.add_argument("--kernel-path", default=None, choices=dispatch.PATHS,
-                    help="explicit repro.core.dispatch path for every core "
-                         "op in the served model (default: auto)")
+                    help="deprecated alias for --policy <path-label>")
     args = ap.parse_args()
+
+    pol = kpolicy.policy_from_cli(args.policy, args.kernel_path,
+                                  "deprecated:launch.serve.kernel_path")
 
     mod = configs.get(args.arch)
     cfg = mod.SMOKE if args.config == "smoke" else mod.FULL
@@ -50,8 +58,7 @@ def main() -> None:
             print(f"loaded checkpoint step {latest}")
 
     engine = ServingEngine(bundle, params, ServeConfig(
-        slots=args.slots, max_new=args.max_new,
-        kernel_path=args.kernel_path))
+        slots=args.slots, max_new=args.max_new, policy=pol))
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(
         3, cfg.vocab, size=rng.integers(4, args.prompt_len + 1),

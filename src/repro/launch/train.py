@@ -74,21 +74,28 @@ def main() -> None:
                     help="jsonl path for per-step timing records")
     ap.add_argument("--log-every", type=int, default=10)
     from repro.core import dispatch
+    from repro.core import policy as kpolicy
 
+    ap.add_argument("--policy", default=None,
+                    help="KernelPolicy for the model's core ops and the "
+                         "optimizer's global-norm reduce: a path label, "
+                         "an op=path,op=path override list, or a JSON "
+                         "object of policy fields")
     ap.add_argument("--kernel-path", default=None, choices=dispatch.PATHS,
-                    help="explicit repro.core.dispatch path for the model's "
-                         "core ops and the optimizer's global-norm reduce")
+                    help="deprecated alias for --policy <path-label>")
     args = ap.parse_args()
+
+    pol = kpolicy.policy_from_cli(args.policy, args.kernel_path,
+                                  "deprecated:launch.train.kernel_path")
 
     mod = configs.get(args.arch)
     cfg = mod.SMOKE if args.config == "smoke" else mod.FULL
-    if args.kernel_path is not None:
-        cfg = dataclasses.replace(cfg, kernel_path=args.kernel_path)
+    if pol is not None:
+        cfg = dataclasses.replace(cfg, policy=pol)
     bundle = build(cfg)
     mesh, rules = build_mesh_and_rules(args.tp)
     opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps),
-                        decay_steps=args.steps,
-                        kernel_path=args.kernel_path)
+                        decay_steps=args.steps, policy=pol)
     train_cfg = TrainConfig(microbatches=args.microbatches)
 
     with use_rules(rules), mesh:

@@ -2,10 +2,12 @@
 Mamba-2 (SSD) mixer. All functional: ``<layer>_pspec(cfg)`` declares params,
 ``<layer>_apply(params, cfg, x, ...)`` computes, ``<layer>_decode`` steps a
 cache. Every reduce/scan/attention/SSD formulation is reached through
-``repro.core.dispatch`` — ``ModelConfig.kernel_path`` plumbs an explicit
-path choice into every call site (None = ``auto``, shape-aware), so the
-``REPRO_KERNEL_PATH`` env var, the benchmarks, and the autotuner all see
-the same ops.
+``repro.core.dispatch`` — ``ModelConfig.policy`` plumbs an explicit
+:class:`~repro.core.policy.KernelPolicy` into every call site (None =
+the active policy, whose process default follows ``REPRO_KERNEL_PATH``),
+so the env vars, the benchmarks, and the autotuner all see the same ops.
+The old ``kernel_path=`` string kwarg is kept as a deprecation shim that
+warns once and coerces into a policy.
 """
 from __future__ import annotations
 
@@ -16,6 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch
+from repro.core import policy as kpolicy
+from repro.core.policy import KernelPolicy
 from repro.core.ssd import ssd_decode_step
 from repro.models.common import PSpec, rmsnorm, rope, swiglu
 from repro.models.xla_attention import decode_attention
@@ -70,9 +74,16 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
     remat_policy: str = "none"     # none | dots | offload-ready
     scan_layers: bool = True
-    # explicit dispatch path for every core op in the model (attention,
-    # SSD, MoE counts/offsets); None = "auto" (shape-aware, autotuned)
-    kernel_path: str | None = None
+    # explicit KernelPolicy for every core op in the model (attention,
+    # SSD, MoE counts/offsets); strings auto-coerce; None = the active
+    # policy (shape-aware "auto" by default)
+    policy: KernelPolicy | None = None
+    # deprecated spelling of ``policy`` (a bare path label); warns once
+    kernel_path: dataclasses.InitVar[str | None] = None
+
+    def __post_init__(self, kernel_path):
+        object.__setattr__(self, "policy", kpolicy.coerce_config_policy(
+            self.policy, kernel_path, "ModelConfig"))
 
     @property
     def dh(self) -> int:
@@ -126,7 +137,7 @@ def attn_apply(p, cfg: ModelConfig, x, *, positions=None, causal=True,
     q = logical_constraint(q, "batch", None, "heads", None)
     k = logical_constraint(k, "batch", None, "kv_heads", None)
     o = dispatch.attention(q, k, v, causal=causal and kv is None,
-                           window=window, path=cfg.kernel_path)
+                           window=window, policy=cfg.policy)
     o = o.reshape(b, s, hq * dh)
     return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k, v)
 
@@ -256,10 +267,10 @@ def moe_apply_grouped(p, cfg: ModelConfig, x):
     # assignment (matmul-form one-hot on the default path)
     counts = dispatch.ragged_reduce(
         jnp.ones(e_flat.shape, jnp.float32), e_flat, e,
-        path=cfg.kernel_path)                                # (g, e)
+        policy=cfg.policy)                                   # (g, e)
     # capacity offsets: exclusive scan over experts
     offsets = dispatch.scan(counts, exclusive=True,
-                            path=cfg.kernel_path)            # (g, e)
+                            policy=cfg.policy)               # (g, e)
     rank = jnp.arange(n)[None, :] - jnp.take_along_axis(
         offsets, e_sorted, axis=-1).astype(jnp.int32)
 
@@ -349,10 +360,10 @@ def moe_apply_global(p, cfg: ModelConfig, x):
     # (matmul-form one-hot on the default path)
     counts = dispatch.ragged_reduce(
         jnp.ones(e_flat.shape, jnp.float32), e_flat, e,
-        path=cfg.kernel_path)                                # (e,)
+        policy=cfg.policy)                                   # (e,)
     # capacity offsets: exclusive scan (stream compaction)
     offsets = dispatch.scan(counts, exclusive=True,
-                            path=cfg.kernel_path)            # (e,)
+                            policy=cfg.policy)               # (e,)
     rank = jnp.arange(t * k) - jnp.take(offsets, e_sorted).astype(jnp.int32)
 
     cap = max(8, int(cfg.capacity_factor * t * k / e + 127) // 128 * 128)
@@ -452,7 +463,7 @@ def mamba_apply(p, cfg: ModelConfig, x, *, collect_cache: bool = False):
     # stay; see core/ssd.py)
     y, state = dispatch.ssd(xs, dt, a, bmat, cmat, chunk=cfg.ssd_chunk,
                             matmul_dtype=cfg.dtype, return_state=True,
-                            path=cfg.kernel_path)
+                            policy=cfg.policy)
     y = y + p["d_skip"][:, None].astype(jnp.float32) * xs.astype(jnp.float32)
     y = y.reshape(b, s, di).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,140 @@
+"""``repro.ops`` — the stable public API for the paper's ops.
+
+This façade is the documented entry point for running any of the repo's
+reduce/scan-family operations under a :class:`~repro.core.policy.
+KernelPolicy`. Every op accepts ``policy=``:
+
+* ``None`` (default) — the active policy (:func:`get_policy`; its process
+  default is built from ``REPRO_KERNEL_PATH``/``REPRO_AUTOTUNE*``),
+* a :class:`KernelPolicy`,
+* a string shorthand — a bare path label (``"fused"``, ``"tile"``,
+  ``"baseline"``, ...), an ``op=path,op=path`` per-op override list, or a
+  JSON object of policy fields.
+
+Scoped overrides compose through :func:`using_policy` /
+:func:`set_policy`::
+
+    import repro.ops as ops
+    from repro.ops import KernelPolicy, using_policy
+
+    ops.reduce(x)                          # active policy (usually auto)
+    ops.scan(x, policy="baseline")         # exactly this path
+    with using_policy(KernelPolicy(path="auto",
+                                   op_paths={"attention": "fused"})):
+        ops.attention(q, k, v)             # per-op override beats global
+
+The exported surface is exactly ``__all__``; a CI test pins it. The
+``path=`` kwarg is a deprecated alias for a bare-label policy and warns
+once per process.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import dispatch as _dispatch
+from repro.core import policy as _policy
+from repro.core.policy import (  # noqa: F401  (re-exported API)
+    KernelPolicy,
+    get_policy,
+    set_policy,
+    using_policy,
+)
+from repro.kernels import ops as _kops
+
+__all__ = [
+    "KernelPolicy",
+    "attention",
+    "get_policy",
+    "ragged_reduce",
+    "ragged_scan",
+    "reduce",
+    "rmsnorm",
+    "scan",
+    "set_policy",
+    "ssd",
+    "using_policy",
+    "weighted_scan",
+]
+
+
+def _policy_arg(policy, path):
+    """Fold the deprecated ``path=`` alias into ``policy`` (warns once)."""
+    if path is not None:
+        _policy.warn_once(
+            "deprecated:repro.ops.path",
+            "the path= kwarg on repro.ops is deprecated; pass policy= "
+            "(a KernelPolicy or a string shorthand like policy='fused')",
+            stacklevel=4)
+        if policy is None:
+            policy = path
+    return policy
+
+
+def reduce(x: jax.Array, *, policy=None, path: str | None = None
+           ) -> jax.Array:
+    """Segmented sum over the last axis of ``x (..., n)`` -> f32
+    ``(...,)``."""
+    return _dispatch.reduce(x, policy=_policy_arg(policy, path))
+
+
+def scan(x: jax.Array, *, policy=None, exclusive: bool = False,
+         path: str | None = None) -> jax.Array:
+    """Prefix sum over the last axis -> f32, same shape
+    (``exclusive=True`` shifts in a leading zero)."""
+    return _dispatch.scan(x, policy=_policy_arg(policy, path),
+                          exclusive=exclusive)
+
+
+def weighted_scan(x: jax.Array, log_a: jax.Array, *, policy=None,
+                  path: str | None = None) -> jax.Array:
+    """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` -> f32."""
+    return _dispatch.weighted_scan(x, log_a,
+                                   policy=_policy_arg(policy, path))
+
+
+def ragged_reduce(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
+                  policy=None, path: str | None = None) -> jax.Array:
+    """Bucketed segmented sum: ``x (..., n)`` + ``seg_ids`` -> f32
+    ``(..., n_segments)``."""
+    return _dispatch.ragged_reduce(x, seg_ids, n_segments,
+                                   policy=_policy_arg(policy, path))
+
+
+def ragged_scan(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
+                policy=None, debug: bool = False,
+                path: str | None = None) -> jax.Array:
+    """Within-segment inclusive prefix sum -> f32, same shape as ``x``
+    (``seg_ids`` must be non-decreasing; ``debug=True`` validates)."""
+    return _dispatch.ragged_scan(x, seg_ids, n_segments,
+                                 policy=_policy_arg(policy, path),
+                                 debug=debug)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            policy=None, path: str | None = None) -> jax.Array:
+    """RMSNorm over the last axis (differentiable; MXU Σx² on the kernel
+    paths)."""
+    return _kops.rmsnorm(x, w, eps=eps, policy=_policy_arg(policy, path))
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None, policy=None,
+              path: str | None = None) -> jax.Array:
+    """Multi-head attention in model layout: ``q (B, Sq, Hq, D)``,
+    ``k``/``v`` ``(B, Sk, Hkv, D)`` -> ``(B, Sq, Hq, D)``."""
+    return _dispatch.attention(q, k, v, causal=causal, window=window,
+                               scale=scale,
+                               policy=_policy_arg(policy, path))
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, policy=None, chunk: int | None = None,
+        matmul_dtype=None, return_state: bool = False,
+        path: str | None = None):
+    """Mamba-2 SSD scan -> ``y (B, L, H, P)``; with ``return_state=True``
+    also the final state ``(B, H, P, N)`` f32."""
+    return _dispatch.ssd(x, dt, a, b, c,
+                         policy=_policy_arg(policy, path), chunk=chunk,
+                         matmul_dtype=matmul_dtype,
+                         return_state=return_state)

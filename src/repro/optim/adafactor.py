@@ -37,7 +37,7 @@ def init_adafactor_state(params, cfg: OptConfig):
 
 def adafactor_update(grads, opt_state, params, cfg: OptConfig):
     step = opt_state["step"] + 1
-    gnorm = global_norm(grads, path=cfg.kernel_path)
+    gnorm = global_norm(grads, policy=cfg.policy)
     scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
     lr = lr_at(cfg, step)
     b2 = cfg.b2

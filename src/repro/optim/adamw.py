@@ -4,7 +4,9 @@ Self-contained (no optax). Canonical params are f32; the ≥100B configs run
 bf16 first/second moments (DESIGN §5) to fit 256x16 GB under ZeRO-3. The
 global-norm clip reduction runs through ``repro.core.dispatch`` — a Σx²
 whose formulation (matmul-form vs native sum) follows the configured
-``kernel_path`` (None = shape-aware ``auto``).
+:class:`~repro.core.policy.KernelPolicy` (None = the active policy,
+shape-aware ``auto`` by default). The old ``kernel_path=`` string kwarg
+is a deprecation shim that warns once and coerces into a policy.
 """
 from __future__ import annotations
 
@@ -15,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch
+from repro.core import policy as kpolicy
+from repro.core.policy import KernelPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,8 +33,15 @@ class OptConfig:
     weight_decay: float = 0.1
     clip_norm: float = 1.0
     state_dtype: Any = jnp.float32     # m/v dtype (bf16 for ≥100B archs)
-    # explicit dispatch path for the global-norm reduction (None = auto)
-    kernel_path: str | None = None
+    # explicit KernelPolicy for the global-norm reduction (None = the
+    # active policy); strings auto-coerce
+    policy: KernelPolicy | None = None
+    # deprecated spelling of ``policy`` (a bare path label); warns once
+    kernel_path: dataclasses.InitVar[str | None] = None
+
+    def __post_init__(self, kernel_path):
+        object.__setattr__(self, "policy", kpolicy.coerce_config_policy(
+            self.policy, kernel_path, "OptConfig"))
 
 
 def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
@@ -52,12 +63,13 @@ def init_opt_state(params, cfg: OptConfig):
     }
 
 
-def global_norm(tree, *, path: str | None = None) -> jax.Array:
+def global_norm(tree, *, policy: KernelPolicy | str | None = None
+                ) -> jax.Array:
     """sqrt(Σ Σx²) with per-leaf Σx² through the dispatch switch (the
     paper's matmul-form reduction on ``fused``, ``jnp.sum`` on
     ``baseline``; ``auto`` picks per leaf size)."""
     sq = [dispatch.reduce(
-        jnp.square(g.astype(jnp.float32)).reshape(1, -1), path=path)[0]
+        jnp.square(g.astype(jnp.float32)).reshape(1, -1), policy=policy)[0]
         for g in jax.tree.leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(sq)))
 
@@ -65,7 +77,7 @@ def global_norm(tree, *, path: str | None = None) -> jax.Array:
 def adamw_update(grads, opt_state, params, cfg: OptConfig):
     """-> (new_params, new_opt_state, metrics). params/grads f32."""
     step = opt_state["step"] + 1
-    gnorm = global_norm(grads, path=cfg.kernel_path)
+    gnorm = global_norm(grads, policy=cfg.policy)
     scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
     lr = lr_at(cfg, step)
     b1, b2 = cfg.b1, cfg.b2

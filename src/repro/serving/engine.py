@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy as kpolicy
+from repro.core.policy import KernelPolicy
 from repro.models.common import init_params
 from repro.models.lm import Bundle
 from repro.training.train_lib import make_serve_step
@@ -40,11 +42,18 @@ class ServeConfig:
     eos_token: int = 2
     greedy: bool = True
     temperature: float = 1.0
-    # explicit repro.core.dispatch path for every core op in the served
-    # model (attention, SSD, MoE). None keeps the bundle's own setting
-    # (usually "auto"); a value rebuilds the bundle with the path baked
-    # into the jitted prefill/decode steps — no env-var reliance.
-    kernel_path: str | None = None
+    # explicit KernelPolicy for every core op in the served model
+    # (attention, SSD, MoE); strings auto-coerce. None keeps the bundle's
+    # own setting (usually the active policy); a value rebuilds the
+    # bundle with the policy baked into the jitted prefill/decode steps —
+    # no env-var reliance.
+    policy: KernelPolicy | None = None
+    # deprecated spelling of ``policy`` (a bare path label); warns once
+    kernel_path: dataclasses.InitVar[str | None] = None
+
+    def __post_init__(self, kernel_path):
+        object.__setattr__(self, "policy", kpolicy.coerce_config_policy(
+            self.policy, kernel_path, "ServeConfig"))
 
 
 @dataclasses.dataclass
@@ -79,12 +88,14 @@ class ServingEngine:
     ``serve_wave`` handles one admitted wave."""
 
     def __init__(self, bundle: Bundle, params, cfg: ServeConfig):
-        if cfg.kernel_path is not None and \
-                bundle.cfg.kernel_path != cfg.kernel_path:
+        # compare the WHOLE policy, not a path string: an autotune-mode or
+        # per-op-override change must invalidate the cached bundle too
+        # (its jitted prefill/decode steps baked the old choices in)
+        if cfg.policy is not None and bundle.cfg.policy != cfg.policy:
             from repro.models import build  # lazy: engine is model-agnostic
 
             bundle = build(dataclasses.replace(
-                bundle.cfg, kernel_path=cfg.kernel_path))
+                bundle.cfg, policy=cfg.policy))
         self.bundle = bundle
         self.cfg = cfg
         self.params = params

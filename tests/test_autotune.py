@@ -174,6 +174,7 @@ def test_other_backend_section_never_consulted(tmp_path, monkeypatch):
     }}
     path.write_text(json.dumps(table))
     monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(backend.ENV_PATH, raising=False)
     monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
     autotune.invalidate_cache()
     assert autotune.current_entries() is None   # no section for this host

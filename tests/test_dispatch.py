@@ -1,6 +1,7 @@
 """Dispatch-layer tests: the version shim, path resolution/override, and
 agreement of the fused / tile / interpret paths for reduce, scan, and
 weighted scan (fp32 and bf16)."""
+import dataclasses
 import re
 import warnings
 from pathlib import Path
@@ -11,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import dispatch
+from repro.core import policy as kpolicy
 from repro.kernels import backend, ops, ref
 
 SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
@@ -97,21 +99,33 @@ def test_tile_downgrade_warns_once_then_stays_silent(monkeypatch):
     if backend.native_tile_backend() is not None:
         pytest.skip("downgrade only happens off-accelerator")
     monkeypatch.delenv(backend.ENV_PATH, raising=False)
-    monkeypatch.setattr(backend, "_TILE_DOWNGRADE_WARNED", False)
+    monkeypatch.setattr(kpolicy, "_TILE_DOWNGRADE_WARNED", False)
+    resolve = kpolicy.get_policy().resolve
     with pytest.warns(UserWarning, match="interpret") as rec:
-        assert backend.resolve_path("tile") == "interpret"
+        assert resolve(level="kernel", explicit="tile") == "interpret"
     msg = str(rec[0].message)
     assert jax.default_backend() in msg          # names the backend
     assert "path='interpret'" in msg             # names the silencer
     # second resolution: no warning at all
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        assert backend.resolve_path("tile") == "interpret"
+        assert resolve(level="kernel", explicit="tile") == "interpret"
     # an explicit interpret request never warns
-    monkeypatch.setattr(backend, "_TILE_DOWNGRADE_WARNED", False)
+    monkeypatch.setattr(kpolicy, "_TILE_DOWNGRADE_WARNED", False)
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        assert backend.resolve_path("interpret") == "interpret"
+        assert resolve(level="kernel", explicit="interpret") == "interpret"
+    # interpret_fallback="silent" suppresses it entirely; "error" raises
+    monkeypatch.setattr(kpolicy, "_TILE_DOWNGRADE_WARNED", False)
+    silent = dataclasses.replace(kpolicy.get_policy(),
+                                 interpret_fallback="silent")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert silent.resolve(level="kernel", explicit="tile") == "interpret"
+    strict = dataclasses.replace(kpolicy.get_policy(),
+                                 interpret_fallback="error")
+    with pytest.raises(RuntimeError, match="interpret_fallback"):
+        strict.resolve(level="kernel", explicit="tile")
 
 
 def test_explicit_tile_backend_labels_are_strict():
@@ -322,6 +336,61 @@ def test_agreeing_path_and_use_pallas_no_warning(recwarn):
     assert backend.resolve_path("fused", use_pallas=False) == "fused"
     assert not [w for w in recwarn.list
                 if issubclass(w.category, UserWarning)]
+
+
+# ---------------------------------------------------------------------------
+# autodiff: kernel paths differentiate (backward rides the ref twin)
+
+
+def test_kernel_paths_differentiate_like_fused():
+    """pallas_call has no JVP rule in interpret mode, so the kernel
+    registry wraps every tile entry in a custom VJP whose backward runs
+    the reference formulation — a train step under policy='interpret'
+    (or 'tile' on an accelerator) must produce the same gradients as
+    'fused'."""
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 130))
+
+    def loss(path):
+        return lambda a: jnp.sum(ops.segmented_scan(a, path=path) ** 2)
+
+    g_fused = np.asarray(jax.grad(loss("fused"))(x))
+    g_int = np.asarray(jax.grad(loss("interpret"))(x))
+    np.testing.assert_allclose(g_int, g_fused, rtol=1e-4, atol=1e-4)
+
+    def red_loss(path):
+        return lambda a: jnp.sum(ops.segmented_reduce(a, path=path) ** 2)
+
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(red_loss("interpret"))(x)),
+        np.asarray(jax.grad(red_loss("fused"))(x)), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_and_ssd_interpret_paths_differentiate():
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    q = jax.random.normal(ks[0], (1, 2, 128, 16))
+    k = jax.random.normal(ks[1], (1, 2, 128, 16))
+    v = jax.random.normal(ks[2], (1, 2, 128, 16))
+
+    def att_loss(path):
+        return lambda qq: jnp.sum(ops.attention(qq, k, v, path=path) ** 2)
+
+    g_f = np.asarray(jax.grad(att_loss("fused"))(q))
+    g_i = np.asarray(jax.grad(att_loss("interpret"))(q))
+    np.testing.assert_allclose(g_i, g_f, rtol=2e-3, atol=2e-3)
+
+    x = 0.2 * jax.random.normal(ks[3], (1, 64, 2, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (1, 64, 2)))
+    a = -jnp.exp(jnp.zeros((2,)))
+    bb = jax.random.normal(ks[0], (1, 64, 1, 4)) / 2.0
+    cc = jax.random.normal(ks[1], (1, 64, 1, 4)) / 2.0
+
+    def ssd_loss(path):
+        return lambda xx: jnp.sum(
+            dispatch.ssd(xx, dt, a, bb, cc, path=path) ** 2)
+
+    g_f = np.asarray(jax.grad(ssd_loss("fused"))(x))
+    g_i = np.asarray(jax.grad(ssd_loss("interpret"))(x))
+    np.testing.assert_allclose(g_i, g_f, rtol=2e-3, atol=2e-3)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,364 @@
+"""KernelPolicy subsystem tests: context-manager scoping, hashability /
+jit-static-arg use, per-op overrides, string-shorthand coercion, the
+deprecation shims (warn once, keep working), and the grep guard pinning
+env parsing to exactly one home (``repro.core.policy``)."""
+import dataclasses
+import functools
+import re
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, dispatch
+from repro.core import policy as kpolicy
+from repro.core.policy import KernelPolicy
+from repro.kernels import backend, ops
+from repro.models.layers import ModelConfig
+from repro.optim import OptConfig
+from repro.serving import ServeConfig
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# env parsing has exactly one home
+
+
+def test_env_vars_parsed_only_in_policy_module():
+    """Outside core/policy.py, no module may read REPRO_KERNEL_PATH /
+    REPRO_AUTOTUNE* via os.environ — the process default is built once by
+    the policy layer, and everything else consumes the policy object.
+    (Referencing the env-var *names* is fine; reading them is not.)"""
+    pat = re.compile(
+        r"os\.environ(?:\.get)?\s*[\[(][^)\]]*"
+        r"(?:REPRO_KERNEL_PATH|REPRO_AUTOTUNE|ENV_PATH|ENV_AUTOTUNE"
+        r"|ENV_TABLE)", re.DOTALL)
+    offenders = []
+    for p in sorted(SRC.rglob("*.py")):
+        rel = p.relative_to(SRC)
+        if rel == Path("core/policy.py"):
+            continue
+        if pat.search(p.read_text()):
+            offenders.append(str(rel))
+    assert not offenders, (
+        f"kernel-selection env vars read outside core/policy.py in "
+        f"{offenders}; consume repro.core.policy.get_policy() instead"
+    )
+
+
+def test_default_policy_built_from_env(monkeypatch):
+    monkeypatch.delenv(kpolicy.ENV_PATH, raising=False)
+    monkeypatch.delenv(kpolicy.ENV_AUTOTUNE, raising=False)
+    monkeypatch.delenv(kpolicy.ENV_TABLE, raising=False)
+    assert kpolicy.default_policy() == KernelPolicy()
+    monkeypatch.setenv(kpolicy.ENV_PATH, "baseline")
+    monkeypatch.setenv(kpolicy.ENV_AUTOTUNE, "off")
+    monkeypatch.setenv(kpolicy.ENV_TABLE, "/tmp/t.json")
+    pol = kpolicy.default_policy()
+    assert pol.path == "baseline"
+    assert pol.autotune == "off"
+    assert pol.autotune_table == "/tmp/t.json"
+    # the default IS the active policy when nothing is installed
+    assert kpolicy.get_policy() == pol
+
+
+# ---------------------------------------------------------------------------
+# scoping: context managers nest and restore; set_policy is token-based
+
+
+def test_nested_context_managers_restore_correctly():
+    base = kpolicy.get_policy()
+    with kpolicy.using_policy("fused") as outer:
+        assert outer.path == "fused"
+        assert kpolicy.get_policy().path == "fused"
+        with kpolicy.using_policy(KernelPolicy(path="baseline")) as inner:
+            assert inner.path == "baseline"
+            assert kpolicy.get_policy().path == "baseline"
+        assert kpolicy.get_policy().path == "fused"   # inner popped
+    assert kpolicy.get_policy() == base               # fully restored
+
+
+def test_nested_restore_even_on_exception():
+    base = kpolicy.get_policy()
+    with pytest.raises(RuntimeError):
+        with kpolicy.using_policy("interpret"):
+            raise RuntimeError("boom")
+    assert kpolicy.get_policy() == base
+
+
+def test_set_policy_token_reset():
+    base = kpolicy.get_policy()
+    tok = kpolicy.set_policy("baseline")
+    assert kpolicy.get_policy().path == "baseline"
+    kpolicy.reset_policy(tok)
+    assert kpolicy.get_policy() == base
+
+
+def test_policy_steers_op_execution_scoped():
+    """A scoped policy reroutes an unannotated call end to end, and the
+    numbers agree across policies (the dispatch-agreement contract)."""
+    x = jnp.ones((2, 130))
+    with kpolicy.using_policy("baseline"):
+        got_b = np.asarray(dispatch.reduce(x))
+    with kpolicy.using_policy("fused"):
+        got_f = np.asarray(dispatch.reduce(x))
+    np.testing.assert_allclose(got_b, got_f, rtol=1e-6)
+    np.testing.assert_allclose(got_f, 130.0)
+
+
+# ---------------------------------------------------------------------------
+# hashability / jit-static-arg / repr round-trip
+
+
+def test_policy_hashable_and_jit_static():
+    pol = KernelPolicy(path="fused", op_paths={"attention": "baseline"})
+    assert hash(pol) == hash(
+        KernelPolicy(path="fused", op_paths={"attention": "baseline"}))
+    assert pol in {pol}
+
+    @functools.partial(jax.jit, static_argnums=1)
+    def f(x, policy):
+        return dispatch.reduce(x, policy=policy)
+
+    x = jnp.ones((2, 64))
+    np.testing.assert_allclose(np.asarray(f(x, pol)), 64.0)
+    np.testing.assert_allclose(
+        np.asarray(f(x, KernelPolicy(path="baseline"))), 64.0)
+
+
+def test_policy_repr_roundtrip():
+    pol = KernelPolicy(path="auto", op_paths={"attention": "fused"},
+                       autotune="off", interpret_fallback="silent")
+    assert eval(repr(pol), {"KernelPolicy": KernelPolicy}) == pol
+
+
+def test_policy_validates_fields():
+    with pytest.raises(ValueError, match="unknown path"):
+        KernelPolicy(path="warp")
+    with pytest.raises(ValueError, match="op_paths"):
+        KernelPolicy(op_paths={"reduce": "warp"})
+    with pytest.raises(ValueError, match="autotune mode"):
+        KernelPolicy(autotune="maybe")
+    with pytest.raises(ValueError, match="interpret_fallback"):
+        KernelPolicy(interpret_fallback="explode")
+    with pytest.raises(ValueError, match="backend"):
+        KernelPolicy(backend="warpspeed")
+
+
+# ---------------------------------------------------------------------------
+# per-op overrides and string shorthands
+
+
+def test_per_op_override_beats_global_path():
+    pol = KernelPolicy(path="baseline", op_paths={"reduce": "fused"})
+    assert pol.resolve(op="reduce", n=64, dtype=jnp.float32) == "fused"
+    assert pol.resolve(op="scan", n=64, dtype=jnp.float32) == "baseline"
+    # and end to end: reduce runs the matmul form, scan the native op
+    x = jnp.ones((2, 64))
+    np.testing.assert_allclose(np.asarray(dispatch.reduce(x, policy=pol)),
+                               64.0)
+    np.testing.assert_allclose(
+        np.asarray(dispatch.scan(x, policy=pol))[:, -1], 64.0)
+
+
+def test_explicit_path_kwarg_beats_op_override():
+    pol = KernelPolicy(path="auto", op_paths={"reduce": "baseline"})
+    assert pol.resolve(op="reduce", n=64, explicit="xla_tile") == "xla_tile"
+
+
+def test_string_shorthands_coerce():
+    assert KernelPolicy.from_spec("fused") == KernelPolicy(path="fused")
+    assert KernelPolicy.from_spec("reduce=tile,scan=baseline") == \
+        KernelPolicy(op_paths={"reduce": "tile", "scan": "baseline"})
+    assert KernelPolicy.from_spec("baseline,attention=fused") == \
+        KernelPolicy(path="baseline", op_paths={"attention": "fused"})
+    assert KernelPolicy.from_spec(
+        '{"path": "auto", "autotune": "off"}') == \
+        KernelPolicy(path="auto", autotune="off")
+    with pytest.raises(ValueError):
+        KernelPolicy.from_spec("warp")
+    with pytest.raises(TypeError):
+        KernelPolicy.from_spec(1234)
+
+
+def test_op_paths_mapping_normalises_sorted():
+    a = KernelPolicy(op_paths={"scan": "fused", "reduce": "tile"})
+    b = KernelPolicy(op_paths=(("reduce", "tile"), ("scan", "fused")))
+    assert a == b
+    assert a.op_paths == (("reduce", "tile"), ("scan", "fused"))
+
+
+def test_op_paths_unknown_op_rejected_and_aliases_normalise():
+    """A typo'd op name must raise at construction — a silently
+    never-matching override is the no-op failure mode this subsystem
+    exists to remove. Kernel-registry spellings alias onto the canonical
+    names so one override steers both layers."""
+    with pytest.raises(ValueError, match="unknown op"):
+        KernelPolicy(op_paths={"atention": "fused"})
+    assert KernelPolicy(op_paths={"segmented_reduce": "baseline"}) == \
+        KernelPolicy(op_paths={"reduce": "baseline"})
+    assert KernelPolicy(op_paths={"ssd_scan": "fused"}) == \
+        KernelPolicy(op_paths={"ssd": "fused"})
+    # a canonical-name override steers a kernel-registry-level call
+    pol = KernelPolicy(op_paths={"reduce": "baseline"})
+    assert pol.for_op("segmented_reduce") == "baseline"
+    x = jnp.ones((2, 100))
+    np.testing.assert_allclose(
+        np.asarray(ops.segmented_reduce(x, policy=pol)), 100.0)
+
+
+def test_per_call_string_overlays_active_policy():
+    """A bare label per call means 'exactly this path' — it clears per-op
+    overrides but keeps the rest of the active policy (e.g. the
+    interpret_fallback behaviour)."""
+    with kpolicy.using_policy(KernelPolicy(
+            path="auto", op_paths={"reduce": "baseline"},
+            interpret_fallback="silent")):
+        pol = kpolicy.as_policy("fused")
+        assert pol.path == "fused"
+        assert pol.op_paths == ()
+        assert pol.interpret_fallback == "silent"
+
+
+# ---------------------------------------------------------------------------
+# exactly one resolve implementation; the old entry points delegate
+
+
+def test_old_resolve_path_entry_points_delegate_with_deprecation():
+    kpolicy._WARNED.discard("deprecated:dispatch.resolve_path")
+    kpolicy._WARNED.discard("deprecated:backend.resolve_path")
+    with pytest.warns(DeprecationWarning, match="dispatch.resolve_path"):
+        assert dispatch.resolve_path("xla_tile") == "xla_tile"
+    with pytest.warns(DeprecationWarning, match="backend.resolve_path"):
+        assert backend.resolve_path("fused") == "fused"
+    # warn ONCE: a second call stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert dispatch.resolve_path("baseline") == "baseline"
+        assert backend.resolve_path("interpret") == "interpret"
+    # and they agree with the one true implementation
+    pol = kpolicy.get_policy()
+    assert dispatch.resolve_path("fused") == pol.resolve(explicit="fused")
+    assert backend.resolve_path("fused") == \
+        pol.resolve(level="kernel", explicit="fused")
+
+
+def test_single_resolve_implementation_grep_guard():
+    """Both legacy ``resolve_path`` functions must be thin delegates: no
+    module outside core/policy.py re-implements resolution (= consults
+    native_tile_backend to map the generic 'tile' label)."""
+    pat = re.compile(r"native_tile_backend\(\)")
+    offenders = []
+    for p in sorted(SRC.rglob("*.py")):
+        rel = p.relative_to(SRC)
+        if rel == Path("core/policy.py") or \
+                rel == Path("kernels/backend.py"):  # defines the probe
+            continue
+        if pat.search(p.read_text()):
+            offenders.append(str(rel))
+    # autotune legitimately checks lowering compatibility of table entries
+    assert offenders in ([], ["core/autotune.py"]), (
+        f"possible second resolve implementation in {offenders}")
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: config kwargs warn once and keep working
+
+
+@pytest.mark.parametrize("cls,key", [
+    (ModelConfig, "deprecated:ModelConfig.kernel_path"),
+    (OptConfig, "deprecated:OptConfig.kernel_path"),
+    (ServeConfig, "deprecated:ServeConfig.kernel_path"),
+])
+def test_config_kernel_path_shim_warns_once_and_coerces(cls, key):
+    kwargs = dict(name="t", family="dense", n_layers=1, d_model=8,
+                  vocab=16) if cls is ModelConfig else {}
+    kpolicy._WARNED.discard(key)
+    with pytest.warns(DeprecationWarning, match="kernel_path"):
+        cfg = cls(**kwargs, kernel_path="fused")
+    assert cfg.policy == KernelPolicy(path="fused")
+    # once: the second construction is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg2 = cls(**kwargs, kernel_path="baseline")
+    assert cfg2.policy == KernelPolicy(path="baseline")
+    # strings auto-coerce on the new field too, and explicit policy wins
+    assert cls(**kwargs, policy="interpret").policy == \
+        KernelPolicy(path="interpret")
+    assert cls(**kwargs, policy="fused",
+               kernel_path="baseline").policy == KernelPolicy(path="fused")
+    # replace() keeps the coerced policy without re-warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert dataclasses.replace(cfg).policy == cfg.policy
+
+
+def test_repro_ops_path_kwarg_warns_once_and_works():
+    import repro.ops as rops
+
+    x = jnp.ones((2, 100))
+    kpolicy._WARNED.discard("deprecated:repro.ops.path")
+    with pytest.warns(DeprecationWarning, match="policy="):
+        got = rops.reduce(x, path="fused")
+    np.testing.assert_allclose(np.asarray(got), 100.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        got = rops.reduce(x, path="baseline")
+    np.testing.assert_allclose(np.asarray(got), 100.0)
+
+
+def test_no_kernel_path_str_fields_left_in_src():
+    """Acceptance criterion: ``kernel_path: str`` annotations are gone
+    from src/ — the only surviving kernel_path spellings are the InitVar
+    deprecation shims."""
+    offenders = []
+    for p in sorted(SRC.rglob("*.py")):
+        rel = p.relative_to(SRC)
+        if rel == Path("core/policy.py"):
+            continue  # coerce_config_policy IS the deprecation shim
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if re.search(r"kernel_path\s*:\s*str", line):
+                offenders.append(f"{rel}:{i}")
+    assert not offenders, (
+        f"raw kernel_path string fields remain: {offenders}; use "
+        "policy: KernelPolicy (kernel_path is InitVar-shimmed only)")
+
+
+# ---------------------------------------------------------------------------
+# policy-aware autotune plumbing
+
+
+def test_policy_autotune_fields_gate_resolution(tmp_path):
+    table = {"version": autotune.TABLE_VERSION, "backends": {
+        autotune.current_backend(): {"jax": jax.__version__, "entries": {
+            "reduce/f32/4": {"path": "baseline", "us": {}}}}}}
+    path = tmp_path / "t.json"
+    autotune.save_table(table, path)
+    on = KernelPolicy(path="auto", autotune_table=str(path))
+    assert on.resolve(op="reduce", n=16, dtype=jnp.float32) == "baseline"
+    off = dataclasses.replace(on, autotune="off")
+    if backend.native_tile_backend() is None:
+        assert off.resolve(op="reduce", n=16, dtype=jnp.float32) == "fused"
+    # an explicitly-named unusable table fails loudly through the policy
+    bad = dataclasses.replace(on, autotune_table=str(tmp_path / "no.json"))
+    with pytest.raises(ValueError, match="unusable"):
+        bad.resolve(op="reduce", n=16, dtype=jnp.float32)
+    autotune.invalidate_cache()
+
+
+def test_backend_preference_field():
+    pol = KernelPolicy(path="tile", backend="cpu")
+    assert pol.resolve(op="reduce", n=64) == "interpret"
+    native = backend.native_tile_backend()
+    if native != "tile_gpu":
+        with pytest.raises(RuntimeError, match="tile_gpu"):
+            KernelPolicy(path="tile", backend="gpu").resolve(op="reduce",
+                                                             n=64)
+    if native != "tile_tpu":
+        with pytest.raises(RuntimeError, match="tile_tpu"):
+            KernelPolicy(path="tile", backend="tpu").resolve(op="reduce",
+                                                             n=64)

@@ -1,0 +1,92 @@
+"""Public-API surface check for ``repro.ops`` (the documented entry
+point): the exported names are exactly the documented set, every export
+resolves, the ops run under ``policy=`` in all its spellings, and
+``KernelPolicy`` round-trips via ``repr``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.ops as rops
+from repro.core.policy import KernelPolicy
+
+# THE documented surface (README "Kernel selection"); changing it is an
+# API break and must update both the docs and this list.
+DOCUMENTED = {
+    # the paper's ops
+    "reduce", "scan", "weighted_scan", "ragged_reduce", "ragged_scan",
+    "rmsnorm", "attention", "ssd",
+    # the policy surface
+    "KernelPolicy", "get_policy", "set_policy", "using_policy",
+}
+
+
+def test_all_is_exactly_the_documented_surface():
+    assert set(rops.__all__) == DOCUMENTED
+    assert rops.__all__ == sorted(rops.__all__), \
+        "__all__ must stay sorted (stable diffs)"
+    for name in rops.__all__:
+        assert getattr(rops, name) is not None
+
+
+def test_lazy_package_attr():
+    assert repro.ops is rops
+    assert repro.KernelPolicy is KernelPolicy
+    with pytest.raises(AttributeError):
+        repro.nonexistent_attr
+
+
+def test_kernel_policy_repr_roundtrips_through_public_import():
+    pol = rops.KernelPolicy(path="baseline",
+                            op_paths={"attention": "fused"},
+                            autotune="off")
+    assert eval(repr(pol), {"KernelPolicy": rops.KernelPolicy}) == pol
+
+
+def test_every_op_runs_under_every_policy_spelling():
+    x = jnp.ones((2, 64))
+    for policy in (None, "fused", KernelPolicy(path="baseline"),
+                   {"path": "fused"}):
+        np.testing.assert_allclose(
+            np.asarray(rops.reduce(x, policy=policy)), 64.0, rtol=1e-5)
+
+
+def test_public_ops_smoke_and_agreement():
+    """Every documented op computes the right thing through the façade."""
+    k = jax.random.split(jax.random.PRNGKey(0), 8)
+    x = jax.random.normal(k[0], (2, 64))
+    np.testing.assert_allclose(np.asarray(rops.reduce(x)),
+                               np.asarray(x).sum(-1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rops.scan(x)),
+                               np.cumsum(np.asarray(x), -1),
+                               rtol=1e-4, atol=1e-3)
+    exc = np.asarray(rops.scan(x, exclusive=True))
+    np.testing.assert_allclose(exc[:, 1:],
+                               np.cumsum(np.asarray(x), -1)[:, :-1],
+                               rtol=1e-4, atol=1e-3)
+    la = -jax.random.uniform(k[1], (2, 64))
+    ws = np.asarray(rops.weighted_scan(x, la))
+    assert ws.shape == x.shape and np.isfinite(ws).all()
+    seg = jnp.sort(jax.random.randint(k[2], (64,), 0, 4))
+    rr = np.asarray(rops.ragged_reduce(x, seg, 4))
+    assert rr.shape == (2, 4)
+    np.testing.assert_allclose(rr.sum(-1), np.asarray(x).sum(-1),
+                               rtol=1e-4, atol=1e-4)
+    rs = np.asarray(rops.ragged_scan(x, seg, 4))
+    assert rs.shape == x.shape
+    w = jnp.ones((64,))
+    rn = np.asarray(rops.rmsnorm(x, w))
+    assert rn.shape == x.shape
+    q = jax.random.normal(k[3], (1, 16, 2, 8))
+    kk = jax.random.normal(k[4], (1, 16, 2, 8))
+    v = jax.random.normal(k[5], (1, 16, 2, 8))
+    at = np.asarray(rops.attention(q, kk, v, policy="fused"))
+    assert at.shape == q.shape and np.isfinite(at).all()
+    xs = 0.2 * jax.random.normal(k[6], (1, 32, 2, 8))
+    dt = jax.nn.softplus(jax.random.normal(k[7], (1, 32, 2)))
+    a = -jnp.exp(jnp.zeros((2,)))
+    bb = jax.random.normal(k[0], (1, 32, 1, 4)) / 2.0
+    cc = jax.random.normal(k[1], (1, 32, 1, 4)) / 2.0
+    y, h = rops.ssd(xs, dt, a, bb, cc, policy="fused", return_state=True)
+    assert y.shape == xs.shape and h.shape == (1, 2, 8, 4)

@@ -1,10 +1,13 @@
 """Serving engine tests: wave batching, EOS handling, cache padding."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import configs
+from repro.core.policy import KernelPolicy
 from repro.models import build
 from repro.models.common import init_params
 from repro.serving import Request, ServeConfig, ServingEngine
@@ -73,10 +76,11 @@ def test_engine_matches_manual_decode():
     assert got == want
 
 
-def test_engine_explicit_kernel_path_plumbs_into_model():
-    """ServeConfig.kernel_path rebuilds the bundle with the dispatch path
-    baked into the model config — no env-var reliance — and produces the
-    same greedy tokens as the default path (path agreement end to end)."""
+def test_engine_explicit_policy_plumbs_into_model():
+    """ServeConfig.policy rebuilds the bundle with the KernelPolicy baked
+    into the model config — no env-var reliance — and produces the same
+    greedy tokens as the default policy (path agreement end to end). The
+    deprecated kernel_path= string spelling coerces into the same policy."""
     mod = configs.get("llama3.2-1b")
     bundle = build(mod.SMOKE)
     params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
@@ -85,13 +89,40 @@ def test_engine_explicit_kernel_path_plumbs_into_model():
                                 ServeConfig(slots=1, max_new=4, eos_token=-1))
     eng_fused = ServingEngine(bundle, params,
                               ServeConfig(slots=1, max_new=4, eos_token=-1,
-                                          kernel_path="fused"))
-    assert eng_default.bundle.cfg.kernel_path is None
-    assert eng_fused.bundle.cfg.kernel_path == "fused"
+                                          policy="fused"))
+    assert eng_default.bundle.cfg.policy is None
+    assert eng_fused.bundle.cfg.policy == KernelPolicy(path="fused")
+    # the deprecated string kwarg lands on the same coerced policy
+    legacy = ServeConfig(slots=1, max_new=4, eos_token=-1,
+                         kernel_path="fused")
+    assert legacy.policy == eng_fused.cfg.policy
     prompt = np.arange(5, 13, dtype=np.int32)
     got_d = eng_default.run([Request(uid=0, prompt=prompt)])[0].tokens
     got_f = eng_fused.run([Request(uid=0, prompt=prompt)])[0].tokens
     assert got_d == got_f
+
+
+def test_engine_whole_policy_comparison_invalidates_bundle():
+    """The bundle-rebuild check compares the WHOLE policy: an
+    autotune-mode or per-op-override change must invalidate the cached
+    bundle (its jitted steps baked the old choices in), while an
+    identical policy must reuse it."""
+    mod = configs.get("llama3.2-1b")
+    pol = KernelPolicy(path="fused")
+    bundle = build(dataclasses.replace(mod.SMOKE, policy=pol))
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         mod.SMOKE.dtype)
+    same = ServingEngine(bundle, params,
+                         ServeConfig(slots=1, max_new=2, policy=pol))
+    assert same.bundle is bundle                 # equal policy: no rebuild
+    for changed in (
+            dataclasses.replace(pol, autotune="off"),
+            dataclasses.replace(pol, op_paths={"attention": "baseline"}),
+    ):
+        eng = ServingEngine(bundle, params,
+                            ServeConfig(slots=1, max_new=2, policy=changed))
+        assert eng.bundle is not bundle          # policy diff: rebuilt
+        assert eng.bundle.cfg.policy == changed
 
 
 def test_engine_mamba_family():
