@@ -67,6 +67,38 @@ def select_paths(labels: dict[str, str]) -> dict[str, str]:
     return out
 
 
+def tuning_label(path: str, op: str, n: int | None = None,
+                 dtype=None) -> str:
+    """The TuneSpec the active policy resolves for one contender row.
+
+    Compact ``"knob=value;..."`` form for the benchmark's ``tuning=``
+    column; ``"-"`` for rows whose path runs no Pallas kernel (the XLA
+    forms have no block geometry) or cannot resolve on this host. This is
+    the same resolution pass the kernel call will make — including the
+    bucket-axis clamp — so the segment-axis knobs shown are the geometry
+    that ran (row-axis knobs can still shrink inside the glue when the
+    batch is smaller than the block).
+    """
+    import dataclasses
+
+    from repro.core import policy as kpolicy
+
+    probe = dataclasses.replace(kpolicy.get_policy(),
+                                interpret_fallback="silent")
+    try:
+        # the "auto" rows execute with policy=None (ambient resolution),
+        # so their label must probe the same way — an explicit "auto"
+        # would ignore the active policy's path/op_paths
+        resolved = probe.resolve(op=op, n=n, dtype=dtype,
+                                 explicit=None if path == "auto" else path)
+    except (RuntimeError, ValueError):
+        return "-"
+    if resolved not in ("tile_tpu", "tile_gpu", "interpret"):
+        return "-"
+    spec = resolved.tuning
+    return spec.label() if spec is not None else "-"
+
+
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall seconds per call of an already-jit'd fn."""
     for _ in range(warmup):

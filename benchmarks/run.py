@@ -13,6 +13,9 @@
                                             # --kernel-path <label> is the
                                             # deprecated spelling of
                                             # --policy <label>
+  python -m benchmarks.run --tune ssd.q=64  # override kernel geometry for
+                                            # the tile contender rows (the
+                                            # tuning= column shows what ran)
 """
 from __future__ import annotations
 
@@ -47,6 +50,11 @@ def main(argv: list[str] | None = None) -> None:
                          "label, an op=path,op=path override list (pins "
                          "per-op choices for the auto rows), or a JSON "
                          "object of policy fields")
+    ap.add_argument("--tune", default=None,
+                    help="per-op kernel tuning overrides layered on the "
+                         "policy: op.knob=value pairs, e.g. "
+                         "'ssd.q=64,reduce.block_n=256' (shown in each "
+                         "benchmark's tuning= column)")
     ap.add_argument("--kernel-path", default=None,
                     help="deprecated alias for --policy <path-label>")
     args = ap.parse_args(argv)
@@ -55,7 +63,8 @@ def main(argv: list[str] | None = None) -> None:
     from repro.core import policy as kpolicy
 
     pol = kpolicy.policy_from_cli(args.policy, args.kernel_path,
-                                  "deprecated:benchmarks.run.kernel_path")
+                                  "deprecated:benchmarks.run.kernel_path",
+                                  tune_arg=args.tune)
     if pol is not None:
         kpolicy.set_policy(pol)
 

@@ -20,7 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import elems_per_sec, print_csv, select_paths, time_fn
+from benchmarks.common import (elems_per_sec, print_csv, select_paths,
+                               time_fn, tuning_label)
 
 TOTAL = 1 << 22
 
@@ -50,7 +51,8 @@ def run(total: int = TOTAL) -> list:
         for name, fn in fns.items():
             t = time_fn(fn, xs)
             rows.append([name, seg, segs, f"{t * 1e6:.1f}",
-                         f"{elems_per_sec(total, t) / 1e9:.3f}"])
+                         f"{elems_per_sec(total, t) / 1e9:.3f}",
+                         tuning_label(paths[name], "reduce", seg, xs.dtype)])
     return rows
 
 
@@ -58,7 +60,7 @@ def main() -> None:
     rows = run()
     print_csv("fig10_segmented_reduce",
               ["algo", "segment_size", "n_segments", "us_per_call",
-               "belems_s"], rows)
+               "belems_s", "tuning"], rows)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import elems_per_sec, print_csv, select_paths, time_fn
+from benchmarks.common import (elems_per_sec, print_csv, select_paths,
+                               time_fn, tuning_label)
 
 TOTAL = 1 << 22
 
@@ -38,14 +39,15 @@ def run(total: int = TOTAL) -> list:
         for name, fn in fns.items():
             t = time_fn(fn, xs)
             rows.append([name, seg, segs, f"{t * 1e6:.1f}",
-                         f"{elems_per_sec(total, t) / 1e9:.3f}"])
+                         f"{elems_per_sec(total, t) / 1e9:.3f}",
+                         tuning_label(paths[name], "scan", seg, xs.dtype)])
     return rows
 
 
 def main() -> None:
     print_csv("fig12_segmented_scan",
               ["algo", "segment_size", "n_segments", "us_per_call",
-               "belems_s"], run())
+               "belems_s", "tuning"], run())
 
 
 if __name__ == "__main__":

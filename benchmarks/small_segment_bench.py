@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import (elems_per_sec, hlo_op_mix, print_csv,
-                               select_paths, time_fn)
+                               select_paths, time_fn, tuning_label)
 
 N_SEGMENTS = 4096
 
@@ -48,8 +48,10 @@ def run() -> tuple[list, list]:
         }
         for name, fn in cases.items():
             t = time_fn(jax.jit(fn), x)
+            op, path = CONTENDERS[name]
             rows.append([name, seg, f"{t * 1e6:.1f}",
-                         f"{elems_per_sec(x.size, t) / 1e9:.3f}"])
+                         f"{elems_per_sec(x.size, t) / 1e9:.3f}",
+                         tuning_label(path, op, seg, x.dtype)])
         for name in ("tcu_reduce", "base_reduce"):
             mix = hlo_op_mix(cases[name], x)
             mix_rows.append([name, seg, f"{mix['dot_flops']:.3g}",
@@ -60,7 +62,8 @@ def run() -> tuple[list, list]:
 def main() -> None:
     rows, mix_rows = run()
     print_csv("fig11_small_segments",
-              ["algo", "segment_size", "us_per_call", "belems_s"], rows)
+              ["algo", "segment_size", "us_per_call", "belems_s",
+               "tuning"], rows)
     print_csv("fig11_alu_mix", ["algo", "segment_size", "dot_flops",
                                 "vpu_flops"], mix_rows)
 

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import elems_per_sec, print_csv, select_paths, time_fn
+from benchmarks.common import (elems_per_sec, print_csv, select_paths,
+                               time_fn, tuning_label)
 
 CONTENDERS = {
     "ssd_chunked_matmul": "fused",
@@ -39,13 +40,14 @@ def run() -> list:
             fn = jax.jit(lambda *t, p=path: dispatch.ssd(*t, policy=p))
             t1 = time_fn(fn, x, dt, a, bb, cc, iters=3)
             rows.append([name, L, f"{t1 * 1e3:.2f}",
-                         f"{elems_per_sec(toks, t1) / 1e3:.1f}"])
+                         f"{elems_per_sec(toks, t1) / 1e3:.1f}",
+                         tuning_label(path, "ssd", L, x.dtype)])
     return rows
 
 
 def main() -> None:
     print_csv("ssd_weighted_scan", ["algo", "seq_len", "ms_per_call",
-                                    "ktok_s"], run())
+                                    "ktok_s", "tuning"], run())
 
 
 if __name__ == "__main__":

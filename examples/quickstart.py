@@ -1,4 +1,6 @@
-"""Quickstart: the paper's primitives and where they live in the framework.
+"""Quickstart: the paper's primitives through the stable ``repro.ops``
+facade — every op takes ``policy=`` (which formulation runs) and the
+policy can carry ``op_tuning`` (how the kernel runs).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,8 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.core as core
-from repro.kernels import ops
+import repro.ops as ops
+from repro.ops import KernelPolicy, using_policy
 
 
 def main() -> None:
@@ -15,30 +17,31 @@ def main() -> None:
 
     # ---- 1. the paper's reduction: P @ A tile algebra --------------------
     x = jax.random.normal(rng, (1 << 20,))
-    total_tile = core.tcu_reduce(x, formulation="tile")    # paper-faithful
-    total_fused = core.tcu_reduce(x)                       # beyond-paper
+    total_tile = ops.reduce(x, policy="xla_tile")          # paper-faithful
+    total_fused = ops.reduce(x, policy="fused")            # beyond-paper
     print(f"reduce: tile={float(total_tile):.3f} "
           f"fused={float(total_fused):.3f} "
           f"numpy={float(np.sum(np.asarray(x))):.3f}")
 
     # ---- 2. the paper's scan: A U + (L A) 1 ------------------------------
     v = jax.random.normal(jax.random.fold_in(rng, 1), (100_000,))
-    s = core.tcu_scan(v)
+    s = ops.scan(v, policy="fused")
     print(f"scan: max|err| vs cumsum = "
           f"{float(jnp.max(jnp.abs(s - jnp.cumsum(v)))):.2e}")
 
     # ---- 3. segmented forms (the 100x regime: many small segments) -------
     segs = jax.random.normal(jax.random.fold_in(rng, 2), (4096, 16))
-    print(f"segmented reduce of 4096 x 16: {core.tcu_segmented_reduce(segs).shape}")
+    print(f"segmented reduce of 4096 x 16: {ops.reduce(segs).shape} "
+          "(policy=None -> the active policy's auto choice)")
 
     # ---- 4. the weighted generalisation = Mamba-2's SSD ------------------
     la = -jax.random.uniform(jax.random.fold_in(rng, 3), (1000,))
-    w = core.tcu_weighted_scan(v[:1000], la)
+    w = ops.weighted_scan(v[:1000], la)
     print(f"weighted scan (y_i = a_i y_(i-1) + x_i): {w.shape}")
 
-    # ---- 5. Pallas TPU kernels, validated on CPU via interpret mode ------
+    # ---- 5. Pallas kernels, validated on CPU via interpret mode ----------
     xt = jax.random.normal(rng, (8, 1000), jnp.bfloat16)
-    k_out = ops.segmented_reduce(xt, use_pallas=True)   # interpret on CPU
+    k_out = ops.reduce(xt, policy="interpret")      # kernel body on CPU
     print(f"pallas kernel vs oracle: "
           f"{np.allclose(k_out, np.asarray(xt, np.float32).sum(-1), atol=1)}")
 
@@ -47,6 +50,15 @@ def main() -> None:
     h = jax.random.normal(rng, (4, 512))
     print(f"fused rmsnorm (paper's batch-norm-variance future work): "
           f"{ops.rmsnorm(h, w_norm).shape}")
+
+    # ---- 7. tuning is policy too: override the kernel geometry -----------
+    tuned = KernelPolicy(path="interpret",
+                         op_tuning={"scan": {"block_n": 256}})
+    with using_policy(tuned):
+        spec = ops.get_policy().resolve(op="scan", n=1000).tuning
+        s2 = ops.scan(jnp.ones((8, 1000)))
+    print(f"tuned scan ran with {spec.label()}: "
+          f"last prefix = {float(s2[0, -1]):.0f} (want 1000)")
 
 
 if __name__ == "__main__":

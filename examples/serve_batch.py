@@ -24,11 +24,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--policy", default=None,
+                    help="KernelPolicy for every core op in the served "
+                         "model: a path label, an op=path override list "
+                         "(dotted keys tune kernel geometry), or JSON")
     args = ap.parse_args()
 
     mod = configs.get(args.arch)
     bundle = build(mod.SMOKE)
-    engine = demo_engine(bundle, slots=args.slots, max_new=args.max_new)
+    engine = demo_engine(bundle, slots=args.slots, max_new=args.max_new,
+                         policy=args.policy)
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(

@@ -5,7 +5,7 @@ Run:  PYTHONPATH=src python examples/ssd_long_context.py
 Demonstrates the long_500k story at example scale: a Mamba-2 SSD layer's
 sequence dimension is sharded over a device mesh; each device computes its
 chunk with the matmul-form weighted scan, and the cross-device carry is the
-paper's scan-then-propagate (repro.core.dist_weighted_scan) — three
+paper's scan-then-propagate (repro.ops.dist_weighted_scan) — three
 triangular-matmul 'kernels' at tile, core, and mesh level.
 
 Uses 4 fake host devices (set before jax import) — the same code shards
@@ -20,7 +20,7 @@ import jax.numpy as jnp                                         # noqa: E402
 import numpy as np                                              # noqa: E402
 from jax.sharding import PartitionSpec as P                     # noqa: E402
 
-from repro.core import dist_weighted_scan, tcu_weighted_scan    # noqa: E402
+from repro.ops import dist_weighted_scan, weighted_scan         # noqa: E402
 from repro.parallel.compat import make_mesh, shard_map          # noqa: E402
 
 
@@ -39,7 +39,8 @@ def main() -> None:
         out_specs=P(None, "data")))
 
     got = sp(x, log_a)
-    want = tcu_weighted_scan(x, log_a)          # single-device reference
+    # single-device reference through the public facade (fused matmul form)
+    want = weighted_scan(x, log_a, policy="fused")
     err = float(jnp.max(jnp.abs(got - want)))
     print(f"sequence-parallel SSD scan over 4 devices, seq={seq}")
     print(f"max |seq-parallel - single-device| = {err:.2e}")

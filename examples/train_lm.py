@@ -9,6 +9,7 @@ pipeline -> jit'd train step (all reductions in matmul form) -> optimizer
 via launch/train.py.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -18,6 +19,7 @@ from repro.checkpoint import ckpt
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
 from repro.models import build
 from repro.models.layers import ModelConfig
+from repro.ops import KernelPolicy
 from repro.optim import OptConfig
 from repro.training import TrainConfig, init_train_state, make_train_step
 
@@ -36,12 +38,21 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--policy", default=None,
+                    help="KernelPolicy for the model's core ops: a path "
+                         "label, an op=path,op=path override list (dotted "
+                         "keys tune kernel geometry, e.g. 'ssd.q=64'), or "
+                         "a JSON object of policy fields")
     args = ap.parse_args()
 
-    bundle = build(CFG_100M)
+    cfg = CFG_100M
+    if args.policy is not None:
+        cfg = dataclasses.replace(cfg,
+                                  policy=KernelPolicy.from_spec(args.policy))
+    bundle = build(cfg)
     print(f"model: {bundle.n_params / 1e6:.1f}M params")
     opt_cfg = OptConfig(peak_lr=6e-4, warmup_steps=30,
-                        decay_steps=args.steps)
+                        decay_steps=args.steps, policy=cfg.policy)
     state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg)
     step_fn = jax.jit(make_train_step(bundle, opt_cfg),
                       donate_argnums=(0,))

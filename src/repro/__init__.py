@@ -19,4 +19,8 @@ def __getattr__(name):
         from repro.core.policy import KernelPolicy
 
         return KernelPolicy
+    if name == "TuneSpec":
+        from repro.core.policy import TuneSpec
+
+        return TuneSpec
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -10,21 +10,30 @@ ignores. This module makes ``auto`` consult a *measured* table instead:
 * **Buckets** — a call shape maps to ``{op}/{dtype-tag}/{log2-band}``
   (e.g. ``reduce/f32/9`` for a 512-element f32 segmented reduce). Bands
   are powers of two, matching the paper's sweep axes.
-* **Table** — a JSON file keyed *by backend*: ``{"version": 2,
+* **Table** — a JSON file keyed *by backend*: ``{"version": 3,
   "backends": {"cpu": {"jax": ..., "entries": {bucket: {...}}}}}``. Each
   backend section maps bucket -> winning dispatch path, with the raw
   per-contender timings kept alongside for auditability; a table measured
   on a GPU host merges in as a ``"gpu"`` section and steers *only* GPU
-  hosts — CPU/TPU resolution never reads it. Resolution order:
-  ``$REPRO_AUTOTUNE_TABLE`` (explicit file) > the checked-in default
-  (``autotune_default.json``, measured on CPU with kernels in interpret
-  mode) > the built-in heuristic. Legacy v1 files (one flat ``backend`` +
-  ``entries``) load as a single-section v2 table.
+  hosts — CPU/TPU resolution never reads it. v3 entries may additionally
+  record the winning :class:`~repro.core.policy.TuneSpec` of the kernel
+  geometry sweep as ``"tuning": {knob: value}`` (validated against
+  ``policy.KNOB_SCHEMA`` — unknown knob keys in an explicit
+  ``$REPRO_AUTOTUNE_TABLE`` fail loudly) plus the per-spec sweep timings
+  as ``"sweep"``. Resolution order: ``$REPRO_AUTOTUNE_TABLE`` (explicit
+  file) > the checked-in default (``autotune_default.json``, measured on
+  CPU with kernels in interpret mode) > the built-in heuristic. Legacy v1
+  files (one flat ``backend`` + ``entries``) and v2 files (backend
+  sections, no tuning) up-convert on load.
 * **Harness** — :func:`measure_table` times every registered contender of
   ``repro.core.dispatch`` per bucket and records the argmin for the host's
-  backend. Regenerate with ``python -m repro.core.autotune --write``
-  (merges into an existing multi-backend file — run it on a GPU host to
-  add the ``gpu`` section without touching the CPU one); CI checks the
+  backend; on hosts with a native tile lowering (or under
+  ``sweep_interpret=True``, the CI smoke mode) it also sweeps each op's
+  candidate TuneSpecs from ``repro.kernels.layout`` and persists the
+  winning geometry. Regenerate with ``python -m repro.core.autotune
+  --write`` (merges into an existing multi-backend file — run it on a GPU
+  host to add the ``gpu`` section without touching the CPU one;
+  ``--sweep-budget tiny`` is the fast smoke variant); CI checks the
   checked-in default for staleness with ``--check``.
 * **Fallbacks** — a missing bucket (or a section for a different backend
   only) falls back to :func:`heuristic` (deterministic: the paper's
@@ -58,7 +67,8 @@ from repro.kernels import backend
 ENV_AUTOTUNE = kpolicy.ENV_AUTOTUNE      # "off"/"0"/"static" -> static auto
 ENV_TABLE = kpolicy.ENV_TABLE            # path to a JSON table
 DEFAULT_TABLE_PATH = Path(__file__).with_name("autotune_default.json")
-TABLE_VERSION = 2
+TABLE_VERSION = 3
+_UPCONVERTIBLE_VERSIONS = (2,)   # v2 = backend sections, no tuning
 MAX_BAND = 20
 
 # the backend axis of the table; jax.default_backend() spellings normalise
@@ -81,8 +91,9 @@ HEURISTIC_CROSSOVER = 512
 # opted in explicitly (path="tile") or via a measured table entry.
 FUSED_DEFAULT_OPS = ("attention", "ssd")
 
-# Kernel-registry op names -> the dispatch-level op the table is keyed by.
-_OP_ALIAS = {"segmented_reduce": "reduce", "segmented_scan": "scan"}
+# Kernel-registry op names -> the dispatch-level op the table is keyed by
+# (the policy layer's alias map — one spelling contract for both layers).
+_OP_ALIAS = dict(kpolicy.OP_ALIASES)
 
 # The harness's default measurement grid — shared with check_default so the
 # CI staleness check always validates exactly the bucket set --write emits.
@@ -157,14 +168,36 @@ def _check_entries(entries: Any, where: str) -> None:
             raise ValueError(
                 f"autotune table {where}: entry {key!r} has invalid path "
                 f"{ent.get('path') if isinstance(ent, dict) else ent!r}")
+        tuning = ent.get("tuning")
+        if tuning is None:
+            continue
+        op = key.split("/", 1)[0]
+        allowed = kpolicy.KNOB_SCHEMA.get(op, ())
+        if not isinstance(tuning, dict):
+            raise ValueError(
+                f"autotune table {where}: entry {key!r} tuning must be an "
+                f"object, got {tuning!r}")
+        for k, v in tuning.items():
+            if k not in allowed:
+                raise ValueError(
+                    f"autotune table {where}: entry {key!r} has unknown "
+                    f"tuning knob {k!r}; expected one of {allowed} — a "
+                    "typo'd knob would silently no-op")
+            if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+                raise ValueError(
+                    f"autotune table {where}: entry {key!r} tuning knob "
+                    f"{k!r} must be a positive int, got {v!r}")
 
 
 def load_table(path: str | Path) -> dict:
     """Load and validate a table; raises ValueError on a malformed file.
 
-    Returns the v2 shape ``{"version": 2, "backends": {key: {"jax": ...,
+    Returns the v3 shape ``{"version": 3, "backends": {key: {"jax": ...,
     "entries": {...}}}}``; legacy v1 files (flat ``backend``/``entries``)
-    are up-converted. Unknown backend keys are an error — a typo'd or
+    and v2 files (backend sections without per-entry ``tuning``) are
+    up-converted — a v2 entry simply has no swept geometry, so resolution
+    keeps the layout defaults for its bucket. Unknown backend keys, and
+    unknown tuning-knob keys in any entry, are an error — a typo'd or
     future-format table must fail loudly, never silently steer nothing.
     """
     with open(path) as f:
@@ -183,6 +216,9 @@ def load_table(path: str | Path) -> dict:
         return {"version": TABLE_VERSION,
                 "backends": {bk: {"jax": table.get("jax"),
                                   "entries": table["entries"]}}}
+    if version in _UPCONVERTIBLE_VERSIONS:
+        table = dict(table, version=TABLE_VERSION)
+        version = TABLE_VERSION
     if version != TABLE_VERSION:
         raise ValueError(
             f"autotune table {path}: version {version!r} != {TABLE_VERSION}")
@@ -337,7 +373,8 @@ def _backend_compatible(path: str) -> bool:
 def choose(op: str, n: int, dtype: Any = None,
            candidates: Iterable[str] | None = None, *,
            level: str = "dispatch",
-           policy: kpolicy.KernelPolicy | None = None) -> str | None:
+           policy: kpolicy.KernelPolicy | None = None,
+           use_heuristic: bool = True) -> str | None:
     """Resolve ``auto`` for one call shape.
 
     ``policy`` carries the autotune mode and table source (None = the
@@ -346,7 +383,11 @@ def choose(op: str, n: int, dtype: Any = None,
     (``autotune="off"``) — the caller then applies the static choice.
     Only the table section for this host's backend is consulted (a
     GPU-measured section never steers CPU/TPU); a missing bucket falls
-    back to :func:`heuristic`.
+    back to :func:`heuristic` (unless ``use_heuristic=False`` — the
+    kernel level passes that for ``FUSED_DEFAULT_OPS``, whose heuristic
+    rationale is dispatch-level: at the kernel level their "fused" twin
+    is the *materialised* reference, so without a table entry the static
+    choice — tile on a native host — must stand).
 
     ``level="kernel"`` translates the table's dispatch-level labels onto
     the kernel registry's implementations via ``_KERNEL_EQUIV`` (a naive
@@ -371,7 +412,30 @@ def choose(op: str, n: int, dtype: Any = None,
                 path = ent["path"]
                 if candidates is None or path in tuple(candidates):
                     return path
+    if not use_heuristic:
+        return None
     return heuristic(op, n, dtype, candidates)
+
+
+def tuning_entry(op: str, n: int, dtype: Any = None, *,
+                 policy: kpolicy.KernelPolicy | None = None) -> dict | None:
+    """The swept winning tuning knobs for one call shape, or None.
+
+    Consulted by :meth:`KernelPolicy.tuning_for` the same way
+    :func:`choose` serves path resolution: only this host's backend
+    section, gated by the policy's autotune mode; a v2-era entry (no
+    ``tuning``) or a missing bucket returns None so the layout defaults
+    apply. Knob keys were validated at load time, so the dict can be
+    merged into a TuneSpec as-is.
+    """
+    if not enabled(policy):
+        return None
+    entries = current_entries(policy)
+    if entries is None:
+        return None
+    ent = entries.get(bucket_key(op, n, dtype))
+    tuning = ent.get("tuning") if ent else None
+    return dict(tuning) if tuning else None
 
 
 # ---------------------------------------------------------------------------
@@ -415,17 +479,32 @@ def measure_table(
     bands: Iterable[int] = DEFAULT_BANDS,
     dtypes: Iterable[Any] = DEFAULT_DTYPES,
     iters: int = 3,
+    sweep: bool = True,
+    sweep_interpret: bool = False,
+    max_candidates: int | None = None,
 ) -> dict:
-    """Time every contender per (op, dtype, band) bucket -> a v2 table
+    """Time every contender per (op, dtype, band) bucket -> a v3 table
     holding one section for this host's backend.
 
     Runs through ``repro.core.dispatch`` (the same entry every consumer
-    uses), so the table steers exactly what it measured. Merge the result
-    into a multi-backend file with :func:`merge_tables` (what ``--write``
-    does) — measuring on a GPU host adds/refreshes the ``gpu`` section
-    without touching the others.
+    uses), so the table steers exactly what it measured. On hosts with a
+    native tile lowering the tile contender is a *geometry sweep*: every
+    candidate TuneSpec from ``repro.kernels.layout`` is clamped against
+    the bucket's shape and deduplicated (small buckets can collapse
+    several candidates onto one executed geometry — timing them all would
+    crown a noise winner that never ran), then timed under a pinned
+    policy (``op_tuning={op: spec}``, autotune off); the best one becomes
+    the recorded ``tile`` timing and the entry persists it as
+    ``"tuning"`` (plus the full per-spec timings as ``"sweep"``).
+    ``sweep_interpret=True`` runs the same sweep through the Pallas
+    interpreter on hosts with no native lowering — validation-speed, for
+    the CI tiny-sweep smoke leg only. Merge the result into a
+    multi-backend file with :func:`merge_tables` (what ``--write`` does) —
+    measuring on a GPU host adds/refreshes the ``gpu`` section without
+    touching the others.
     """
     from repro.core import dispatch  # deferred: dispatch imports us
+    from repro.kernels import layout
 
     fns = {
         "reduce": dispatch.reduce,
@@ -435,34 +514,83 @@ def measure_table(
         "ragged_scan": dispatch.ragged_scan,
     }
     native = backend.native_tile_backend()
+    tile_path = "tile" if native else \
+        ("interpret" if sweep_interpret else None)
+    axis = "gpu" if native == "tile_gpu" else "tpu"
     entries: dict[str, dict] = {}
     rng = jax.random.PRNGKey(0)
     for op in ops:
         contenders = OP_CONTENDERS[op]
-        if native and op in ("reduce", "scan", "weighted_scan"):
-            contenders = contenders + ("tile",)
+        specs = layout.candidate_tuning(axis, op) if sweep else []
+        if max_candidates is not None:
+            specs = specs[:max_candidates]
+        sweep_op = bool(specs) and tile_path is not None
         for dtype in dtypes:
             for b in bands:
                 n = 1 << b
                 rng, sub = jax.random.split(rng)
                 args = _bench_inputs(op, n, dtype, sub)
-                timings = {}
-                for path in contenders:
+
+                def timed(policy):
                     if op in ("ragged_reduce", "ragged_scan"):
                         x, seg, s = args
                         fn = jax.jit(
-                            lambda a, i, p=path, o=op: fns[o](
+                            lambda a, i, p=policy, o=op: fns[o](
                                 a, i, s, policy=p))
-                        timings[path] = _time_fn(fn, x, seg, iters=iters)
-                    else:
-                        fn = jax.jit(
-                            lambda *a, p=path, o=op: fns[o](*a, policy=p))
-                        timings[path] = _time_fn(fn, *args, iters=iters)
+                        return _time_fn(fn, x, seg, iters=iters)
+                    fn = jax.jit(
+                        lambda *a, p=policy, o=op: fns[o](*a, policy=p))
+                    return _time_fn(fn, *args, iters=iters)
+
+                timings = {path: timed(path) for path in contenders}
+                best_spec = sweep_us = None
+                if native and tile_path and not sweep_op and \
+                        op in ("reduce", "scan", "weighted_scan"):
+                    # sweep disabled: still time the tile contender at its
+                    # default geometry (a native host's table must be able
+                    # to record 'tile' as a bucket winner)
+                    timings[tile_path] = timed(tile_path)
+                if sweep_op:
+                    # clamp each candidate against this bucket's shape and
+                    # dedupe: two specs that collapse onto the same
+                    # executed geometry must not be timed twice (the
+                    # "winner" between them would be noise that never
+                    # ran). The spec PERSISTED is clamped on the bucket
+                    # axis only — row-axis knobs reflect the probe input's
+                    # row count, which real calls in this bucket won't
+                    # share (their glue re-clamps per call).
+                    rows = args[0].shape[0] if args[0].ndim > 1 else None
+                    fitted: list[tuple[dict, dict]] = []
+                    for spec in specs:
+                        ex = layout.clamp_spec(axis, op, spec, n=n,
+                                               rows=rows)
+                        if all(ex != e for e, _ in fitted):
+                            fitted.append(
+                                (ex, layout.clamp_spec(axis, op, spec,
+                                                       n=n)))
+                    sweep_us = {}
+                    persist = {}
+                    for ex, keep in fitted:
+                        pol = kpolicy.KernelPolicy(
+                            path=tile_path, autotune="off",
+                            op_tuning={op: ex},
+                            interpret_fallback="silent")
+                        label = kpolicy.TuneSpec(op, ex).label()
+                        sweep_us[label] = timed(pol)
+                        persist[label] = keep
+                    best = min(sweep_us, key=sweep_us.get)
+                    best_spec = persist[best]
+                    timings[tile_path] = sweep_us[best]
                 winner = min(timings, key=timings.get)
-                entries[bucket_key(op, n, dtype)] = {
+                ent = {
                     "path": winner,
                     "us": {k: round(v * 1e6, 2) for k, v in timings.items()},
                 }
+                if best_spec is not None:
+                    ent["tuning"] = dict(sorted(best_spec.items()))
+                    ent["sweep"] = {k: round(v * 1e6, 2)
+                                    for k, v in sweep_us.items()}
+                entries[bucket_key(op, n, dtype)] = ent
     return {
         "version": TABLE_VERSION,
         "backends": {current_backend(): {"jax": jax.__version__,
@@ -517,6 +645,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="verify the checked-in default parses and matches "
                          "the harness's bucket set (exit 1 if stale)")
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--sweep-budget", choices=("full", "tiny"),
+                    default="full",
+                    help="'full' measures the whole default grid (geometry "
+                         "sweeps run only on hosts with a native tile "
+                         "lowering); 'tiny' is the CI smoke mode: a few "
+                         "buckets, one dtype, and the candidate-spec sweep "
+                         "forced through the Pallas interpreter so v3 "
+                         "tuning entries are exercised on any host")
     args = ap.parse_args(argv)
 
     if args.check:
@@ -527,7 +663,15 @@ def main(argv: list[str] | None = None) -> int:
             print(f"autotune default table OK ({DEFAULT_TABLE_PATH})")
         return 1 if problems else 0
     if args.write:
-        measured = measure_table(iters=args.iters)
+        if args.sweep_budget == "tiny":
+            # bands big enough that >= 2 candidate geometries stay
+            # distinct after the per-bucket clamp
+            measured = measure_table(
+                ops=("reduce", "scan", "weighted_scan"), bands=(8, 10),
+                dtypes=(jnp.float32,), iters=1, sweep_interpret=True,
+                max_candidates=2)
+        else:
+            measured = measure_table(iters=args.iters)
         base = None
         if Path(args.out).exists():
             try:

@@ -82,7 +82,7 @@ def reduce(x: jax.Array, *, policy=None, path: str | None = None
         return tcu_segmented_reduce(x, formulation="tile")
     if p == "baseline":
         return jnp.sum(x.astype(jnp.float32), axis=-1)
-    return ops.segmented_reduce(x, path=p)
+    return ops.segmented_reduce(x, policy=policy, path=p)
 
 
 def scan(x: jax.Array, *, policy=None, path: str | None = None,
@@ -94,7 +94,7 @@ def scan(x: jax.Array, *, policy=None, path: str | None = None,
     if p == "baseline":
         out = jnp.cumsum(x.astype(jnp.float32), axis=-1)
     else:
-        out = ops.segmented_scan(x, path=p)
+        out = ops.segmented_scan(x, policy=policy, path=p)
     if exclusive:
         # shift, never subtract: reconstructing the exclusive scan as
         # ``inclusive - x`` cancels catastrophically when |x_i| dwarfs the
@@ -112,7 +112,7 @@ def weighted_scan(x: jax.Array, log_a: jax.Array, *, policy=None,
         return tcu_weighted_scan(x, log_a)
     if p == "baseline":
         return ref.weighted_scan_ref(x, log_a)
-    return ops.weighted_scan(x, log_a, path=p)
+    return ops.weighted_scan(x, log_a, policy=policy, path=p)
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +210,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         return t(ref.flash_attention_ref(t(q), t(k), t(v), causal=causal,
                                          window=window, scale=scale))
     return t(ops.attention(t(q), t(k), t(v), causal=causal, window=window,
-                           scale=scale, path=p))
+                           scale=scale, policy=policy, path=p))
 
 
 def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
@@ -222,8 +222,9 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 
     ``baseline`` is the sequential recurrence, ``fused``/``xla_tile`` the
     pure-XLA chunked form, ``tile``/``interpret`` the Pallas kernel.
-    ``chunk``/``matmul_dtype`` tune the chunked XLA form only (the Pallas
-    kernel's chunk is fixed at the MXU edge).
+    ``chunk``/``matmul_dtype`` tune the chunked XLA form only; the Pallas
+    kernel's chunk is the ``ssd.q`` tuning knob (policy ``op_tuning`` /
+    ``--tune "ssd.q=..."``, swept into v3 autotune tables).
     """
     p = _resolve("ssd", x.shape[1], x.dtype, policy, path)
     if p in ("fused", "xla_tile"):
@@ -236,4 +237,5 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
         return (y, h_last) if return_state else y
     if p == "baseline":
         return ref.ssd_scan_ref(x, dt, a, b, c, return_state=return_state)
-    return ops.ssd_scan(x, dt, a, b, c, path=p, return_state=return_state)
+    return ops.ssd_scan(x, dt, a, b, c, policy=policy, path=p,
+                        return_state=return_state)

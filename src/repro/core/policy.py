@@ -11,13 +11,22 @@ re-read at call sites. This module replaces all of that with one object:
 
 * :class:`KernelPolicy` — a frozen, hashable dataclass capturing the full
   selection state: global ``path``, per-op overrides (``op_paths``), a
-  ``backend`` preference, the ``autotune`` mode and table source, and the
-  off-accelerator ``interpret_fallback`` behaviour. Hashable means it can
-  ride through ``jit`` static args and config dataclasses unchanged.
+  ``backend`` preference, the ``autotune`` mode and table source, per-op
+  tuning-knob overrides (``op_tuning``), and the off-accelerator
+  ``interpret_fallback`` behaviour. Hashable means it can ride through
+  ``jit`` static args and config dataclasses unchanged.
+* :class:`TuneSpec` — the per-op kernel *geometry* (block/chunk shapes,
+  GPU ``num_warps``/``num_stages``) as data instead of constants, each
+  knob validated against :data:`KNOB_SCHEMA` the way ``op_paths``
+  validates against :data:`KNOWN_OPS`.
 * :meth:`KernelPolicy.resolve` — THE resolution algorithm. Both legacy
   entry points (``dispatch.resolve_path``, ``backend.resolve_path``)
   delegate here with a one-time deprecation warning; nothing else in the
-  repo decides which formulation runs.
+  repo decides which formulation runs. It returns a :class:`ResolvedPath`
+  — a plain ``str`` path label that also carries the resolved
+  :class:`TuneSpec` (defaults from ``repro.kernels.layout``, overlaid by
+  the autotune table's swept winner, overlaid by ``op_tuning``), so every
+  kernel takes its geometry from the same resolution pass that picked it.
 * A process-default policy built from the env vars — **this module is the
   only place that reads** ``REPRO_KERNEL_PATH`` / ``REPRO_AUTOTUNE`` /
   ``REPRO_AUTOTUNE_TABLE`` (a grep-guard test enforces it).
@@ -76,6 +85,25 @@ KNOWN_OPS = ("reduce", "scan", "weighted_scan", "ragged_reduce",
 OP_ALIASES = {"segmented_reduce": "reduce", "segmented_scan": "scan",
               "ssd_scan": "ssd"}
 
+# Per-op tuning-knob schema: the only knob names a TuneSpec (and the
+# ``tuning`` field of an autotune-table entry) may carry for each op.
+# The knob *values* — per-backend defaults and sweep candidates — live in
+# ``repro.kernels.layout`` (the one module allowed to spell out geometry
+# numbers); this schema is the validation contract, owned by the policy
+# layer the way KNOWN_OPS is. ``num_warps``/``num_stages`` are GPU-only
+# at runtime (the TPU glue ignores them) but legal in any spec so one
+# override string can serve both backends.
+KNOB_SCHEMA = {
+    "reduce": ("block_s", "block_n", "num_warps", "num_stages"),
+    "scan": ("block_s", "block_n", "num_warps", "num_stages"),
+    "weighted_scan": ("q", "num_warps", "num_stages"),
+    "ragged_reduce": (),     # no Pallas kernel yet (XLA matmul form)
+    "ragged_scan": (),
+    "rmsnorm": ("row_block", "block_d", "num_warps", "num_stages"),
+    "attention": ("block_q", "block_k", "num_warps", "num_stages"),
+    "ssd": ("q", "num_warps", "num_stages"),
+}
+
 
 # ---------------------------------------------------------------------------
 # one-time warnings (deprecation shims warn once per process, not per call)
@@ -116,6 +144,126 @@ def _warn_tile_downgrade() -> None:
 
 
 # ---------------------------------------------------------------------------
+# tuning specs
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpec:
+    """Per-op kernel tuning geometry, frozen and hashable.
+
+    Mirrors :class:`KernelPolicy`'s contract one level down: where the
+    policy decides *which* formulation runs, a ``TuneSpec`` decides *how*
+    it runs — block/chunk shapes and (on GPU) ``num_warps``/``num_stages``
+    as data instead of constants baked into the kernel files.
+
+    ``op``
+        Canonical op name (any of :data:`KNOWN_OPS`; kernel-registry
+        spellings like ``segmented_reduce`` alias onto them).
+    ``knobs``
+        The knob values — a mapping (or tuple of ``(knob, value)`` pairs;
+        normalised to a sorted tuple so the spec stays hashable and can
+        ride through ``jit`` static args). Every key is validated against
+        :data:`KNOB_SCHEMA` and every value must be a positive int — a
+        typo'd knob that silently no-ops is exactly the failure mode this
+        subsystem exists to remove.
+
+    Construction accepts the same spellings as a policy: a ``TuneSpec``,
+    a mapping, or a string shorthand (``"q=64,num_warps=8"``) via
+    :meth:`from_spec`. The per-backend *default* values live in
+    ``repro.kernels.layout``; :meth:`KernelPolicy.tuning_for` merges
+    defaults < autotune-table winner < policy ``op_tuning`` override into
+    the spec every kernel consumes.
+    """
+
+    op: str
+    knobs: tuple = ()
+
+    def __post_init__(self):
+        op = OP_ALIASES.get(str(self.op), str(self.op))
+        object.__setattr__(self, "op", op)
+        if op not in KNOWN_OPS:
+            raise ValueError(
+                f"TuneSpec: unknown op {op!r}; expected one of {KNOWN_OPS} "
+                f"(or a kernel-registry alias {tuple(OP_ALIASES)})")
+        pairs = self.knobs
+        if isinstance(pairs, Mapping):
+            pairs = pairs.items()
+        allowed = KNOB_SCHEMA[op]
+        norm = []
+        for k, v in sorted((str(k), v) for k, v in pairs):
+            if k not in allowed:
+                raise ValueError(
+                    f"TuneSpec({op!r}): unknown knob {k!r}; expected one "
+                    f"of {allowed} — a typo here would silently no-op")
+            if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+                raise ValueError(
+                    f"TuneSpec({op!r}): knob {k!r} must be a positive "
+                    f"int, got {v!r}")
+            norm.append((k, v))
+        object.__setattr__(self, "knobs", tuple(norm))
+
+    @classmethod
+    def from_spec(cls, op: str, spec: "TuneSpec | Mapping | str"
+                  ) -> "TuneSpec":
+        """Coerce a tuning spec for ``op``: a :class:`TuneSpec`, a mapping
+        of knob values, or a ``"knob=value,knob=value"`` string."""
+        if isinstance(spec, TuneSpec):
+            if OP_ALIASES.get(str(op), str(op)) != spec.op:
+                raise ValueError(
+                    f"TuneSpec for op {spec.op!r} used under op {op!r}")
+            return spec
+        if isinstance(spec, Mapping):
+            return cls(op=op, knobs=spec)
+        if not isinstance(spec, str):
+            raise TypeError(
+                f"cannot build a TuneSpec from {type(spec).__name__}: "
+                f"{spec!r}")
+        knobs = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            k, sep, v = part.partition("=")
+            if not sep:
+                raise ValueError(
+                    f"TuneSpec string must be 'knob=value,...', got "
+                    f"{spec!r}")
+            knobs[k.strip()] = int(v)
+        return cls(op=op, knobs=knobs)
+
+    def get(self, key: str, default=None):
+        """The value of one knob, or ``default`` when the spec doesn't
+        carry it (the kernel glue then falls back to the layout default)."""
+        for k, v in self.knobs:
+            if k == key:
+                return v
+        return default
+
+    def as_dict(self) -> dict:
+        return dict(self.knobs)
+
+    def label(self) -> str:
+        """Compact human-readable form for benchmark rows / sweep keys
+        (``"block_n=64;block_s=32"``; ``"-"`` for an empty spec)."""
+        return ";".join(f"{k}={v}" for k, v in self.knobs) or "-"
+
+
+class ResolvedPath(str):
+    """What :meth:`KernelPolicy.resolve` returns: a plain ``str`` path
+    label (every existing comparison and dict key keeps working) that also
+    carries the resolved :class:`TuneSpec` as ``.tuning`` (None when the
+    call had no op context). ``pallas_op`` hands the spec to the tile
+    kernels; the fused/baseline XLA forms ignore it."""
+
+    __slots__ = ("tuning",)
+
+    def __new__(cls, label: str, tuning: "TuneSpec | None" = None):
+        self = str.__new__(cls, label)
+        self.tuning = tuning
+        return self
+
+
+# ---------------------------------------------------------------------------
 # the policy object
 
 
@@ -141,6 +289,13 @@ class KernelPolicy:
     ``autotune_table``
         Explicit table file. None falls back to the checked-in default;
         a set-but-unusable table fails loudly (see ``repro.core.autotune``).
+    ``op_tuning``
+        Per-op :class:`TuneSpec` overrides — a mapping (or tuple of
+        ``(op, spec)`` pairs; normalised to a sorted tuple of
+        ``(op, TuneSpec)``) from op name to a spec, mapping, or
+        ``"knob=value,..."`` string, e.g. ``{"ssd": {"q": 64}}``. These
+        beat both the layout defaults and the autotune table's swept
+        winner in :meth:`tuning_for`.
     ``interpret_fallback``
         What the generic ``tile`` does off-accelerator: ``"warn"`` (run the
         interpreter, warn once), ``"silent"``, or ``"error"``.
@@ -151,6 +306,7 @@ class KernelPolicy:
     backend: str | None = None
     autotune: str = "on"
     autotune_table: str | None = None
+    op_tuning: tuple = ()
     interpret_fallback: str = "warn"
 
     def __post_init__(self):
@@ -160,6 +316,29 @@ class KernelPolicy:
         pairs = tuple(sorted(
             (OP_ALIASES.get(str(op), str(op)), str(p)) for op, p in pairs))
         object.__setattr__(self, "op_paths", pairs)
+        tune = self.op_tuning
+        if isinstance(tune, Mapping):
+            tune = tune.items()
+        # merge entries that alias onto the same canonical op ("ssd" and
+        # "ssd_scan" are one op): knobs combine, but a conflicting value
+        # for the same knob is ambiguous and must raise — first-match
+        # resolution would silently depend on insertion order
+        merged: dict[str, dict] = {}
+        for op_name, spec in tune:
+            canon = OP_ALIASES.get(str(op_name), str(op_name))
+            ts = TuneSpec.from_spec(str(op_name), spec)
+            cur = merged.setdefault(canon, {})
+            for k, v in ts.knobs:
+                if k in cur and cur[k] != v:
+                    raise ValueError(
+                        f"op_tuning: conflicting values for "
+                        f"{canon}.{k} ({cur[k]} vs {v}) — the op was "
+                        "specified twice under aliased names")
+                cur[k] = v
+        tune = tuple(sorted(
+            ((op, TuneSpec(op, kn)) for op, kn in merged.items()),
+            key=lambda kv: kv[0]))
+        object.__setattr__(self, "op_tuning", tune)
         if self.path not in DISPATCH_PATHS:
             raise ValueError(
                 f"unknown path {self.path!r}; expected one of "
@@ -198,7 +377,9 @@ class KernelPolicy:
         Accepts a :class:`KernelPolicy` (returned as-is), a mapping of
         field overrides, or a string: a bare path label, an
         ``op=path,op=path`` shorthand (a bare label mixed in sets the
-        global path), or a JSON object of field overrides.
+        global path; dotted keys are tuning-knob overrides —
+        ``"tile,ssd.q=64"`` pins the global path AND the SSD chunk), or a
+        JSON object of field overrides (which may include ``op_tuning``).
         """
         if isinstance(spec, KernelPolicy):
             return spec
@@ -219,18 +400,26 @@ class KernelPolicy:
             return dataclasses.replace(base, **fields)
         if "=" in s:
             overrides = dict(base.op_paths)
+            tuning = {op: spec.as_dict() for op, spec in base.op_tuning}
             path = base.path
             for part in s.split(","):
                 part = part.strip()
                 if not part:
                     continue
                 if "=" in part:
-                    op, _, p = part.partition("=")
-                    overrides[op.strip()] = p.strip()
+                    key, _, val = part.partition("=")
+                    key = key.strip()
+                    if "." in key:      # op.knob=value tuning override
+                        op, _, kn = key.partition(".")
+                        op = OP_ALIASES.get(op.strip(), op.strip())
+                        tuning.setdefault(op, {})[kn.strip()] = int(val)
+                    else:
+                        overrides[key] = val.strip()
                 else:
                     path = part
-            return dataclasses.replace(base, path=path,
-                                       op_paths=tuple(overrides.items()))
+            return dataclasses.replace(
+                base, path=path, op_paths=tuple(overrides.items()),
+                op_tuning=tuning)
         return dataclasses.replace(base, path=s, op_paths=())
 
     # -- resolution ---------------------------------------------------------
@@ -249,9 +438,53 @@ class KernelPolicy:
                     return p
         return self.path
 
+    def tuning_for(self, op: str | None, n: int | None = None,
+                   dtype: Any = None, *,
+                   label: str | None = None) -> "TuneSpec | None":
+        """The :class:`TuneSpec` this policy resolves for one call.
+
+        Three layers, later wins: the per-backend defaults in
+        ``repro.kernels.layout`` (keyed by the *kernel* backend the
+        resolved ``label`` implies — ``tile_gpu`` reads the GPU defaults,
+        everything else the TPU/interpret ones), the autotune table's
+        swept winner for this call's shape bucket (v3 tables; gated by
+        this policy's ``autotune``/``autotune_table`` like path
+        resolution), and this policy's own ``op_tuning`` override. Knobs
+        that tile the bucket axis itself are then clamped against ``n``
+        (``layout.clamp_spec``), so the returned spec reports the
+        geometry that actually runs — a ``q=64`` override on a TPU host
+        comes back as the 128 the MXU-edge clamp will execute, never a
+        phantom value (row-axis knobs clamp at the call site instead).
+        Returns None for calls with no op context.
+        """
+        if op is None:
+            return None
+        op = OP_ALIASES.get(op, op)
+        if op not in KNOWN_OPS:
+            return None
+        if not KNOB_SCHEMA[op]:
+            return TuneSpec(op)
+        from repro.kernels import layout  # deferred: avoids a cycle
+
+        bk = "gpu" if label == "tile_gpu" else "tpu"
+        knobs = layout.default_tuning(bk, op)
+        if n is not None and self.autotune != "off":
+            from repro.core import autotune  # deferred: imports us
+
+            swept = autotune.tuning_entry(op, n, dtype, policy=self)
+            if swept:
+                knobs.update(swept)
+        for name, spec in self.op_tuning:
+            if name == op:
+                knobs.update(spec.as_dict())
+        # clamp the knobs that tile the bucket axis itself, so the spec
+        # this method reports IS the geometry the glue will run (row-axis
+        # knobs depend on batch shape and clamp at the call site)
+        return TuneSpec(op, layout.clamp_spec(bk, op, knobs, n=n))
+
     def resolve(self, op: str | None = None, n: int | None = None,
                 dtype: Any = None, *, level: str = "dispatch",
-                explicit: str | None = None) -> str:
+                explicit: str | None = None) -> "ResolvedPath":
         """Resolve one call to a concrete execution path.
 
         This is the repo's ONLY resolution algorithm; the legacy
@@ -271,7 +504,19 @@ class KernelPolicy:
         ``explicit`` is a per-call label that beats everything in the
         policy (the ``path=`` kwarg); it is validated against ``level``'s
         label set.
+
+        Returns a :class:`ResolvedPath`: a plain ``str`` label whose
+        ``.tuning`` attribute carries the :class:`TuneSpec` resolved via
+        :meth:`tuning_for` (None when ``op`` is unknown) — the tile
+        kernels take their geometry from it.
         """
+        label = self._resolve_label(op=op, n=n, dtype=dtype, level=level,
+                                    explicit=explicit)
+        return ResolvedPath(
+            label, self.tuning_for(op, n, dtype, label=label))
+
+    def _resolve_label(self, op: str | None, n: int | None, dtype: Any,
+                       level: str, explicit: str | None) -> str:
         from repro.kernels import backend as kb  # deferred: avoids a cycle
 
         valid = DISPATCH_PATHS if level == "dispatch" else KERNEL_PATHS
@@ -294,11 +539,14 @@ class KernelPolicy:
                 from repro.core import autotune  # deferred: imports us
 
                 if level == "kernel":
+                    canon = OP_ALIASES.get(op, op)
                     choice = autotune.choose(
                         op, n, dtype,
                         candidates=("fused", "tile", "tile_tpu", "tile_gpu",
                                     "interpret"),
-                        level="kernel", policy=self)
+                        level="kernel", policy=self,
+                        use_heuristic=(canon
+                                       not in autotune.FUSED_DEFAULT_OPS))
                 else:
                     choice = autotune.choose(op, n, dtype, policy=self)
                 # auto must never force a tile backend the host can't lower
@@ -438,22 +686,38 @@ def coerce_config_policy(policy, kernel_path: str | None,
 
 
 def policy_from_cli(policy_arg: str | None, kernel_path_arg: str | None,
-                    warn_key: str) -> KernelPolicy | None:
-    """Shared ``--policy`` / deprecated ``--kernel-path`` merge for CLIs.
+                    warn_key: str,
+                    tune_arg: str | None = None) -> KernelPolicy | None:
+    """Shared ``--policy`` / ``--tune`` / deprecated ``--kernel-path``
+    merge for CLIs.
 
     ``--kernel-path <label>`` warns once and acts as ``--policy <label>``
-    unless ``--policy`` was also given. The spec is applied on top of the
-    env-derived default policy (CLIs are process entry points — the env
-    vars must keep steering whatever the flags don't override). Returns
-    None when neither flag was passed.
+    unless ``--policy`` was also given. ``--tune "op.knob=value,..."``
+    (e.g. ``--tune "ssd.q=64,attention.block_q=256"``) layers per-op
+    tuning overrides on top of whatever policy the other flags produced.
+    The spec is applied on top of the env-derived default policy (CLIs are
+    process entry points — the env vars must keep steering whatever the
+    flags don't override). Returns None when no flag was passed.
     """
     spec = policy_arg
     if kernel_path_arg is not None:
         warn_once(warn_key, "--kernel-path is deprecated; use --policy")
         spec = spec if spec is not None else kernel_path_arg
-    if spec is None:
+    if spec is None and tune_arg is None:
         return None
-    return KernelPolicy.from_spec(spec, base=default_policy())
+    pol = default_policy()
+    if spec is not None:
+        pol = KernelPolicy.from_spec(spec, base=pol)
+    if tune_arg is not None:
+        for part in tune_arg.split(","):
+            part = part.strip()
+            if part and "." not in part.split("=", 1)[0]:
+                raise ValueError(
+                    f"--tune expects op.knob=value pairs (e.g. "
+                    f"'ssd.q=64'), got {part!r} — path overrides belong "
+                    "in --policy")
+        pol = KernelPolicy.from_spec(tune_arg, base=pol)
+    return pol
 
 
 def as_policy(policy: "KernelPolicy | Mapping | str | None" = None

@@ -13,7 +13,9 @@ call via ``policy=``/``path=``, or process-wide; the stable façade is
   fused_rmsnorm.py    RMSNorm with MXU Σx²              (paper §8 future work)
   ssd_scan.py         Mamba-2 SSD = weighted tile scan  (beyond-paper)
   flash_attention.py  blocked attention, matmul-form ℓ  (beyond-paper)
-  layout.py           shared padding/fold glue (both kernel backends)
+  layout.py           shared padding/fold glue + the ONLY home of kernel
+                      geometry numbers (TuneSpec defaults / sweep
+                      candidates; grep-guard enforced)
   triton/             Pallas-Triton (GPU) twins of all five kernels,
                       registered as the ``tile_gpu`` entries
 """

@@ -38,6 +38,13 @@ steers a CPU/TPU host) when the call shape is known, falling back to the
 static choice (tile on TPU/GPU, fused elsewhere) otherwise or when the
 policy disables autotuning. ``auto`` never selects a ``tile_*`` label the
 host cannot lower natively.
+
+Selection also carries *tuning*: the resolution result is a
+``ResolvedPath`` whose ``.tuning`` is the per-op
+:class:`~repro.core.policy.TuneSpec` (layout defaults < autotune table's
+swept winner < policy ``op_tuning``); :func:`pallas_op` hands it to the
+tile entries as ``tuning=`` so every kernel's block/chunk/warp geometry
+is data, not constants.
 """
 from __future__ import annotations
 
@@ -202,17 +209,40 @@ def resolve_path(path: str | None = None, *,
 @dataclasses.dataclass(frozen=True)
 class PallasOp:
     """One kernel family: the Pallas tile entries per backend (each must
-    accept an ``interpret=`` kwarg) and the fused-XLA reference twin.
+    accept ``interpret=`` and — when the family has tuning knobs —
+    ``tuning=`` kwargs) and the fused-XLA reference twin.
 
     ``tile`` is the Pallas-TPU entry (also the body the ``interpret`` path
     runs); ``tile_gpu`` the Pallas-Triton twin, or None while a family has
-    no GPU kernel yet.
+    no GPU kernel yet. ``knobs`` declares the family's tuning-knob schema
+    (from ``repro.core.policy.KNOB_SCHEMA``, keyed by the canonical op
+    name); the default and sweep-candidate knob *values* live in
+    ``repro.kernels.layout`` and are exposed here per backend so autotune
+    and callers interrogate the registry, not the kernel files.
     """
 
     name: str
     tile: Callable[..., Any]
     fused: Callable[..., Any]
     tile_gpu: Callable[..., Any] | None = None
+    knobs: tuple = ()
+
+    def _canonical(self) -> str:
+        from repro.core import policy as kpolicy
+
+        return kpolicy.OP_ALIASES.get(self.name, self.name)
+
+    def default_tuning(self, backend: str = "tpu") -> dict:
+        """Default knob values for this family on ``backend``."""
+        from repro.kernels import layout
+
+        return layout.default_tuning(backend, self._canonical())
+
+    def candidate_tuning(self, backend: str = "tpu") -> list[dict]:
+        """The candidate specs the autotune sweep times for this family."""
+        from repro.kernels import layout
+
+        return layout.candidate_tuning(backend, self._canonical())
 
 
 _REGISTRY: dict[str, PallasOp] = {}
@@ -221,7 +251,11 @@ _REGISTRY: dict[str, PallasOp] = {}
 def register_op(name: str, *, tile: Callable[..., Any],
                 fused: Callable[..., Any],
                 tile_gpu: Callable[..., Any] | None = None) -> PallasOp:
-    op = PallasOp(name=name, tile=tile, fused=fused, tile_gpu=tile_gpu)
+    from repro.core import policy as kpolicy  # deferred: avoids a cycle
+
+    canon = kpolicy.OP_ALIASES.get(name, name)
+    op = PallasOp(name=name, tile=tile, fused=fused, tile_gpu=tile_gpu,
+                  knobs=tuple(kpolicy.KNOB_SCHEMA.get(canon, ())))
     _REGISTRY[name] = op
     return op
 
@@ -239,11 +273,27 @@ def available_ops() -> list[str]:
     return sorted(_REGISTRY)
 
 
-# ops whose first argument's trailing dim IS the segment size the autotune
-# table buckets by; for the rest (attention: head dim, ssd_scan: different
-# op key at the dispatch level) auto stays static rather than consulting
-# the wrong bucket
-_SIZE_IS_LAST_DIM = ("segmented_reduce", "segmented_scan", "weighted_scan")
+def _call_shape(name: str, args: tuple) -> tuple:
+    """The (size, dtype) the autotune table buckets ``name`` by, extracted
+    from the call's first array argument — the same quantity the dispatch
+    layer passes for its level (reduction family: trailing segment size;
+    rmsnorm: feature dim; attention: query length, kernel layout
+    (B, H, L, D); ssd_scan: sequence length, (B, L, H, P)). Returns
+    (None, None) when no shape context is extractable — resolution then
+    stays static and table tuning keeps the layout defaults.
+    """
+    a = next((x for x in args
+              if hasattr(x, "shape") and getattr(x, "ndim", 0) >= 1), None)
+    if a is None:
+        return None, None
+    if name in ("segmented_reduce", "segmented_scan", "weighted_scan",
+                "rmsnorm"):
+        return a.shape[-1], a.dtype
+    if name == "attention" and a.ndim >= 3:
+        return a.shape[2], a.dtype
+    if name == "ssd_scan" and a.ndim >= 2:
+        return a.shape[1], a.dtype
+    return None, None
 
 
 def pallas_op(name: str, *args: Any, policy: Any = None,
@@ -254,24 +304,24 @@ def pallas_op(name: str, *args: Any, policy: Any = None,
 
     ``policy`` is a :class:`repro.core.policy.KernelPolicy` (or string
     shorthand; None = the active policy); ``path``/``use_pallas`` are the
-    per-call legacy spellings and beat the policy. For the reduction/scan
-    family the first array argument's trailing dimension is the op's
-    segment size, enabling shape-aware ``auto``.
+    per-call legacy spellings and beat the policy. Every family extracts
+    its bucket size from the call (see :func:`_call_shape`), enabling
+    shape-aware ``auto`` AND shape-bucketed table tuning. The resolved
+    :class:`~repro.core.policy.TuneSpec` rides the resolution result and
+    is handed to the tile entries as ``tuning=`` (families that declare
+    knobs); the fused XLA twin has no geometry and never sees it.
     """
     from repro.core import policy as kpolicy
 
     op = get_op(name)
-    n = dt = None
-    if name in _SIZE_IS_LAST_DIM:
-        for a in args:
-            if hasattr(a, "shape") and getattr(a, "ndim", 0) >= 1:
-                n, dt = a.shape[-1], a.dtype
-                break
+    n, dt = _call_shape(name, args)
     path = _merge_use_pallas(path, use_pallas)
     p = kpolicy.as_policy(policy).resolve(op=name, n=n, dtype=dt,
                                           level="kernel", explicit=path)
     if p == "fused":
         return op.fused(*args, **kwargs)
+    if op.knobs:
+        kwargs["tuning"] = getattr(p, "tuning", None)
     if p == "tile_gpu":
         if op.tile_gpu is None:
             raise RuntimeError(

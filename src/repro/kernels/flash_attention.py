@@ -21,8 +21,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import backend
+from repro.kernels.layout import LANES, SUBLANES, default_tuning
 
-LANES = 128
 NEG_INF = float(-1e30)
 
 
@@ -102,13 +102,20 @@ def flash_attention(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: int | None = None,
+    block_k: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
+    spec = default_tuning("tpu", "attention")
+    block_q = block_q or spec["block_q"]
+    block_k = block_k or spec["block_k"]
     bsz, hq, lq, d = q.shape
     hkv, lk = k.shape[1], k.shape[2]
     rep = hq // hkv
+    if block_q % SUBLANES or block_k % LANES:
+        raise ValueError(
+            f"blocks {(block_q, block_k)} must be multiples of "
+            f"{(SUBLANES, LANES)}")
     if lq % block_q or lk % block_k:
         raise ValueError(f"seq lens {(lq, lk)} must tile {(block_q, block_k)}")
     scale_v = scale if scale is not None else 1.0 / (d ** 0.5)

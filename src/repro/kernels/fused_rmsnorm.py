@@ -8,8 +8,10 @@ lane holds the sum, so no cross-lane shuffle is needed for the subsequent
 elementwise normalisation; the V100 version needed Listing-3 layout hacks
 for the same effect).
 
-Grid: rows/128; the full feature dim lives in one VMEM block
+Grid: rows/row_block; the full feature dim lives in one VMEM block
 (d ≤ 8192 ⇒ ≤ 4 MiB f32 per block, well under the 16 MiB VMEM budget).
+``row_block`` is caller-supplied (a resolved ``TuneSpec``); the default
+lives in ``repro.kernels.layout``.
 """
 from __future__ import annotations
 
@@ -20,40 +22,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
-
-LANES = 128
-ROW_BLOCK = 128
+from repro.kernels.layout import LANES, SUBLANES, default_tuning
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, d: int):
-    x = x_ref[...].astype(jnp.float32)               # (ROW_BLOCK, d)
+    x = x_ref[...].astype(jnp.float32)               # (row_block, d)
     ones = jnp.ones((d, LANES), jnp.float32)
     # (x∘x) @ 1 : every lane of ssq holds Σ_d x²  (matmul-form reduce+bcast)
     ssq = jax.lax.dot_general(
         x * x, ones, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
-    )                                                # (ROW_BLOCK, 128)
-    rstd = jax.lax.rsqrt(ssq[:, :1] / d + eps)       # (ROW_BLOCK, 1)
+    )                                                # (row_block, 128)
+    rstd = jax.lax.rsqrt(ssq[:, :1] / d + eps)       # (row_block, 1)
     w = w_ref[...].astype(jnp.float32)               # (1, d)
     o_ref[...] = (x * rstd * w).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "row_block", "interpret"))
 def fused_rmsnorm(
-    x: jax.Array, w: jax.Array, *, eps: float = 1e-6, interpret: bool = False
+    x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+    row_block: int | None = None, interpret: bool = False
 ) -> jax.Array:
-    """RMSNorm rows of ``x (rows, d)`` by ``w (d,)``; rows % 128 == 0."""
+    """RMSNorm rows of ``x (rows, d)`` by ``w (d,)``; ``rows % row_block
+    == 0`` (wrapper pads) and ``d`` a lane multiple."""
+    row_block = row_block or default_tuning("tpu", "rmsnorm")["row_block"]
     rows, d = x.shape
-    if rows % ROW_BLOCK or d % LANES:
-        raise ValueError(f"shape {x.shape} must tile (128, 128)")
+    if row_block % SUBLANES:
+        raise ValueError(
+            f"row_block {row_block} must be a multiple of {SUBLANES}")
+    if rows % row_block or d % LANES:
+        raise ValueError(f"shape {x.shape} must tile {(row_block, LANES)}")
     return pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps, d=d),
-        grid=(rows // ROW_BLOCK,),
+        grid=(rows // row_block,),
         in_specs=[
-            pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
             pl.BlockSpec((1, d), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((row_block, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
         compiler_params=backend.compiler_params(
             dimension_semantics=("arbitrary",),

@@ -1,4 +1,4 @@
-"""Shared layout/padding glue for the kernel wrappers.
+"""Shared layout/padding glue + the single home for kernel geometry.
 
 Both kernel backends (the Pallas-TPU twins in this package and the
 Pallas-Triton twins in ``repro.kernels.triton``) wrap the same shape-strict
@@ -6,11 +6,191 @@ kernels in the same way: flatten leading dims, zero-pad to the backend's
 tile multiples, run, slice the valid block back out. The padding algebra is
 backend-independent — only the multiples differ (128-lane MXU tiles vs
 16-wide tensor-core MMA fragments) — so it lives here once.
+
+Since the TuneSpec refactor this module is also the ONLY place allowed to
+spell out block/chunk/warp numbers (a grep-guard test bans literal geometry
+constants in every other kernel file):
+
+* :data:`LANES` / :data:`SUBLANES` / :data:`MMA_TILE` — *hardware*
+  constants (MXU lane count, f32 sublane tile, tensor-core fragment edge).
+  These are facts about the silicon, not tuning knobs.
+* :data:`DEFAULT_TUNING` — the per-(backend, op) default knob values the
+  kernels ran with before geometry became caller-supplied. Consumed by
+  ``repro.core.policy.KernelPolicy.tuning_for`` as the base layer every
+  resolved :class:`~repro.core.policy.TuneSpec` starts from.
+* :data:`CANDIDATE_TUNING` — the candidate specs ``python -m
+  repro.core.autotune --write`` sweeps per op (>= 2 each; the winning spec
+  is persisted in the v3 table).
+* :func:`fit_block` — clamp a caller-supplied block size to the hardware
+  multiple and the (padded) extent of the axis it tiles, so a swept or
+  hand-written spec can never crash a kernel on a small or unaligned shape
+  (it shrinks to fit instead).
+
+The knob *names* are validated against ``repro.core.policy.KNOB_SCHEMA``
+(the policy layer owns validation, the way ``op_paths`` validates against
+``KNOWN_OPS``); this module owns the *values*.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# Hardware constants (not tuning knobs):
+LANES = 128      # TPU MXU/VPU lane count — the systolic-array edge
+SUBLANES = 8     # TPU f32 sublane tile (min second-to-last dim)
+MMA_TILE = 16    # GPU tensor-core MMA fragment edge (WMMA 16x16x16)
+
+# Per-(backend, op) default tuning — the values the kernels hard-coded
+# before the TuneSpec refactor. Keys must stay within
+# repro.core.policy.KNOB_SCHEMA (test-enforced). The "tpu" section also
+# covers the interpret path (it runs the Pallas-TPU kernel body).
+DEFAULT_TUNING = {
+    "tpu": {
+        "reduce": {"block_s": 128, "block_n": 128},
+        "scan": {"block_s": 128, "block_n": 128},
+        "weighted_scan": {"q": 128},
+        "rmsnorm": {"row_block": 128},
+        "attention": {"block_q": 128, "block_k": 128},
+        "ssd": {"q": 128},
+        "ragged_reduce": {},
+        "ragged_scan": {},
+    },
+    "gpu": {
+        "reduce": {"block_s": 32, "block_n": 64,
+                   "num_warps": 4, "num_stages": 2},
+        "scan": {"block_s": 32, "block_n": 64,
+                 "num_warps": 4, "num_stages": 2},
+        "weighted_scan": {"q": 64, "num_warps": 4, "num_stages": 2},
+        "rmsnorm": {"row_block": 16, "block_d": 128,
+                    "num_warps": 8, "num_stages": 2},
+        "attention": {"block_q": 64, "block_k": 64,
+                      "num_warps": 4, "num_stages": 2},
+        "ssd": {"q": 64, "num_warps": 4, "num_stages": 2},
+        "ragged_reduce": {},
+        "ragged_scan": {},
+    },
+}
+
+# Candidate specs the autotune sweep times per op (the first entry is the
+# default geometry so the sweep always covers the status quo). Ragged ops
+# have no Pallas kernel yet, hence no candidates.
+CANDIDATE_TUNING = {
+    "tpu": {
+        "reduce": ({"block_s": 128, "block_n": 128},
+                   {"block_s": 128, "block_n": 256},
+                   {"block_s": 256, "block_n": 128}),
+        "scan": ({"block_s": 128, "block_n": 128},
+                 {"block_s": 128, "block_n": 256}),
+        "weighted_scan": ({"q": 128}, {"q": 256}),
+        "rmsnorm": ({"row_block": 128}, {"row_block": 256}),
+        "attention": ({"block_q": 128, "block_k": 128},
+                      {"block_q": 128, "block_k": 256}),
+        "ssd": ({"q": 128}, {"q": 256}),
+    },
+    "gpu": {
+        "reduce": ({"block_s": 32, "block_n": 64,
+                    "num_warps": 4, "num_stages": 2},
+                   {"block_s": 64, "block_n": 64,
+                    "num_warps": 4, "num_stages": 2},
+                   {"block_s": 32, "block_n": 128,
+                    "num_warps": 8, "num_stages": 3}),
+        "scan": ({"block_s": 32, "block_n": 64,
+                  "num_warps": 4, "num_stages": 2},
+                 {"block_s": 16, "block_n": 128,
+                  "num_warps": 8, "num_stages": 2}),
+        "weighted_scan": ({"q": 64, "num_warps": 4, "num_stages": 2},
+                          {"q": 128, "num_warps": 4, "num_stages": 2}),
+        "rmsnorm": ({"row_block": 16, "block_d": 128,
+                     "num_warps": 8, "num_stages": 2},
+                    {"row_block": 32, "block_d": 64,
+                     "num_warps": 4, "num_stages": 2}),
+        "attention": ({"block_q": 64, "block_k": 64,
+                       "num_warps": 4, "num_stages": 2},
+                      {"block_q": 128, "block_k": 64,
+                       "num_warps": 8, "num_stages": 2}),
+        "ssd": ({"q": 64, "num_warps": 4, "num_stages": 2},
+                {"q": 128, "num_warps": 4, "num_stages": 2}),
+    },
+}
+
+
+def default_tuning(backend: str, op: str) -> dict:
+    """The default knob values for ``op`` on ``backend`` (a fresh dict)."""
+    return dict(DEFAULT_TUNING.get(backend, {}).get(op, {}))
+
+
+def candidate_tuning(backend: str, op: str) -> list[dict]:
+    """The sweepable candidate specs for ``op`` on ``backend``."""
+    return [dict(c) for c in CANDIDATE_TUNING.get(backend, {}).get(op, ())]
+
+
+# Which hardware multiple each clampable block knob carries, split by the
+# call-shape axis it tiles: "n" knobs tile the very axis the autotune
+# table buckets by (segment size / chunk length / feature dim) and can be
+# clamped as soon as n is known — at resolve time, so the reported
+# TuneSpec IS the geometry that runs; "rows" knobs tile the flattened
+# batch axis only the glue sees and are clamped there. Attention's blocks
+# tile two sequence axes that may differ (decode), so only the glue
+# clamps them.
+N_AXIS_KNOBS = {
+    "tpu": {"reduce": {"block_n": SUBLANES}, "scan": {"block_n": LANES},
+            "weighted_scan": {"q": LANES}, "ssd": {"q": LANES}},
+    "gpu": {"reduce": {"block_n": MMA_TILE}, "scan": {"block_n": MMA_TILE},
+            "weighted_scan": {"q": MMA_TILE}, "ssd": {"q": MMA_TILE},
+            "rmsnorm": {"block_d": MMA_TILE}},
+}
+ROW_AXIS_KNOBS = {
+    "tpu": {"reduce": {"block_s": LANES}, "scan": {"block_s": SUBLANES},
+            "rmsnorm": {"row_block": SUBLANES}},
+    "gpu": {"reduce": {"block_s": MMA_TILE}, "scan": {"block_s": MMA_TILE},
+            "rmsnorm": {"row_block": MMA_TILE}},
+}
+
+
+def clamp_spec(backend: str, op: str, knobs: dict, *,
+               n: int | None = None, rows: int | None = None) -> dict:
+    """Clamp block knobs against the known call shape (see
+    :data:`N_AXIS_KNOBS`/:data:`ROW_AXIS_KNOBS`); unknown extents pass
+    the knob through unchanged. Used by ``KernelPolicy.tuning_for`` (n
+    only) so the resolved spec reports what actually runs, and by the
+    autotune sweep (n and rows) so candidates that collapse onto the same
+    executed geometry are deduplicated instead of timed as phantoms."""
+    out = dict(knobs)
+    for ext, table in ((n, N_AXIS_KNOBS), (rows, ROW_AXIS_KNOBS)):
+        if ext is None:
+            continue
+        for knob, mult in table.get(backend, {}).get(op, {}).items():
+            if knob in out:
+                out[knob] = fit_block(ext, out[knob], mult)
+    return out
+
+
+def fit_block(size: int, block: int, multiple: int) -> int:
+    """Clamp a caller-supplied block size against the axis it tiles.
+
+    Rounds ``block`` down to the hardware ``multiple`` (never below it) and
+    caps it at the padded extent of ``size``, so a swept/hand-written spec
+    cannot request a block the shape can't supply: the wrapper then pads
+    the axis to a multiple of the fitted block and divisibility holds by
+    construction.
+    """
+    b = max(multiple, (int(block) // multiple) * multiple)
+    ext = -(-max(int(size), 1) // multiple) * multiple
+    return min(b, ext)
+
+
+def knob(tuning, key: str, backend: str, op: str) -> int:
+    """One knob value from a TuneSpec-or-None, else the backend default.
+
+    ``tuning`` is anything with ``.get`` (a ``TuneSpec`` or a plain dict);
+    None falls through to :func:`default_tuning` — how direct kernel-glue
+    callers that predate the policy plumbing keep working.
+    """
+    if tuning is not None:
+        v = tuning.get(key)
+        if v is not None:
+            return int(v)
+    return int(DEFAULT_TUNING[backend][op][key])
 
 
 def pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:

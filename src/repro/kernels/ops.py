@@ -19,8 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import backend, ref
+from repro.kernels import backend, layout, ref
 from repro.kernels.backend import pallas_op
+from repro.kernels.layout import LANES, SUBLANES
 from repro.kernels.layout import nrows as _nrows
 from repro.kernels.layout import pad_axis as _pad_axis
 from repro.kernels.layout import ssd_fold, ssd_unfold
@@ -55,7 +56,11 @@ def _gpu_entry(fn_name: str):
     return getattr(triton_ops, fn_name) if triton_ops is not None else None
 
 
-LANES = 128
+def _knob(tuning, key: str, op: str) -> int:
+    """One TPU-geometry knob from the resolved TuneSpec (or the layout
+    default when no spec reached this glue — direct/legacy callers)."""
+    return layout.knob(tuning, key, "tpu", op)
+
 
 on_tpu = backend.on_tpu  # re-exported; historical home of this probe
 
@@ -64,14 +69,20 @@ on_tpu = backend.on_tpu  # re-exported; historical home of this probe
 # segmented reduce
 
 
-def _reduce_tile(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+def _reduce_tile(x: jax.Array, *, tuning=None,
+                 interpret: bool = False) -> jax.Array:
     lead = x.shape[:-1]
     n = x.shape[-1]
     flat = x.reshape(-1, n)
-    # col-major LoadTile: feed the kernel x^T, pad both dims to 128
-    xt = _pad_axis(_pad_axis(flat.T, 0, LANES), 1, LANES)
+    # spec geometry, clamped against the shape: segments ride the lanes,
+    # elements the sublanes of the transposed LoadTile
+    bs = layout.fit_block(flat.shape[0], _knob(tuning, "block_s", "reduce"),
+                          LANES)
+    bn = layout.fit_block(n, _knob(tuning, "block_n", "reduce"), SUBLANES)
+    # col-major LoadTile: feed the kernel x^T, pad both dims to the blocks
+    xt = _pad_axis(_pad_axis(flat.T, 0, bn), 1, bs)
     out = _require_pallas(_reduce_kernel, "segmented_reduce")(
-        xt, interpret=interpret)
+        xt, block_s=bs, block_n=bn, interpret=interpret)
     return out[: flat.shape[0]].reshape(lead)
 
 
@@ -86,13 +97,17 @@ def segmented_reduce(x: jax.Array, *, policy=None, path: str | None = None,
 # segmented scan
 
 
-def _scan_tile(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+def _scan_tile(x: jax.Array, *, tuning=None,
+               interpret: bool = False) -> jax.Array:
     lead = x.shape[:-1]
     n = x.shape[-1]
-    flat = _pad_axis(_pad_axis(x.reshape(-1, n), 0, LANES), 1, LANES)
+    rows = _nrows(lead)
+    bs = layout.fit_block(rows, _knob(tuning, "block_s", "scan"), SUBLANES)
+    bn = layout.fit_block(n, _knob(tuning, "block_n", "scan"), LANES)
+    flat = _pad_axis(_pad_axis(x.reshape(-1, n), 0, bs), 1, bn)
     out = _require_pallas(_scan_kernel, "segmented_scan")(
-        flat, interpret=interpret)
-    return out[: _nrows(lead), :n].reshape(*lead, n)
+        flat, block_s=bs, block_n=bn, interpret=interpret)
+    return out[:rows, :n].reshape(*lead, n)
 
 
 def segmented_scan(x: jax.Array, *, policy=None, path: str | None = None,
@@ -106,21 +121,22 @@ def segmented_scan(x: jax.Array, *, policy=None, path: str | None = None,
 # weighted scan (the SSD kernel degenerated to N = P = 1, B = C = 1)
 
 
-def _weighted_scan_tile(x: jax.Array, log_a: jax.Array, *,
+def _weighted_scan_tile(x: jax.Array, log_a: jax.Array, *, tuning=None,
                         interpret: bool = False) -> jax.Array:
     lead = x.shape[:-1]
     n = x.shape[-1]
     rows = _nrows(lead)
+    q = layout.fit_block(n, _knob(tuning, "q", "weighted_scan"), LANES)
     xf = x.reshape(rows, n).astype(jnp.float32)
     la = log_a.reshape(rows, n).astype(jnp.float32)
     # state dim N=1 (pad to 8) and head dim P=1 (pad to 128): h is scalar,
     # b = c = e_1 make the recurrence y_t = h_t = exp(la_t) h_{t-1} + x_t.
-    xp = _pad_axis(_pad_axis(xf[..., None], 2, LANES), 1, LANES)
-    lap = _pad_axis(la, 1, LANES)  # pad with 0 ⇒ decay 1, input 0: harmless
+    xp = _pad_axis(_pad_axis(xf[..., None], 2, LANES), 1, q)
+    lap = _pad_axis(la, 1, q)      # pad with 0 ⇒ decay 1, input 0: harmless
     e1 = jnp.ones((rows, n, 1), jnp.float32)
-    e1 = _pad_axis(_pad_axis(e1, 2, 8), 1, LANES)
+    e1 = _pad_axis(_pad_axis(e1, 2, SUBLANES), 1, q)
     y, _ = _require_pallas(_ssd_kernel, "weighted_scan")(
-        xp, lap, e1, e1, interpret=interpret)
+        xp, lap, e1, e1, q=q, interpret=interpret)
     return y[:, :n, 0].reshape(*lead, n)
 
 
@@ -136,30 +152,32 @@ def weighted_scan(x: jax.Array, log_a: jax.Array, *, policy=None,
 # rmsnorm (differentiable: all paths share one custom VJP)
 
 
-def _rmsnorm_tile_fwd(x, w, eps, interpret):
+def _rmsnorm_tile_fwd(x, w, eps, interpret, tuning):
     lead, d = x.shape[:-1], x.shape[-1]
     if d % LANES:  # kernel is lane-strict; unaligned d -> oracle (the
         return ref.rmsnorm_ref(x, w, eps=eps)  # same idiom as attention)
-    flat = _pad_axis(x.reshape(-1, d), 0, 128)
+    rb = layout.fit_block(_nrows(lead), _knob(tuning, "row_block", "rmsnorm"),
+                          SUBLANES)
+    flat = _pad_axis(x.reshape(-1, d), 0, rb)
     out = _require_pallas(_rmsnorm_kernel, "rmsnorm")(
-        flat, w, eps=eps, interpret=interpret)
+        flat, w, eps=eps, row_block=rb, interpret=interpret)
     return out[: _nrows(lead)].reshape(*lead, d)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3))
-def _rmsnorm_dispatch(kind, x, w, eps):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4))
+def _rmsnorm_dispatch(kind, x, w, eps, tuning):
     if kind == "fused":
         return ref.rmsnorm_ref(x, w, eps=eps)
     if kind == "tile_gpu":
-        return triton_ops.rmsnorm_tile_gpu_fwd(x, w, eps, False)
-    return _rmsnorm_tile_fwd(x, w, eps, kind == "interpret")
+        return triton_ops.rmsnorm_tile_gpu_fwd(x, w, eps, False, tuning)
+    return _rmsnorm_tile_fwd(x, w, eps, kind == "interpret", tuning)
 
 
-def _rmsnorm_vjp_fwd(kind, x, w, eps):
-    return _rmsnorm_dispatch(kind, x, w, eps), (x, w)
+def _rmsnorm_vjp_fwd(kind, x, w, eps, tuning):
+    return _rmsnorm_dispatch(kind, x, w, eps, tuning), (x, w)
 
 
-def _rmsnorm_vjp_bwd(kind, eps, res, g):
+def _rmsnorm_vjp_bwd(kind, eps, tuning, res, g):
     # backward through the reference formulation (numerically identical)
     x, w = res
     _, vjp = jax.vjp(lambda xx, ww: ref.rmsnorm_ref(xx, ww, eps=eps), x, w)
@@ -170,20 +188,21 @@ _rmsnorm_dispatch.defvjp(_rmsnorm_vjp_fwd, _rmsnorm_vjp_bwd)
 
 
 def _rmsnorm_tile(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
-                  interpret: bool = False) -> jax.Array:
-    return _rmsnorm_dispatch("interpret" if interpret else "tile", x, w, eps)
+                  tuning=None, interpret: bool = False) -> jax.Array:
+    return _rmsnorm_dispatch("interpret" if interpret else "tile", x, w,
+                             eps, tuning)
 
 
 def _rmsnorm_tile_gpu(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
-                      interpret: bool = False) -> jax.Array:
+                      tuning=None, interpret: bool = False) -> jax.Array:
     if interpret:  # interpret validation runs outside the VJP wrapper too
-        return triton_ops.rmsnorm_tile_gpu_fwd(x, w, eps, True)
-    return _rmsnorm_dispatch("tile_gpu", x, w, eps)
+        return triton_ops.rmsnorm_tile_gpu_fwd(x, w, eps, True, tuning)
+    return _rmsnorm_dispatch("tile_gpu", x, w, eps, tuning)
 
 
 def _rmsnorm_fused(x: jax.Array, w: jax.Array, *,
                    eps: float = 1e-6) -> jax.Array:
-    return _rmsnorm_dispatch("fused", x, w, eps)
+    return _rmsnorm_dispatch("fused", x, w, eps, None)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
@@ -206,18 +225,20 @@ def _ssd_tile(
     c: jax.Array,       # (B, L, G, N)
     *,
     return_state: bool = False,
+    tuning=None,
     interpret: bool = False,
 ):
     bsz, seqlen, nheads, hdim = x.shape
     nstate = b.shape[3]
-    # fold (B, H) and broadcast groups; pad P (lane dim) and L to 128
+    q = layout.fit_block(seqlen, _knob(tuning, "q", "ssd"), LANES)
+    # fold (B, H) and broadcast groups; pad P (lane dim) to 128, L to q
     xdt, lam, bb, cc = ssd_fold(x, dt, a, b, c)
-    xdt = _pad_axis(_pad_axis(xdt, 2, LANES), 1, LANES)
-    lam = _pad_axis(lam, 1, LANES)
-    bb = _pad_axis(_pad_axis(bb, 2, 8), 1, LANES)
-    cc = _pad_axis(_pad_axis(cc, 2, 8), 1, LANES)
+    xdt = _pad_axis(_pad_axis(xdt, 2, LANES), 1, q)
+    lam = _pad_axis(lam, 1, q)
+    bb = _pad_axis(_pad_axis(bb, 2, SUBLANES), 1, q)
+    cc = _pad_axis(_pad_axis(cc, 2, SUBLANES), 1, q)
     y, state = _require_pallas(_ssd_kernel, "ssd_scan")(
-        xdt, lam, bb, cc, interpret=interpret)
+        xdt, lam, bb, cc, q=q, interpret=interpret)
     # kernel state is (B*H, N_pad, P_pad); zero-padding of b/x keeps the
     # valid block exact — slice and match ssd_chunked's (B, H, P, N)
     return ssd_unfold(y, state, bsz=bsz, nheads=nheads, seqlen=seqlen,
@@ -241,15 +262,20 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 def _attention_tile(
     q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal: bool = True, window: int | None = None,
-    scale: float | None = None, interpret: bool = False,
+    scale: float | None = None, tuning=None, interpret: bool = False,
 ) -> jax.Array:
     lq, lk = q.shape[2], k.shape[2]
-    if lq % 128 or lk % 128:  # kernel is block-strict; unaligned -> oracle
+    # block_q rides the sublanes (the kernel accepts any 8-multiple);
+    # block_k is the lane dim of the score tile and stays a 128-multiple
+    bq = layout.fit_block(lq, _knob(tuning, "block_q", "attention"),
+                          SUBLANES)
+    bk = layout.fit_block(lk, _knob(tuning, "block_k", "attention"), LANES)
+    if lq % bq or lk % bk:  # kernel is block-strict; unaligned -> oracle
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                        scale=scale)
     return _require_pallas(_flash_kernel, "attention")(
         q, k, v, causal=causal, window=window, scale=scale,
-        interpret=interpret)
+        block_q=bq, block_k=bk, interpret=interpret)
 
 
 def attention(
@@ -277,15 +303,19 @@ def _diff_via_ref(kernel_fn, ref_fn):
     tolerance (the dispatch-agreement tests), so the same trick rmsnorm
     already uses generalises: run the kernel forward, differentiate the
     reference formulation (numerically identical) backward. ``kwargs``
-    are static per call and must be accepted by both twins.
+    are static per call and must be accepted by both twins —
+    ``interpret``/``tuning`` steer only the kernel side (geometry changes
+    how the kernel runs, never what it computes, so the oracle backward
+    stays numerically identical).
     """
     if kernel_fn is None:
         return None
 
     @functools.wraps(kernel_fn)
-    def wrapped(*args, interpret=False, **kwargs):
+    def wrapped(*args, interpret=False, tuning=None, **kwargs):
         run = jax.custom_vjp(
-            lambda *arrs: kernel_fn(*arrs, interpret=interpret, **kwargs))
+            lambda *arrs: kernel_fn(*arrs, interpret=interpret,
+                                    tuning=tuning, **kwargs))
 
         def fwd(*arrs):
             return run(*arrs), arrs

@@ -5,17 +5,19 @@ Paper mapping (Dakkak et al. ICS'19, Alg. 3 / Fig. 7), TPU-adapted:
 * The paper loads tiles **column-major** so 16 segments occupy the 16 rows of
   a WMMA fragment and one ``P @ A`` reduces all of them. Our analogue: the
   wrapper feeds the kernel ``x`` transposed to ``(n, s)`` so one VMEM block
-  holds 128 elements (sublanes) x 128 segments (lanes) and one
-  ``P_8 @ A`` MXU pass reduces 128 segments at once.
+  holds ``block_n`` elements (sublanes) x ``block_s`` segments (lanes) and
+  one ``P_8 @ A`` MXU pass reduces a whole lane-row of segments at once.
 * The paper's work-efficient trick — accumulate ``V_i = P·A_i + V_{i-1}``
   across tiles, one matmul each, collapsing only at the end — is the
   sequential innermost grid dimension with a VMEM scratch accumulator.
-* The f32 scratch is (8, 128): the live data is the paper's "first row of V";
-  8 sublanes is the f32 minimum tile. The redundant 7 rows cost nothing
-  (the MXU streams M=8 in one pass) — reduction stays memory-bound, which is
-  the paper's central observation.
+* The f32 scratch is (8, block_s): the live data is the paper's "first row
+  of V"; 8 sublanes is the f32 minimum tile. The redundant 7 rows cost
+  nothing (the MXU streams M=8 in one pass) — reduction stays memory-bound,
+  which is the paper's central observation.
 
-Grid: ``(S/128, N/128)`` — segments parallel, chunks sequential (innermost).
+Grid: ``(S/block_s, N/block_n)`` — segments parallel, chunks sequential
+(innermost). The block geometry is caller-supplied (a resolved
+``TuneSpec``); defaults live in ``repro.kernels.layout``.
 """
 from __future__ import annotations
 
@@ -27,9 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import backend
-
-LANES = 128
-SUBLANES = 8
+from repro.kernels.layout import LANES, SUBLANES, default_tuning
 
 
 def _reduce_kernel(x_ref, o_ref, acc_ref, *, nchunks: int):
@@ -39,10 +39,10 @@ def _reduce_kernel(x_ref, o_ref, acc_ref, *, nchunks: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = x_ref[...]                                   # (128, 128) = [n, s]
-    # P @ A with P = ones in row 0: realised as an (8,128) ones LHS — every
-    # result row holds the column sums; row 0 is the paper's V row.
-    p = jnp.ones((SUBLANES, LANES), a.dtype)
+    a = x_ref[...]                                   # (block_n, block_s)
+    # P @ A with P = ones in row 0: realised as an (8, block_n) ones LHS —
+    # every result row holds the column sums; row 0 is the paper's V row.
+    p = jnp.ones((SUBLANES, a.shape[0]), a.dtype)
     acc_ref[...] += jax.lax.dot_general(
         p, a, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -52,23 +52,38 @@ def _reduce_kernel(x_ref, o_ref, acc_ref, *, nchunks: int):
         o_ref[...] = acc_ref[0, :].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def tcu_segmented_reduce_tn(xt: jax.Array, *, interpret: bool = False) -> jax.Array:
-    """Reduce columns of ``xt``: (n, s) -> (s,). Both dims multiples of 128.
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "block_n", "interpret"))
+def tcu_segmented_reduce_tn(xt: jax.Array, *, block_s: int | None = None,
+                            block_n: int | None = None,
+                            interpret: bool = False) -> jax.Array:
+    """Reduce columns of ``xt``: (n, s) -> (s,). ``s % block_s == 0`` and
+    ``n % block_n == 0`` (wrapper pads); ``block_s`` must be a lane
+    multiple and ``block_n`` a sublane multiple.
 
-    ``xt`` is the transposed segment matrix (the paper's col-major LoadTile).
+    ``xt`` is the transposed segment matrix (the paper's col-major
+    LoadTile).
     """
+    spec = default_tuning("tpu", "reduce")
+    block_s = block_s or spec["block_s"]
+    block_n = block_n or spec["block_n"]
     n, s = xt.shape
-    if n % LANES or s % LANES:
-        raise ValueError(f"dims must be multiples of {LANES}, got {xt.shape}")
-    nchunks = n // LANES
+    if block_s % LANES or block_n % SUBLANES:
+        raise ValueError(
+            f"blocks {(block_s, block_n)} must be multiples of "
+            f"{(LANES, SUBLANES)}")
+    if n % block_n or s % block_s:
+        raise ValueError(
+            f"dims must be multiples of {(block_n, block_s)}, got "
+            f"{xt.shape}")
+    nchunks = n // block_n
     return pl.pallas_call(
         functools.partial(_reduce_kernel, nchunks=nchunks),
-        grid=(s // LANES, nchunks),
-        in_specs=[pl.BlockSpec((LANES, LANES), lambda i, j: (j, i))],
-        out_specs=pl.BlockSpec((LANES,), lambda i, j: (i,)),
+        grid=(s // block_s, nchunks),
+        in_specs=[pl.BlockSpec((block_n, block_s), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((block_s,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((s,), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, block_s), jnp.float32)],
         compiler_params=backend.compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),

@@ -27,8 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
+from repro.kernels.layout import MMA_TILE as TILE
+from repro.kernels.layout import default_tuning
 
-TILE = 16  # tensor-core MMA fragment edge
 NEG_INF = float(-1e30)
 
 
@@ -89,7 +90,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "scale", "block_q", "block_k",
-                     "interpret"),
+                     "num_warps", "num_stages", "interpret"),
 )
 def triton_flash_attention(
     q: jax.Array,       # (B, Hq, Lq, D)
@@ -99,10 +100,15 @@ def triton_flash_attention(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
-    block_q: int = 64,
-    block_k: int = 64,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    num_warps: int | None = None,
+    num_stages: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
+    spec = default_tuning("gpu", "attention")
+    block_q = block_q or spec["block_q"]
+    block_k = block_k or spec["block_k"]
     bsz, hq, lq, d = q.shape
     hkv, lk = k.shape[1], k.shape[2]
     rep = hq // hkv
@@ -131,7 +137,9 @@ def triton_flash_attention(
                                lambda b, h, i: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, hq, lq, d), q.dtype),
         compiler_params=backend.compiler_params(
-            backend="gpu", num_warps=4, num_stages=2),
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
         interpret=interpret,
         name="triton_flash_attention",
     )(q, k, v)

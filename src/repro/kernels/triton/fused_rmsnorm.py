@@ -9,12 +9,15 @@ needed Listing-3 layout hacks for).
 
 GPU restructure: a (128, 8192) f32 row block does not fit in a CTA's
 registers, so the kernel makes two passes over the feature dim in
-``BLOCK_D`` chunks — pass 1 accumulates the chained sum-of-squares MMA,
+``block_d`` chunks — pass 1 accumulates the chained sum-of-squares MMA,
 pass 2 re-reads x (L2-hot) and writes the normalised output. Unlike the TPU
 twin, the feature dim may be zero-padded: the true ``d`` is a separate
 static divisor, so Σx² over the padded row is exact.
 
-Grid: ``(rows / BLOCK_R,)``.
+Grid: ``(rows / row_block,)``. The block geometry and launch shape are
+caller-supplied (a resolved ``TuneSpec``, clamped against the actual
+feature dim by the glue — a ``block_d`` wider than the padded row shrinks
+to fit instead of crashing); defaults live in ``repro.kernels.layout``.
 """
 from __future__ import annotations
 
@@ -25,8 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
-
-TILE = 16  # tensor-core MMA fragment edge
+from repro.kernels.layout import MMA_TILE as TILE
+from repro.kernels.layout import default_tuning
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, d: int,
@@ -59,16 +62,22 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, d: int,
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "d", "block_r",
-                                             "block_d", "interpret"))
+                                             "block_d", "num_warps",
+                                             "num_stages", "interpret"))
 def triton_fused_rmsnorm(
     x: jax.Array, w: jax.Array, *, eps: float = 1e-6, d: int | None = None,
-    block_r: int = 16, block_d: int = 128, interpret: bool = False,
+    block_r: int | None = None, block_d: int | None = None,
+    num_warps: int | None = None, num_stages: int | None = None,
+    interpret: bool = False,
 ) -> jax.Array:
     """RMSNorm rows of ``x (rows, d_pad)`` by ``w (d_pad,)``.
 
     ``rows % block_r == 0`` and ``d_pad % block_d == 0`` (wrapper pads the
     feature dim with zeros and passes the true feature count as ``d``).
     """
+    spec = default_tuning("gpu", "rmsnorm")
+    block_r = block_r or spec["row_block"]
+    block_d = block_d or spec["block_d"]
     rows, d_pad = x.shape
     if d is None:
         d = d_pad
@@ -86,7 +95,9 @@ def triton_fused_rmsnorm(
         out_specs=pl.BlockSpec((block_r, d_pad), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d_pad), x.dtype),
         compiler_params=backend.compiler_params(
-            backend="gpu", num_warps=8, num_stages=2),
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
         interpret=interpret,
         name="triton_fused_rmsnorm",
     )(x, w.reshape(1, d_pad))

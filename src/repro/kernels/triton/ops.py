@@ -7,28 +7,31 @@ layouts (row-major segment rows — no transposed LoadTile). Registration
 happens in ``repro.kernels.ops`` next to the TPU entries; nothing here
 imports that module (it imports us).
 
-Every wrapper takes ``interpret=``: True runs the kernel body through the
-Pallas interpreter (how CI validates this subsystem on CPU); False compiles
-through Triton and therefore requires a GPU — forcing ``path="tile_gpu"``
-on a non-GPU host raises immediately rather than failing inside the
-compiler.
+Every wrapper takes ``interpret=`` (True runs the kernel body through the
+Pallas interpreter — how CI validates this subsystem on CPU; False
+compiles through Triton and therefore requires a GPU — forcing
+``path="tile_gpu"`` on a non-GPU host raises immediately rather than
+failing inside the compiler) and ``tuning=`` (the resolved
+``repro.core.policy.TuneSpec``; None falls back to the GPU defaults in
+``repro.kernels.layout``). Block knobs are clamped against the actual
+shape via :func:`repro.kernels.layout.fit_block` — a swept or
+hand-written spec shrinks to fit a small/unaligned dim (or the wrapper
+falls back to the oracle, the attention idiom) instead of crashing.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import backend, ref
-from repro.kernels.layout import nrows, pad_axis, ssd_fold, ssd_unfold
+from repro.kernels import backend, layout, ref
+from repro.kernels.layout import MMA_TILE as TILE
+from repro.kernels.layout import fit_block, nrows, pad_axis, ssd_fold, \
+    ssd_unfold
 from repro.kernels.triton.flash_attention import triton_flash_attention
 from repro.kernels.triton.fused_rmsnorm import triton_fused_rmsnorm
-from repro.kernels.triton.ssd_scan import TILE, triton_ssd_chunk_scan
+from repro.kernels.triton.ssd_scan import triton_ssd_chunk_scan
 from repro.kernels.triton.tcu_reduce import triton_segmented_reduce
 from repro.kernels.triton.tcu_scan import triton_segmented_scan
-
-BLOCK_S = 32   # segment rows per program (reduce/scan)
-BLOCK_N = 64   # column chunk per chained MMA
-SSD_Q = 64     # SSD chunk length
 
 
 def _require_gpu(interpret: bool, name: str) -> None:
@@ -40,52 +43,74 @@ def _require_gpu(interpret: bool, name: str) -> None:
             "validation, or the backend-agnostic path='tile' / 'auto'")
 
 
+def _knob(tuning, key: str, op: str) -> int:
+    """One GPU-geometry knob from the resolved TuneSpec (or the layout
+    default when no spec reached this glue — direct/legacy callers)."""
+    return layout.knob(tuning, key, "gpu", op)
+
+
+def _launch(tuning, op: str) -> dict:
+    """The Triton launch-shape knobs (``num_warps``/``num_stages``)."""
+    return {"num_warps": _knob(tuning, "num_warps", op),
+            "num_stages": _knob(tuning, "num_stages", op)}
+
+
 # ---------------------------------------------------------------------------
 # segmented reduce / scan
 
 
-def reduce_tile_gpu(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+def reduce_tile_gpu(x: jax.Array, *, tuning=None,
+                    interpret: bool = False) -> jax.Array:
     _require_gpu(interpret, "segmented_reduce")
     lead = x.shape[:-1]
     n = x.shape[-1]
     flat = x.reshape(-1, n)
+    bs = fit_block(flat.shape[0], _knob(tuning, "block_s", "reduce"), TILE)
+    bn = fit_block(n, _knob(tuning, "block_n", "reduce"), TILE)
     # row-major LoadTile: rows are segments; pad to the block grid
-    xp = pad_axis(pad_axis(flat, 0, BLOCK_S), 1, BLOCK_N)
-    out = triton_segmented_reduce(xp, block_s=BLOCK_S, block_n=BLOCK_N,
-                                  interpret=interpret)
+    xp = pad_axis(pad_axis(flat, 0, bs), 1, bn)
+    out = triton_segmented_reduce(xp, block_s=bs, block_n=bn,
+                                  interpret=interpret,
+                                  **_launch(tuning, "reduce"))
     return out[: flat.shape[0]].reshape(lead)
 
 
-def scan_tile_gpu(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+def scan_tile_gpu(x: jax.Array, *, tuning=None,
+                  interpret: bool = False) -> jax.Array:
     _require_gpu(interpret, "segmented_scan")
     lead = x.shape[:-1]
     n = x.shape[-1]
-    flat = pad_axis(pad_axis(x.reshape(-1, n), 0, BLOCK_S), 1, BLOCK_N)
-    out = triton_segmented_scan(flat, block_s=BLOCK_S, block_n=BLOCK_N,
-                                interpret=interpret)
-    return out[: nrows(lead), :n].reshape(*lead, n)
+    rows = nrows(lead)
+    bs = fit_block(rows, _knob(tuning, "block_s", "scan"), TILE)
+    bn = fit_block(n, _knob(tuning, "block_n", "scan"), TILE)
+    flat = pad_axis(pad_axis(x.reshape(-1, n), 0, bs), 1, bn)
+    out = triton_segmented_scan(flat, block_s=bs, block_n=bn,
+                                interpret=interpret,
+                                **_launch(tuning, "scan"))
+    return out[:rows, :n].reshape(*lead, n)
 
 
 # ---------------------------------------------------------------------------
 # weighted scan (the SSD kernel degenerated to N = P = 1, B = C = 1)
 
 
-def weighted_scan_tile_gpu(x: jax.Array, log_a: jax.Array, *,
+def weighted_scan_tile_gpu(x: jax.Array, log_a: jax.Array, *, tuning=None,
                            interpret: bool = False) -> jax.Array:
     _require_gpu(interpret, "weighted_scan")
     lead = x.shape[:-1]
     n = x.shape[-1]
     rows = nrows(lead)
+    q = fit_block(n, _knob(tuning, "q", "weighted_scan"), TILE)
     xf = x.reshape(rows, n).astype(jnp.float32)
     la = log_a.reshape(rows, n).astype(jnp.float32)
     # state dim N=1 and head dim P=1, padded to one MMA fragment edge:
     # b = c = e_1 make the recurrence y_t = h_t = exp(la_t) h_{t-1} + x_t.
-    xp = pad_axis(pad_axis(xf[..., None], 2, TILE), 1, SSD_Q)
-    lap = pad_axis(la, 1, SSD_Q)   # pad with 0 ⇒ decay 1, input 0: harmless
+    xp = pad_axis(pad_axis(xf[..., None], 2, TILE), 1, q)
+    lap = pad_axis(la, 1, q)       # pad with 0 ⇒ decay 1, input 0: harmless
     e1 = jnp.ones((rows, n, 1), jnp.float32)
-    e1 = pad_axis(pad_axis(e1, 2, TILE), 1, SSD_Q)
-    y, _ = triton_ssd_chunk_scan(xp, lap, e1, e1, q=SSD_Q,
-                                 interpret=interpret)
+    e1 = pad_axis(pad_axis(e1, 2, TILE), 1, q)
+    y, _ = triton_ssd_chunk_scan(xp, lap, e1, e1, q=q, interpret=interpret,
+                                 **_launch(tuning, "weighted_scan"))
     return y[:, :n, 0].reshape(*lead, n)
 
 
@@ -94,13 +119,21 @@ def weighted_scan_tile_gpu(x: jax.Array, log_a: jax.Array, *,
 
 
 def rmsnorm_tile_gpu_fwd(x: jax.Array, w: jax.Array, eps: float,
-                         interpret: bool) -> jax.Array:
+                         interpret: bool, tuning=None) -> jax.Array:
     _require_gpu(interpret, "rmsnorm")
     lead, d = x.shape[:-1], x.shape[-1]
-    flat = pad_axis(pad_axis(x.reshape(-1, d), 0, 16), 1, 128)
-    wp = pad_axis(w, 0, 128)
-    out = triton_fused_rmsnorm(flat, wp, eps=eps, d=d, interpret=interpret)
-    return out[: nrows(lead), :d].reshape(*lead, d)
+    rows = nrows(lead)
+    br = fit_block(rows, _knob(tuning, "row_block", "rmsnorm"), TILE)
+    # clamp block_d to the padded feature extent, then pad d to a multiple
+    # of the fitted block: divisibility holds for ANY d (the fix for the
+    # fixed-128 chunk crashing/padding-wasting lane-unaligned dims)
+    bd = fit_block(d, _knob(tuning, "block_d", "rmsnorm"), TILE)
+    flat = pad_axis(pad_axis(x.reshape(-1, d), 0, br), 1, bd)
+    wp = pad_axis(w, 0, bd)
+    out = triton_fused_rmsnorm(flat, wp, eps=eps, d=d, block_r=br,
+                               block_d=bd, interpret=interpret,
+                               **_launch(tuning, "rmsnorm"))
+    return out[:rows, :d].reshape(*lead, d)
 
 
 # ---------------------------------------------------------------------------
@@ -115,19 +148,22 @@ def ssd_tile_gpu(
     c: jax.Array,       # (B, L, G, N)
     *,
     return_state: bool = False,
+    tuning=None,
     interpret: bool = False,
 ):
     _require_gpu(interpret, "ssd_scan")
     bsz, seqlen, nheads, hdim = x.shape
     nstate = b.shape[3]
+    q = fit_block(seqlen, _knob(tuning, "q", "ssd"), TILE)
     xdt, lam, bb, cc = ssd_fold(x, dt, a, b, c)
     # pad P and N to the MMA fragment edge, L to the chunk length
-    xdt = pad_axis(pad_axis(xdt, 2, TILE), 1, SSD_Q)
-    lam = pad_axis(lam, 1, SSD_Q)
-    bb = pad_axis(pad_axis(bb, 2, TILE), 1, SSD_Q)
-    cc = pad_axis(pad_axis(cc, 2, TILE), 1, SSD_Q)
-    y, state = triton_ssd_chunk_scan(xdt, lam, bb, cc, q=SSD_Q,
-                                     interpret=interpret)
+    xdt = pad_axis(pad_axis(xdt, 2, TILE), 1, q)
+    lam = pad_axis(lam, 1, q)
+    bb = pad_axis(pad_axis(bb, 2, TILE), 1, q)
+    cc = pad_axis(pad_axis(cc, 2, TILE), 1, q)
+    y, state = triton_ssd_chunk_scan(xdt, lam, bb, cc, q=q,
+                                     interpret=interpret,
+                                     **_launch(tuning, "ssd"))
     return ssd_unfold(y, state, bsz=bsz, nheads=nheads, seqlen=seqlen,
                       hdim=hdim, nstate=nstate, out_dtype=x.dtype,
                       return_state=return_state)
@@ -140,12 +176,16 @@ def ssd_tile_gpu(
 def attention_tile_gpu(
     q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal: bool = True, window: int | None = None,
-    scale: float | None = None, interpret: bool = False,
+    scale: float | None = None, tuning=None, interpret: bool = False,
 ) -> jax.Array:
     _require_gpu(interpret, "attention")
     lq, lk, d = q.shape[2], k.shape[2], q.shape[3]
-    if lq % 64 or lk % 64 or d % TILE:  # kernel is block-strict -> oracle
+    bq = fit_block(lq, _knob(tuning, "block_q", "attention"), TILE)
+    bk = fit_block(lk, _knob(tuning, "block_k", "attention"), TILE)
+    if lq % bq or lk % bk or d % TILE:  # kernel is block-strict -> oracle
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                        scale=scale)
     return triton_flash_attention(q, k, v, causal=causal, window=window,
-                                  scale=scale, interpret=interpret)
+                                  scale=scale, block_q=bq, block_k=bk,
+                                  interpret=interpret,
+                                  **_launch(tuning, "attention"))

@@ -13,8 +13,10 @@ registers. The within-chunk cumulative decay Λ stays matmul-form (λ @ U),
 broadcast to a 16-row fragment so the MMA shape is legal (tl.dot needs
 M ≥ 16); all 16 result rows are identical and collapse without arithmetic.
 
-Grid: ``(B·H,)``; chunk length Q = 64 (two tensor-core fragments) by
-default — registers, not VMEM, bound the chunk size here.
+Grid: ``(B·H,)``; the default chunk length (two tensor-core fragments)
+lives in ``repro.kernels.layout`` — registers, not VMEM, bound the chunk
+size here, and the caller supplies it (a resolved ``TuneSpec``) along
+with the launch shape.
 """
 from __future__ import annotations
 
@@ -25,8 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
-
-TILE = 16  # tensor-core MMA fragment edge
+from repro.kernels.layout import MMA_TILE as TILE
+from repro.kernels.layout import default_tuning
 
 
 def _ssd_kernel(xdt_ref, lam_ref, b_ref, c_ref, y_ref, state_ref, *,
@@ -80,17 +82,22 @@ def _ssd_kernel(xdt_ref, lam_ref, b_ref, c_ref, y_ref, state_ref, *,
     state_ref[...] = h
 
 
-@functools.partial(jax.jit, static_argnames=("q", "interpret"))
+@functools.partial(jax.jit, static_argnames=("q", "num_warps", "num_stages",
+                                             "interpret"))
 def triton_ssd_chunk_scan(
     xdt: jax.Array,     # (BH, L, P)  dt-weighted inputs, P % 16 == 0 (padded)
     lam: jax.Array,     # (BH, L)     per-step log decay  a_h · dt
     b: jax.Array,       # (BH, L, N)  N % 16 == 0 (padded)
     c: jax.Array,       # (BH, L, N)
     *,
-    q: int = 64,
+    q: int | None = None,
+    num_warps: int | None = None,
+    num_stages: int | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked SSD scan. Returns (y (BH, L, P) f32, final_state (BH, N, P))."""
+    spec = default_tuning("gpu", "ssd")
+    q = q or spec["q"]
     bh, seqlen, hdim = xdt.shape
     nstate = b.shape[-1]
     if seqlen % q:
@@ -118,7 +125,9 @@ def triton_ssd_chunk_scan(
             jax.ShapeDtypeStruct((bh, nstate, hdim), jnp.float32),
         ],
         compiler_params=backend.compiler_params(
-            backend="gpu", num_warps=4, num_stages=2),
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
         interpret=interpret,
         name="triton_ssd_chunk_scan",
     )(xdt, lam, b, c)

@@ -19,7 +19,10 @@ tensor-core reduction follow-ups (arXiv:1903.03640, arXiv:2001.05585):
   nothing while keeping every ``jnp.dot`` shape MMA-legal (tl.dot needs
   M, N, K >= 16).
 
-Grid: ``(S / BLOCK_S,)`` — segment blocks parallel across CTAs.
+Grid: ``(S / block_s,)`` — segment blocks parallel across CTAs. The block
+geometry and launch shape (``num_warps``/``num_stages``) are
+caller-supplied (a resolved ``TuneSpec``); defaults live in
+``repro.kernels.layout``.
 """
 from __future__ import annotations
 
@@ -30,8 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
-
-TILE = 16  # tensor-core MMA fragment edge (the paper's WMMA 16x16x16)
+from repro.kernels.layout import MMA_TILE as TILE
+from repro.kernels.layout import default_tuning
 
 
 def _reduce_kernel(x_ref, o_ref, *, block_s: int, block_n: int, nchunks: int):
@@ -51,13 +54,19 @@ def _reduce_kernel(x_ref, o_ref, *, block_s: int, block_n: int, nchunks: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_s", "block_n", "interpret"))
-def triton_segmented_reduce(x: jax.Array, *, block_s: int = 32,
-                            block_n: int = 64,
+                   static_argnames=("block_s", "block_n", "num_warps",
+                                    "num_stages", "interpret"))
+def triton_segmented_reduce(x: jax.Array, *, block_s: int | None = None,
+                            block_n: int | None = None,
+                            num_warps: int | None = None,
+                            num_stages: int | None = None,
                             interpret: bool = False) -> jax.Array:
     """Reduce rows of ``x``: (s, n) -> (s,) f32. Rows are independent
     segments; ``s % block_s == 0`` and ``n % block_n == 0`` (wrapper pads).
     """
+    spec = default_tuning("gpu", "reduce")
+    block_s = block_s or spec["block_s"]
+    block_n = block_n or spec["block_n"]
     s, n = x.shape
     if s % block_s or n % block_n:
         raise ValueError(
@@ -70,7 +79,9 @@ def triton_segmented_reduce(x: jax.Array, *, block_s: int = 32,
         out_specs=pl.BlockSpec((block_s,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((s,), jnp.float32),
         compiler_params=backend.compiler_params(
-            backend="gpu", num_warps=4, num_stages=2),
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
         interpret=interpret,
         name="triton_segmented_reduce",
     )(x)

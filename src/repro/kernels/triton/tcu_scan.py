@@ -15,7 +15,9 @@ Paper mapping (Dakkak et al. ICS'19, Alg. 6), GPU-adapted:
   parallel and cannot carry state (unlike the TPU twin's sequential grid +
   VMEM scratch).
 
-Grid: ``(S / BLOCK_S,)``; layout row-major ``x (s, n)``, rows = segments.
+Grid: ``(S / block_s,)``; layout row-major ``x (s, n)``, rows = segments.
+The block geometry and launch shape are caller-supplied (a resolved
+``TuneSpec``); defaults live in ``repro.kernels.layout``.
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
+from repro.kernels.layout import default_tuning
 
 
 def _scan_kernel(x_ref, o_ref, *, block_s: int, block_n: int, nchunks: int):
@@ -51,15 +54,21 @@ def _scan_kernel(x_ref, o_ref, *, block_s: int, block_n: int, nchunks: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_s", "block_n", "interpret"))
-def triton_segmented_scan(x: jax.Array, *, block_s: int = 32,
-                          block_n: int = 64,
+                   static_argnames=("block_s", "block_n", "num_warps",
+                                    "num_stages", "interpret"))
+def triton_segmented_scan(x: jax.Array, *, block_s: int | None = None,
+                          block_n: int | None = None,
+                          num_warps: int | None = None,
+                          num_stages: int | None = None,
                           interpret: bool = False) -> jax.Array:
     """Inclusive scan along the last axis: (s, n) -> (s, n) f32.
 
     ``s % block_s == 0`` and ``n % block_n == 0`` (wrapper pads); rows are
     independent segments.
     """
+    spec = default_tuning("gpu", "scan")
+    block_s = block_s or spec["block_s"]
+    block_n = block_n or spec["block_n"]
     s, n = x.shape
     if s % block_s or n % block_n:
         raise ValueError(
@@ -72,7 +81,9 @@ def triton_segmented_scan(x: jax.Array, *, block_s: int = 32,
         out_specs=pl.BlockSpec((block_s, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
         compiler_params=backend.compiler_params(
-            backend="gpu", num_warps=4, num_stages=2),
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
         interpret=interpret,
         name="triton_segmented_scan",
     )(x)

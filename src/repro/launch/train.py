@@ -81,12 +81,17 @@ def main() -> None:
                          "optimizer's global-norm reduce: a path label, "
                          "an op=path,op=path override list, or a JSON "
                          "object of policy fields")
+    ap.add_argument("--tune", default=None,
+                    help="per-op kernel tuning overrides layered on the "
+                         "policy: op.knob=value pairs, e.g. "
+                         "'ssd.q=64,attention.block_q=256'")
     ap.add_argument("--kernel-path", default=None, choices=dispatch.PATHS,
                     help="deprecated alias for --policy <path-label>")
     args = ap.parse_args()
 
     pol = kpolicy.policy_from_cli(args.policy, args.kernel_path,
-                                  "deprecated:launch.train.kernel_path")
+                                  "deprecated:launch.train.kernel_path",
+                                  tune_arg=args.tune)
 
     mod = configs.get(args.arch)
     cfg = mod.SMOKE if args.config == "smoke" else mod.FULL

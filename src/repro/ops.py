@@ -23,6 +23,15 @@ Scoped overrides compose through :func:`using_policy` /
                                    op_paths={"attention": "fused"})):
         ops.attention(q, k, v)             # per-op override beats global
 
+Kernel *geometry* is part of the policy too: :class:`TuneSpec` carries
+per-op block/chunk knobs and ``KernelPolicy(op_tuning={"ssd": {"q":
+64}})`` (or the ``"tile,ssd.q=64"`` string shorthand) overrides how the
+tile kernels run, not just which path does.
+
+:func:`dist_weighted_scan` is the multi-device composition of
+``weighted_scan`` (the paper's grid-level scan-then-propagate) for use
+inside ``shard_map``; it takes an axis name instead of a policy.
+
 The exported surface is exactly ``__all__``; a CI test pins it. The
 ``path=`` kwarg is a deprecated alias for a bare-label policy and warns
 once per process.
@@ -33,8 +42,11 @@ import jax
 
 from repro.core import dispatch as _dispatch
 from repro.core import policy as _policy
+from repro.core.distributed import \
+    dist_weighted_scan  # noqa: F401  (re-exported API)
 from repro.core.policy import (  # noqa: F401  (re-exported API)
     KernelPolicy,
+    TuneSpec,
     get_policy,
     set_policy,
     using_policy,
@@ -43,7 +55,9 @@ from repro.kernels import ops as _kops
 
 __all__ = [
     "KernelPolicy",
+    "TuneSpec",
     "attention",
+    "dist_weighted_scan",
     "get_policy",
     "ragged_reduce",
     "ragged_scan",

@@ -169,8 +169,10 @@ class ServingEngine:
 
 
 def demo_engine(bundle: Bundle, *, slots: int = 4, max_new: int = 16,
-                seed: int = 0) -> ServingEngine:
+                seed: int = 0,
+                policy: "KernelPolicy | str | None" = None) -> ServingEngine:
     params = init_params(jax.random.PRNGKey(seed), bundle.params_pspec,
                          bundle.cfg.dtype)
     return ServingEngine(bundle, params, ServeConfig(slots=slots,
-                                                     max_new=max_new))
+                                                     max_new=max_new,
+                                                     policy=policy))

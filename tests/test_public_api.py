@@ -17,8 +17,10 @@ DOCUMENTED = {
     # the paper's ops
     "reduce", "scan", "weighted_scan", "ragged_reduce", "ragged_scan",
     "rmsnorm", "attention", "ssd",
-    # the policy surface
-    "KernelPolicy", "get_policy", "set_policy", "using_policy",
+    # the multi-device composition of weighted_scan (shard_map body)
+    "dist_weighted_scan",
+    # the policy + tuning surface
+    "KernelPolicy", "TuneSpec", "get_policy", "set_policy", "using_policy",
 }
 
 
@@ -33,6 +35,7 @@ def test_all_is_exactly_the_documented_surface():
 def test_lazy_package_attr():
     assert repro.ops is rops
     assert repro.KernelPolicy is KernelPolicy
+    assert repro.TuneSpec is rops.TuneSpec
     with pytest.raises(AttributeError):
         repro.nonexistent_attr
 

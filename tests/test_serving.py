@@ -118,6 +118,9 @@ def test_engine_whole_policy_comparison_invalidates_bundle():
     for changed in (
             dataclasses.replace(pol, autotune="off"),
             dataclasses.replace(pol, op_paths={"attention": "baseline"}),
+            # a tuning-only change invalidates too: the jitted steps baked
+            # the old kernel geometry in
+            dataclasses.replace(pol, op_tuning={"ssd": {"q": 64}}),
     ):
         eng = ServingEngine(bundle, params,
                             ServeConfig(slots=1, max_new=2, policy=changed))

@@ -1,0 +1,618 @@
+"""TuneSpec subsystem tests: spec validation (typo'd knobs fail loudly),
+policy ``op_tuning`` normalisation and shorthands, resolve() returning the
+spec alongside the path, every TPU and Triton kernel consuming caller-
+supplied geometry (numerically identical to the oracle), the v3 autotune
+sweep round-trip, and the grep guards banning literal block/chunk/warp
+constants outside ``kernels/layout.py`` and direct ``repro.core``/
+``repro.kernels`` imports in ``examples/``."""
+import dataclasses
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core import policy as kpolicy
+from repro.core.policy import KernelPolicy, ResolvedPath, TuneSpec
+from repro.kernels import backend, layout, ops, ref
+from repro.kernels.triton import ops as tops
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+EXAMPLES = Path(__file__).resolve().parents[1] / "examples"
+
+KERNEL_OPS = ("reduce", "scan", "weighted_scan", "rmsnorm", "attention",
+              "ssd")
+
+
+# ---------------------------------------------------------------------------
+# TuneSpec validation
+
+
+def test_tunespec_normalises_and_hashes():
+    a = TuneSpec("reduce", {"block_n": 64, "block_s": 32})
+    b = TuneSpec("reduce", (("block_s", 32), ("block_n", 64)))
+    assert a == b and hash(a) == hash(b)
+    assert a.knobs == (("block_n", 64), ("block_s", 32))   # sorted
+    assert a.get("block_s") == 32 and a.get("num_warps") is None
+    assert a.as_dict() == {"block_n": 64, "block_s": 32}
+    assert a.label() == "block_n=64;block_s=32"
+    assert TuneSpec("ssd").label() == "-"
+    # kernel-registry spellings alias onto the canonical op names
+    assert TuneSpec("segmented_reduce", {"block_s": 32}).op == "reduce"
+    assert TuneSpec("ssd_scan", {"q": 64}).op == "ssd"
+
+
+def test_tunespec_typod_knob_raises():
+    """A typo'd knob must raise at construction — a silently never-matching
+    knob is the no-op failure mode this subsystem exists to remove."""
+    with pytest.raises(ValueError, match="unknown knob"):
+        TuneSpec("reduce", {"blck_s": 32})
+    with pytest.raises(ValueError, match="unknown knob"):
+        TuneSpec("ssd", {"block_s": 32})     # wrong op's knob
+    with pytest.raises(ValueError, match="unknown op"):
+        TuneSpec("atention", {"block_q": 64})
+    # ragged ops have no kernel, hence an empty schema: any knob rejects
+    with pytest.raises(ValueError, match="unknown knob"):
+        TuneSpec("ragged_reduce", {"block_s": 32})
+
+
+def test_tunespec_value_validation():
+    for bad in (0, -8, "64", 3.5, True):
+        with pytest.raises(ValueError, match="positive int"):
+            TuneSpec("reduce", {"block_s": bad})
+
+
+def test_tunespec_from_spec_string_and_mismatch():
+    assert TuneSpec.from_spec("ssd", "q=64,num_warps=8") == \
+        TuneSpec("ssd", {"q": 64, "num_warps": 8})
+    with pytest.raises(ValueError, match="knob=value"):
+        TuneSpec.from_spec("ssd", "q:64")
+    with pytest.raises(ValueError, match="used under"):
+        TuneSpec.from_spec("reduce", TuneSpec("ssd", {"q": 64}))
+    with pytest.raises(TypeError):
+        TuneSpec.from_spec("ssd", 64)
+
+
+def test_knob_schema_covers_known_ops_and_layout_defaults_validate():
+    """Every op has a schema entry; every default/candidate value table in
+    kernels/layout.py constructs a valid TuneSpec (the schema is the
+    contract between the two modules)."""
+    assert set(kpolicy.KNOB_SCHEMA) == set(kpolicy.KNOWN_OPS)
+    for bk in ("tpu", "gpu"):
+        for op in kpolicy.KNOWN_OPS:
+            TuneSpec(op, layout.default_tuning(bk, op))
+            for cand in layout.candidate_tuning(bk, op):
+                TuneSpec(op, cand)
+
+
+# ---------------------------------------------------------------------------
+# KernelPolicy.op_tuning + shorthands
+
+
+def test_policy_op_tuning_normalises_and_validates():
+    a = KernelPolicy(op_tuning={"ssd": {"q": 64}})
+    b = KernelPolicy(op_tuning=(("ssd_scan", TuneSpec("ssd", {"q": 64})),))
+    assert a == b and hash(a) == hash(b)
+    assert a.op_tuning == (("ssd", TuneSpec("ssd", {"q": 64})),)
+    with pytest.raises(ValueError, match="unknown op"):
+        KernelPolicy(op_tuning={"atention": {"block_q": 64}})
+    with pytest.raises(ValueError, match="unknown knob"):
+        KernelPolicy(op_tuning={"reduce": {"warp": 4}})
+
+
+def test_op_tuning_alias_entries_merge_and_conflict_raises():
+    """'ssd' and 'ssd_scan' are one op: knobs given under both spellings
+    merge into one entry (so semantically identical policies stay equal),
+    and a conflicting value for the same knob raises instead of silently
+    resolving by insertion order."""
+    a = KernelPolicy(op_tuning={"ssd": {"q": 256},
+                                "ssd_scan": {"num_warps": 8}})
+    assert a.op_tuning == (
+        ("ssd", TuneSpec("ssd", {"q": 256, "num_warps": 8})),)
+    with pytest.raises(ValueError, match="conflicting"):
+        KernelPolicy(op_tuning={"ssd": {"q": 256}, "ssd_scan": {"q": 128}})
+
+
+def test_policy_string_shorthand_dotted_tuning():
+    pol = KernelPolicy.from_spec("tile,ssd.q=64,reduce=baseline")
+    assert pol.path == "tile"
+    assert pol.op_paths == (("reduce", "baseline"),)
+    assert pol.op_tuning == (("ssd", TuneSpec("ssd", {"q": 64})),)
+    # JSON spelling
+    pol2 = KernelPolicy.from_spec(
+        '{"path": "interpret", "op_tuning": {"ssd": {"q": 64}}}')
+    assert pol2.path == "interpret"
+    assert pol2.op_tuning == pol.op_tuning
+    # alias in the dotted key
+    assert KernelPolicy.from_spec("ssd_scan.q=64").op_tuning == \
+        pol.op_tuning
+
+
+def test_policy_repr_roundtrips_with_tuning():
+    pol = KernelPolicy(path="interpret",
+                       op_tuning={"reduce": {"block_s": 256}})
+    assert eval(repr(pol), {"KernelPolicy": KernelPolicy,
+                            "TuneSpec": TuneSpec}) == pol
+
+
+def test_policy_from_cli_tune_arg():
+    pol = kpolicy.policy_from_cli("interpret", None, "test:tune",
+                                  tune_arg="ssd.q=64")
+    assert pol.path == "interpret"
+    assert pol.op_tuning == (("ssd", TuneSpec("ssd", {"q": 64})),)
+    # --tune alone still yields a policy (on the env default)
+    pol2 = kpolicy.policy_from_cli(None, None, "test:tune2",
+                                   tune_arg="reduce.block_n=256")
+    assert pol2 is not None
+    assert dict(pol2.op_tuning)["reduce"].get("block_n") == 256
+    with pytest.raises(ValueError, match="op.knob"):
+        kpolicy.policy_from_cli(None, None, "test:tune3", tune_arg="q=64")
+    # every comma part is validated: a path override smuggled after a
+    # valid pair must raise, not silently change which formulation runs
+    with pytest.raises(ValueError, match="belong in --policy"):
+        kpolicy.policy_from_cli(None, None, "test:tune4",
+                                tune_arg="ssd.q=64,attention=fused")
+
+
+# ---------------------------------------------------------------------------
+# resolve() returns the spec alongside the path
+
+
+def test_resolve_returns_resolved_path_with_tuning():
+    pol = KernelPolicy(path="interpret")
+    r = pol.resolve(op="reduce", n=2048, dtype=jnp.float32)
+    assert isinstance(r, ResolvedPath) and isinstance(r, str)
+    assert r == "interpret"                       # str semantics intact
+    assert r.tuning == TuneSpec("reduce", layout.default_tuning(
+        "tpu", "reduce"))
+    # the bucket-axis knob is clamped to the call size: the reported spec
+    # is the geometry that runs, not the requested phantom
+    small = pol.resolve(op="reduce", n=64, dtype=jnp.float32).tuning
+    assert small.get("block_n") == 64 and small.get("block_s") == 128
+    # no op context -> no spec
+    assert pol.resolve(explicit="fused").tuning is None
+    # ragged ops resolve an empty spec (no kernel, no knobs)
+    assert pol.resolve(op="ragged_scan", n=64).tuning == \
+        TuneSpec("ragged_scan")
+
+
+def test_op_tuning_override_beats_defaults():
+    pol = KernelPolicy(path="interpret",
+                       op_tuning={"reduce": {"block_n": 256}})
+    spec = pol.resolve(op="reduce", n=2048, dtype=jnp.float32).tuning
+    assert spec.get("block_n") == 256
+    # untouched knobs keep the layout default
+    assert spec.get("block_s") == \
+        layout.default_tuning("tpu", "reduce")["block_s"]
+    # aliases steer the same override
+    assert pol.resolve(op="segmented_reduce", n=2048).tuning == spec
+
+
+def test_table_tuning_overlays_defaults_and_override_beats_table(
+        tmp_path, monkeypatch):
+    bk = autotune.current_backend()
+    table = {"version": autotune.TABLE_VERSION, "backends": {bk: {
+        "jax": jax.__version__, "entries": {
+            "reduce/f32/11": {"path": "fused", "us": {},
+                              "tuning": {"block_n": 256}}}}}}
+    path = tmp_path / "t.json"
+    autotune.save_table(table, path)
+    pol = KernelPolicy(path="interpret", autotune_table=str(path))
+    spec = pol.resolve(op="reduce", n=2048, dtype=jnp.float32).tuning
+    assert spec.get("block_n") == 256             # table wins over default
+    off = dataclasses.replace(pol, autotune="off")
+    assert off.resolve(op="reduce", n=2048,
+                       dtype=jnp.float32).tuning.get("block_n") == \
+        layout.default_tuning("tpu", "reduce")["block_n"]
+    ov = dataclasses.replace(pol, op_tuning={"reduce": {"block_n": 128}})
+    assert ov.resolve(op="reduce", n=2048,
+                      dtype=jnp.float32).tuning.get("block_n") == 128
+    autotune.invalidate_cache()
+
+
+# ---------------------------------------------------------------------------
+# every kernel consumes caller-supplied geometry (interpret mode on CPU)
+
+
+def _ssd_case(L=300):
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = 0.2 * jax.random.normal(ks[0], (1, L, 2, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, L, 2)))
+    a = -jnp.exp(0.1 * jax.random.normal(ks[2], (2,)))
+    b = jax.random.normal(ks[3], (1, L, 1, 4)) / 2.0
+    c = jax.random.normal(ks[4], (1, L, 1, 4)) / 2.0
+    return x, dt, a, b, c
+
+
+@pytest.mark.parametrize("tuning", [
+    {"reduce": {"block_s": 256, "block_n": 8}},
+    {"reduce": {"block_s": 128, "block_n": 256}},
+])
+def test_tpu_reduce_kernel_honours_spec(tuning):
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 300))
+    pol = KernelPolicy(path="interpret", op_tuning=tuning)
+    got = ops.segmented_reduce(x, policy=pol)
+    np.testing.assert_allclose(got, ref.segmented_reduce_ref(x),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("tuning", [
+    {"scan": {"block_s": 8, "block_n": 256}},
+    {"scan": {"block_s": 256, "block_n": 128}},
+])
+def test_tpu_scan_kernel_honours_spec(tuning):
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 300))
+    pol = KernelPolicy(path="interpret", op_tuning=tuning)
+    got = ops.segmented_scan(x, policy=pol)
+    np.testing.assert_allclose(got, ref.segmented_scan_ref(x),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_tpu_weighted_scan_and_ssd_honour_chunk_spec():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 300))
+    la = -jax.random.uniform(jax.random.PRNGKey(3), (3, 300))
+    pol = KernelPolicy(path="interpret",
+                       op_tuning={"weighted_scan": {"q": 256},
+                                  "ssd": {"q": 256}})
+    got = ops.weighted_scan(x, la, policy=pol)
+    np.testing.assert_allclose(got, ref.weighted_scan_ref(x, la),
+                               rtol=1e-4, atol=1e-3)
+    args = _ssd_case()
+    y = ops.ssd_scan(*args, policy=pol)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.ssd_scan_ref(*args)),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_tpu_rmsnorm_and_attention_honour_block_spec():
+    h = jax.random.normal(jax.random.PRNGKey(4), (4, 256))
+    w = jnp.ones((256,))
+    # block_q=64 is below one lane tile: the glue must pass it through
+    # (the kernel only needs a sublane multiple), not round it up to 128
+    pol = KernelPolicy(path="interpret",
+                       op_tuning={"rmsnorm": {"row_block": 8},
+                                  "attention": {"block_q": 64,
+                                                "block_k": 256}})
+    got = ops.rmsnorm(h, w, policy=pol)
+    np.testing.assert_allclose(got, ref.rmsnorm_ref(h, w),
+                               rtol=1e-4, atol=1e-4)
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 128))
+    k = jax.random.normal(ks[1], (1, 2, 256, 128))
+    v = jax.random.normal(ks[2], (1, 2, 256, 128))
+    at = ops.attention(q, k, v, policy=pol)
+    np.testing.assert_allclose(np.asarray(at),
+                               np.asarray(ref.flash_attention_ref(q, k, v)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("spec", [
+    None,
+    TuneSpec("reduce", {"block_s": 64, "block_n": 128, "num_warps": 8,
+                        "num_stages": 3}),
+])
+def test_triton_reduce_scan_honour_spec(spec):
+    x = jax.random.normal(jax.random.PRNGKey(6), (5, 300))
+    got = tops.reduce_tile_gpu(x, tuning=spec, interpret=True)
+    np.testing.assert_allclose(got, ref.segmented_reduce_ref(x),
+                               rtol=1e-4, atol=1e-3)
+    sspec = None if spec is None else \
+        TuneSpec("scan", {"block_s": 64, "block_n": 128})
+    got = tops.scan_tile_gpu(x, tuning=sspec, interpret=True)
+    np.testing.assert_allclose(got, ref.segmented_scan_ref(x),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_triton_ssd_weighted_scan_honour_spec():
+    x = jax.random.normal(jax.random.PRNGKey(8), (3, 200))
+    la = -jax.random.uniform(jax.random.PRNGKey(9), (3, 200))
+    spec = TuneSpec("weighted_scan", {"q": 128})
+    got = tops.weighted_scan_tile_gpu(x, la, tuning=spec, interpret=True)
+    np.testing.assert_allclose(got, ref.weighted_scan_ref(x, la),
+                               rtol=1e-4, atol=1e-3)
+    args = _ssd_case(200)
+    y = tops.ssd_tile_gpu(*args, tuning=TuneSpec("ssd", {"q": 128}),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.ssd_scan_ref(*args)),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_triton_rmsnorm_block_d_clamps_to_small_or_unaligned_d():
+    """The satellite fix: a block_d wider than the (padded) feature dim —
+    the old hard-coded 128 on d=50 — must shrink to fit instead of
+    crashing or padding 2.5x, for any caller-supplied spec."""
+    for d in (24, 50, 130):
+        x = jax.random.normal(jax.random.PRNGKey(d), (3, d))
+        w = jnp.ones((d,))
+        for spec in (None,
+                     TuneSpec("rmsnorm", {"block_d": 128, "row_block": 32}),
+                     TuneSpec("rmsnorm", {"block_d": 333})):
+            got = tops.rmsnorm_tile_gpu_fwd(x, w, 1e-6, True, spec)
+            np.testing.assert_allclose(got, ref.rmsnorm_ref(x, w),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_triton_attention_honours_spec_with_oracle_fallback():
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    spec = TuneSpec("attention", {"block_q": 32, "block_k": 128})
+    got = tops.attention_tile_gpu(q, k, v, tuning=spec, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.flash_attention_ref(q, k, v)),
+                               rtol=1e-4, atol=1e-3)
+    # unaligned length under any spec -> oracle, never a crash
+    qq = jax.random.normal(ks[0], (1, 2, 100, 32))
+    got = tops.attention_tile_gpu(qq, qq, qq, tuning=spec, interpret=True)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_registry_declares_knobs_and_candidates():
+    """PallasOp entries carry the knob schema and expose >= 2 sweepable
+    candidate specs per kernel family on both backends (the acceptance
+    contract for the autotune sweep)."""
+    for name in backend.available_ops():
+        op = backend.get_op(name)
+        canon = kpolicy.OP_ALIASES.get(name, name)
+        assert op.knobs == kpolicy.KNOB_SCHEMA[canon]
+        assert op.knobs, name                     # all 5 families tunable
+        for bk in ("tpu", "gpu"):
+            cands = op.candidate_tuning(bk)
+            assert len(cands) >= 2, (name, bk)
+            assert op.default_tuning(bk)
+
+
+def test_grads_flow_through_tuned_kernel_paths():
+    """The _diff_via_ref wrapper must keep tuning out of the oracle
+    backward: gradients flow and match the fused path."""
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, 300))
+    pol = KernelPolicy(path="interpret",
+                       op_tuning={"reduce": {"block_n": 256}})
+    g_tuned = jax.grad(lambda a: ops.segmented_reduce(
+        a, policy=pol).sum())(x)
+    g_fused = jax.grad(lambda a: ops.segmented_reduce(
+        a, policy="fused").sum())(x)
+    np.testing.assert_allclose(np.asarray(g_tuned), np.asarray(g_fused),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# autotune v3: upconvert, sweep, round-trip
+
+
+def test_v2_table_upconverts_to_v3(tmp_path, monkeypatch):
+    """A v2 file (backend sections, no tuning) loads as v3; its buckets
+    steer paths as before and resolve the layout-default geometry."""
+    path = tmp_path / "v2.json"
+    path.write_text('{"version": 2, "backends": {"%s": {"jax": "x", '
+                    '"entries": {"reduce/f32/4": {"path": "baseline", '
+                    '"us": {}}}}}}' % autotune.current_backend())
+    loaded = autotune.load_table(path)
+    assert loaded["version"] == autotune.TABLE_VERSION
+    pol = KernelPolicy(path="auto", autotune_table=str(path))
+    autotune.invalidate_cache()
+    r = pol.resolve(op="reduce", n=16, dtype=jnp.float32)
+    assert r == "baseline"
+    # layout defaults, bucket-axis knob clamped to the call size
+    assert r.tuning == TuneSpec(
+        "reduce", layout.clamp_spec(
+            "tpu", "reduce", layout.default_tuning("tpu", "reduce"), n=16))
+    assert r.tuning.get("block_n") == 16
+    autotune.invalidate_cache()
+
+
+def test_explicit_table_unknown_knob_fails_loudly(tmp_path, monkeypatch):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 3, "backends": {"cpu": {"entries": '
+                    '{"reduce/f32/4": {"path": "fused", "us": {}, '
+                    '"tuning": {"warp_block": 4}}}}}}')
+    with pytest.raises(ValueError, match="unknown tuning knob"):
+        autotune.load_table(path)
+    monkeypatch.setenv(autotune.ENV_TABLE, str(path))
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.invalidate_cache()
+    with pytest.raises(ValueError, match="unusable"):
+        autotune.current_table()
+    autotune.invalidate_cache()
+
+
+def test_sweep_emits_v3_tuning_that_roundtrips(tmp_path):
+    """--write's sweep: >= 2 candidate specs timed per op (at a bucket
+    size where they stay distinct after the clamp), the winner persisted
+    as the entry's tuning, and resolvable back out of the table through
+    KernelPolicy.resolve (the acceptance contract)."""
+    table = autotune.measure_table(
+        ops=("reduce",), bands=(10,), dtypes=(jnp.float32,), iters=1,
+        sweep_interpret=True, max_candidates=2)
+    bk = autotune.current_backend()
+    ent = table["backends"][bk]["entries"]["reduce/f32/10"]
+    assert len(ent["sweep"]) >= 2
+    assert ent["tuning"] in [
+        {k: v for k, v in sorted(c.items())}
+        for c in layout.candidate_tuning(
+            "gpu" if bk == "gpu" else "tpu", "reduce")]
+    path = tmp_path / "swept.json"
+    autotune.save_table(table, path)
+    pol = KernelPolicy(path="auto", autotune_table=str(path))
+    spec = pol.resolve(op="reduce", n=1024, dtype=jnp.float32).tuning
+    for k, v in ent["tuning"].items():
+        assert spec.get(k) == v
+    autotune.invalidate_cache()
+
+
+def test_sweep_deterministic_structure_on_cpu_interpret():
+    """Two identical sweeps produce the same bucket keys, the same sweep
+    labels, and winners drawn from the clamped candidate set — timing
+    noise may move the argmin, never the structure. At a tiny bucket the
+    candidates collapse onto ONE executed geometry and the sweep must
+    dedupe to a single timing (a 'winner' between identical executions
+    would be pure noise)."""
+    kw = dict(ops=("reduce", "scan"), bands=(4,), dtypes=(jnp.float32,),
+              iters=1, sweep_interpret=True, max_candidates=2)
+    t1 = autotune.measure_table(**kw)
+    t2 = autotune.measure_table(**kw)
+    bk = autotune.current_backend()
+    axis = "gpu" if bk == "gpu" else "tpu"
+    e1, e2 = (t["backends"][bk]["entries"] for t in (t1, t2))
+    assert set(e1) == set(e2) == {"reduce/f32/4", "scan/f32/4"}
+    rows = max(4, min(4096, (1 << 16) // 16))   # _bench_inputs' grid
+    for key in e1:
+        assert set(e1[key]["sweep"]) == set(e2[key]["sweep"])
+        assert set(e1[key]["us"]) == set(e2[key]["us"])
+        op = key.split("/")[0]
+        execs, persisted = [], []
+        for c in layout.candidate_tuning(axis, op)[:2]:
+            ex = layout.clamp_spec(axis, op, c, n=16, rows=rows)
+            if ex not in execs:
+                execs.append(ex)
+                persisted.append(layout.clamp_spec(axis, op, c, n=16))
+        assert len(e1[key]["sweep"]) == len(execs)
+        for t in (e1, e2):
+            assert t[key]["tuning"] in [
+                {k: v for k, v in sorted(c.items())} for c in persisted]
+
+
+def test_sweep_persists_bucket_axis_clamp_only():
+    """Row-axis knobs must NOT be persisted at the probe input's row
+    count: at band 13 the probe has 8 rows, so the executed sweep runs
+    block_s=8, but a real call in that bucket won't share the probe's
+    batch — the table keeps the candidate's block_s and lets each call's
+    glue re-clamp."""
+    table = autotune.measure_table(
+        ops=("scan",), bands=(13,), dtypes=(jnp.float32,), iters=1,
+        sweep_interpret=True, max_candidates=2)
+    bk = autotune.current_backend()
+    ent = table["backends"][bk]["entries"]["scan/f32/13"]
+    axis = "gpu" if bk == "gpu" else "tpu"
+    want_bs = layout.candidate_tuning(axis, "scan")[0]["block_s"]
+    assert ent["tuning"]["block_s"] == want_bs   # not the probe's 8 rows
+
+
+def test_no_native_tile_no_sweep_without_interpret():
+    """The full-budget CPU --write must not drag interpret sweeps into the
+    measured table (orders of magnitude slow at real sizes): without a
+    native lowering and without sweep_interpret, entries carry no
+    tuning."""
+    if backend.native_tile_backend() is not None:
+        pytest.skip("host has a native tile lowering")
+    table = autotune.measure_table(ops=("reduce",), bands=(4,),
+                                   dtypes=(jnp.float32,), iters=1)
+    bk = autotune.current_backend()
+    ent = table["backends"][bk]["entries"]["reduce/f32/4"]
+    assert "tuning" not in ent and "sweep" not in ent
+    assert "interpret" not in ent["us"]
+
+
+# ---------------------------------------------------------------------------
+# grep guards
+
+
+def test_no_literal_geometry_constants_outside_layout():
+    """Block/chunk/warp numbers are data now: outside kernels/layout.py no
+    kernel file may define a geometry constant or default a geometry
+    argument/kwarg to an int literal — geometry arrives via TuneSpec."""
+    const_pat = re.compile(
+        r"^(?:Q|ROW_BLOCK|SSD_Q|BLOCK_[A-Z0-9_]+|LANES|SUBLANES|TILE"
+        r"|MMA_TILE)\s*=\s*\d+", re.MULTILINE)
+    kwarg_pat = re.compile(
+        r"\b(?:block_[a-z0-9]+|row_block|num_warps|num_stages|q)\s*"
+        r"(?::\s*[^=,()\n]+)?=\s*\d+")
+    offenders = []
+    for p in sorted((SRC / "kernels").rglob("*.py")):
+        rel = p.relative_to(SRC)
+        if rel.name == "layout.py":
+            continue
+        text = p.read_text()
+        for pat in (const_pat, kwarg_pat):
+            for m in pat.finditer(text):
+                line = text.count("\n", 0, m.start()) + 1
+                offenders.append(f"{rel}:{line}:{m.group(0)!r}")
+    assert not offenders, (
+        f"literal kernel geometry outside kernels/layout.py: {offenders}; "
+        "take block/chunk/warp values from the resolved TuneSpec "
+        "(defaults live in repro.kernels.layout)")
+
+
+def test_examples_use_public_facade_only():
+    """Mirrors the src/ consumer-discipline guard: examples must go
+    through the stable repro.ops facade (+ policy=) — never import
+    repro.core or repro.kernels directly."""
+    pat = re.compile(
+        r"^\s*(?:from\s+repro\.(?:core|kernels)[.\s]"
+        r"|import\s+repro\.(?:core|kernels)\b)", re.MULTILINE)
+    offenders = []
+    for p in sorted(EXAMPLES.glob("*.py")):
+        if pat.search(p.read_text()):
+            offenders.append(p.name)
+    assert not offenders, (
+        f"direct repro.core/repro.kernels import in examples: {offenders}; "
+        "use the stable repro.ops facade (policy=, op_tuning) instead")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: pallas_op threads the spec; tuning shows up in benchmarks
+
+
+def test_pallas_op_threads_spec_into_kernel(monkeypatch):
+    """Prove the resolved spec reaches the kernel: a q too small for the
+    TPU SSD kernel would be clamped by the glue, so instead spy on the
+    kernel entry via the registry wrapper path — run under two specs and
+    check both produce oracle-identical results while resolve() reports
+    the requested geometry."""
+    pol = KernelPolicy(path="interpret", op_tuning={"ssd": {"q": 256}})
+    assert pol.resolve(op="ssd_scan", level="kernel").tuning.get("q") == 256
+    args = _ssd_case(512)
+    y1 = ops.ssd_scan(*args, policy=pol)
+    y2 = ops.ssd_scan(*args, policy="interpret")   # default q
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_table_tuning_reaches_model_level_kernels(tmp_path, monkeypatch):
+    """pallas_op extracts shape context for EVERY family (not just the
+    reduction ops), so a v3 table's swept tuning for ssd/attention/rmsnorm
+    actually reaches the kernel — spy on the registry entry to prove the
+    spec that arrives is the table's, and that kernel-level ``auto`` for
+    the model ops still keeps the static choice when the bucket has no
+    entry (their ref twin is the materialised oracle)."""
+    bk = autotune.current_backend()
+    L = 512
+    band = autotune.band(L)
+    table = {"version": autotune.TABLE_VERSION, "backends": {bk: {
+        "jax": jax.__version__, "entries": {
+            f"ssd/f32/{band}": {"path": "interpret", "us": {},
+                                "tuning": {"q": 256}}}}}}
+    path = tmp_path / "t.json"
+    autotune.save_table(table, path)
+    seen = {}
+    real = backend.get_op("ssd_scan")
+    spy = dataclasses.replace(
+        real, tile=lambda *a, tuning=None, **kw: seen.update(
+            t=tuning) or real.tile(*a, tuning=tuning, **kw))
+    monkeypatch.setitem(backend._REGISTRY, "ssd_scan", spy)
+    pol = KernelPolicy(path="auto", autotune_table=str(path))
+    args = _ssd_case(L)
+    ops.ssd_scan(*args, policy=pol)          # auto -> table: interpret
+    assert seen["t"].get("q") == 256
+    # no entry for this bucket: kernel-level auto keeps the static choice
+    # (fused off-accelerator) instead of the FUSED_DEFAULT_OPS heuristic
+    # rerouting direct registry calls
+    if backend.native_tile_backend() is None:
+        assert pol.resolve(op="ssd_scan", n=1 << 15,
+                           level="kernel") == "fused"
+    autotune.invalidate_cache()
+
+
+def test_benchmark_tuning_label():
+    from benchmarks.common import tuning_label
+
+    lbl = tuning_label("interpret", "reduce", 64, jnp.float32)
+    assert "block_n=" in lbl and "block_s=" in lbl
+    assert tuning_label("fused", "reduce", 64) == "-"
+    assert tuning_label("tile_gpu", "reduce", 64) == "-" or \
+        backend.native_tile_backend() == "tile_gpu"
