@@ -33,6 +33,7 @@ BENCHES = [
     ("fig13_14_full_reduce_scan", "benchmarks.full_collectives_bench"),
     ("sec6_3_alu_mix_power_proxy", "benchmarks.alu_mix_bench"),
     ("ssd_weighted_scan", "benchmarks.ssd_bench"),
+    ("serving_open_loop", "benchmarks.serving_bench"),
 ]
 
 

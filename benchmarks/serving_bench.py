@@ -1,0 +1,137 @@
+"""Beyond-paper table: open-loop serving — continuous batching vs the wave
+baseline on one synthetic Poisson workload.
+
+The paper's small-segment reduce/scan primitives do the per-token math of
+a decode step (softmax, RMSNorm, SSD); whether they stay busy is a
+scheduling question. This benchmark drives both schedulers with the same
+open-loop arrival trace — mixed prompt/output lengths with one
+deliberately long sequence near the front — and reports throughput and
+per-token completion latency (emission minus request arrival). The wave
+scheduler strands short requests behind the long sequence's wave barrier;
+the continuous scheduler refills each slot as it frees, so the p99 gap is
+the checked-in number the refactor is judged by.
+
+Writes ``BENCH_serving.json`` (one row per scheduler x offered load) and
+prints the usual CSV block. ``--budget tiny`` is the CI smoke shape.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+try:
+    from benchmarks.common import print_csv
+except ModuleNotFoundError:     # run as a script: sys.path[0] is
+    import os                   # benchmarks/, not the repo root
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import print_csv
+
+BUDGETS = {
+    # n_req, slots, short max_new range, long max_new, prefill_chunk, loads
+    "tiny": dict(n_req=8, slots=2, short=(3, 7), long_new=24,
+                 prefill_chunk=8, loads=(8.0,)),
+    "full": dict(n_req=24, slots=4, short=(4, 12), long_new=48,
+                 prefill_chunk=16, loads=(4.0, 16.0)),
+}
+
+
+def make_workload(n_req, rate, vocab, *, short, long_new, seed=0):
+    """Poisson arrivals at ``rate`` req/s; prompts 4-24 tokens; short
+    decode budgets except request 1, which is deliberately long (the wave
+    barrier the continuous scheduler must not inherit)."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n_req):
+        t += float(rng.exponential(1.0 / rate))
+        max_new = long_new if i == 1 else int(rng.integers(*short))
+        prompt = rng.integers(3, vocab, size=int(rng.integers(4, 24)),
+                              dtype=np.int32)
+        reqs.append(Request(uid=i, prompt=prompt, max_new=max_new,
+                            arrival_s=t))
+    return reqs
+
+
+def _metrics(results):
+    lats = [1e3 * (ts - r.arrival_s) for r in results for ts in r.token_s]
+    total = sum(len(r.tokens) for r in results)
+    makespan = (max(r.finish_s for r in results)
+                - min(r.arrival_s for r in results))
+    return {
+        "throughput_tok_s": round(total / max(makespan, 1e-9), 2),
+        "p50_ms": round(float(np.percentile(lats, 50)), 2),
+        "p99_ms": round(float(np.percentile(lats, 99)), 2),
+        "total_tokens": total,
+        "makespan_s": round(makespan, 4),
+    }
+
+
+def run(budget: str = "tiny", arch: str = "llama3.2-1b",
+        policy=None) -> list[dict]:
+    import jax
+
+    from repro import configs
+    from repro.models import build
+    from repro.models.common import init_params
+    from repro.serving import ServeConfig, ServingEngine
+
+    shape = BUDGETS[budget]
+    mod = configs.get(arch)
+    cfg = mod.SMOKE
+    bundle = build(cfg)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         cfg.dtype)
+
+    rows = []
+    for rate in shape["loads"]:
+        for sched in ("wave", "continuous"):
+            eng = ServingEngine(bundle, params, ServeConfig(
+                slots=shape["slots"], max_new=16, eos_token=-1,
+                scheduler=sched, prefill_chunk=shape["prefill_chunk"],
+                policy=policy))
+            wl = lambda: make_workload(
+                shape["n_req"], rate, cfg.vocab,
+                short=shape["short"], long_new=shape["long_new"])
+            eng.run(wl())                   # warmup: compiles out of the
+            results = eng.run(wl())         # measured pass
+            pol = eng.bundle.cfg.policy
+            row = {"scheduler": sched, "offered_load": rate,
+                   "policy": "default" if pol is None else pol.label(),
+                   "n_req": shape["n_req"], "slots": shape["slots"],
+                   "arch": arch}
+            row.update(_metrics(results))
+            if sched == "continuous":
+                row["compiled_block_shapes"] = \
+                    eng.compile_stats()["block"]
+            rows.append(row)
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--budget", choices=tuple(BUDGETS), default="tiny")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv if argv is not None else [])
+
+    rows = run(args.budget, args.arch)
+    cols = ["scheduler", "offered_load", "throughput_tok_s",
+            "p50_ms", "p99_ms", "total_tokens"]
+    print_csv("serving_open_loop",
+              cols, [[r[c] for c in cols] for r in rows])
+    with open(args.out, "w") as f:
+        json.dump({"bench": "serving_open_loop", "budget": args.budget,
+                   "arch": args.arch, "rows": rows}, f, indent=2)
+    print(f"# wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -1,11 +1,14 @@
-"""Batched serving example: wave-batched prefill + decode over the engine.
+"""Batched serving example: continuous batching over the engine's slot
+grid (or the wave baseline via --scheduler wave).
 
 Run:  PYTHONPATH=src python examples/serve_batch.py [--arch mamba2-1.3b]
 
-Serves a reduced-config model with batched requests: batched prefill
-(last-position logits only), KV/SSM cache handoff, batched greedy decode.
+Serves a reduced-config model with batched requests: chunked prefill
+interleaved with decode ticks over a ring KV cache with per-slot
+positions; a finished slot is refilled from the queue on the next tick.
 Works for every assigned architecture family (dense KV cache, MoE, SSM
-state cache, hybrid, enc-dec).
+state cache, hybrid; enc-dec falls back to the wave scheduler).
+--arrival-rate turns the request list into open-loop Poisson arrivals.
 """
 import argparse
 import time
@@ -24,6 +27,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--scheduler", choices=("continuous", "wave"),
+                    default="continuous")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals in requests/s "
+                         "(0: closed loop)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default=None,
                     help="KernelPolicy for every core op in the served "
                          "model: a path label, an op=path override list "
@@ -33,12 +43,19 @@ def main() -> None:
     mod = configs.get(args.arch)
     bundle = build(mod.SMOKE)
     engine = demo_engine(bundle, slots=args.slots, max_new=args.max_new,
+                         seed=args.seed, scheduler=args.scheduler,
+                         prefill_chunk=args.prefill_chunk,
                          policy=args.policy)
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=rng.integers(
-        3, mod.SMOKE.vocab, size=int(rng.integers(8, 24)), dtype=np.int32))
-        for i in range(args.requests)]
+    rng = np.random.default_rng(args.seed)
+    arrival = 0.0
+    reqs = []
+    for i in range(args.requests):
+        if args.arrival_rate > 0:
+            arrival += float(rng.exponential(1.0 / args.arrival_rate))
+        reqs.append(Request(uid=i, prompt=rng.integers(
+            3, mod.SMOKE.vocab, size=int(rng.integers(8, 24)),
+            dtype=np.int32), arrival_s=arrival))
 
     t0 = time.time()
     results = engine.run(reqs)
@@ -48,7 +65,8 @@ def main() -> None:
         print(f"req {r.uid}: prompt={r.prompt_len} tokens "
               f"-> {r.tokens[:10]}{'...' if len(r.tokens) > 10 else ''}")
     print(f"\n{len(results)} requests, {total} new tokens, {dt:.2f}s "
-          f"({total / max(dt, 1e-9):.1f} tok/s on CPU)")
+          f"({total / max(dt, 1e-9):.1f} tok/s on CPU, "
+          f"scheduler={engine.scheduler})")
 
 
 if __name__ == "__main__":

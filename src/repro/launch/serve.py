@@ -1,9 +1,12 @@
-"""Serving driver: batched generation with the wave engine.
+"""Serving driver: batched generation with the continuous-batching engine
+(or the wave baseline via --scheduler wave).
 
 CPU demo: reduced configs, randomly initialised weights (or a checkpoint
 produced by launch/train.py via --ckpt-dir) — the point is the serving
-path: batched prefill -> cache handoff -> batched decode, with the model's
-softmax/RMSNorm/SSD all routing through the matmul-form primitives.
+path: chunked prefill interleaved with decode over a ring KV cache, with
+the model's softmax/RMSNorm/SSD all routing through the matmul-form
+primitives. --arrival-rate spreads the synthetic requests as open-loop
+Poisson arrivals instead of presenting them all at once.
 """
 from __future__ import annotations
 
@@ -28,6 +31,18 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--scheduler", choices=("continuous", "wave"),
+                    default="continuous",
+                    help="continuous batching (per-slot admission, ring "
+                         "KV cache, chunked prefill) or the wave baseline")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens a prefilling slot consumes per "
+                         "tick (continuous scheduler)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in requests/s "
+                         "(0: all requests available immediately)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling RNG seed (and synthetic request seed)")
     ap.add_argument("--ckpt-dir", default=None)
     from repro.core import dispatch
     from repro.core import policy as kpolicy
@@ -63,11 +78,18 @@ def main() -> None:
             print(f"loaded checkpoint step {latest}")
 
     engine = ServingEngine(bundle, params, ServeConfig(
-        slots=args.slots, max_new=args.max_new, policy=pol))
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=rng.integers(
-        3, cfg.vocab, size=rng.integers(4, args.prompt_len + 1),
-        dtype=np.int32)) for i in range(args.requests)]
+        slots=args.slots, max_new=args.max_new, policy=pol,
+        scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
+        seed=args.seed))
+    rng = np.random.default_rng(args.seed)
+    arrival = 0.0
+    reqs = []
+    for i in range(args.requests):
+        if args.arrival_rate > 0:
+            arrival += float(rng.exponential(1.0 / args.arrival_rate))
+        reqs.append(Request(uid=i, prompt=rng.integers(
+            3, cfg.vocab, size=rng.integers(4, args.prompt_len + 1),
+            dtype=np.int32), arrival_s=arrival))
 
     t0 = time.time()
     results = engine.run(reqs)
@@ -77,7 +99,15 @@ def main() -> None:
         print(f"req {r.uid}: prompt_len={r.prompt_len} -> "
               f"{len(r.tokens)} tokens: {r.tokens[:12]}")
     print(f"{len(results)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s, "
+          f"scheduler={engine.scheduler})")
+    if args.arrival_rate > 0:
+        lats = [1e3 * (ts - r.arrival_s)
+                for r in results for ts in r.token_s]
+        if lats:
+            print(f"open loop @ {args.arrival_rate:.1f} req/s: token "
+                  f"latency p50={np.percentile(lats, 50):.1f}ms "
+                  f"p99={np.percentile(lats, 99):.1f}ms")
 
 
 if __name__ == "__main__":

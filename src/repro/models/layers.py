@@ -168,6 +168,49 @@ def attn_decode(p, cfg: ModelConfig, x, cache, *, window=None):
     return out, {"k": kc, "v": vc, "pos": pos + 1}
 
 
+def attn_decode_block(p, cfg: ModelConfig, x, cache, *, n_valid):
+    """Slot-masked T-token decode against a ring KV cache.
+
+    x (B,T,d); cache {k, v: (B,S,Hkv,Dh), pos: (B,)}; ``n_valid`` (B,)
+    int32 in [0, T] — token t of slot b is real iff ``t < n_valid[b]``.
+    Real token t is written at ring row ``(pos[b]+t) % S`` and attends
+    ``min(pos[b]+t+1, S)`` rows (ring recency semantics once wrapped, i.e.
+    sliding-window truncation; RoPE uses absolute positions, so storage
+    order does not matter to the softmax). Slots with ``n_valid == 0``
+    write nothing and keep their position; invalid tokens produce garbage
+    outputs the caller must discard. Requires T <= S so ring rows written
+    within one call are distinct. Returns (out (B,T,d), new cache)."""
+    b, t_len = x.shape[:2]
+    dh, hq, hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    pos = cache["pos"]                                    # (B,)
+    posmat = pos[:, None] + jnp.arange(t_len, dtype=jnp.int32)[None, :]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, t_len, hq, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, t_len, hkv, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, t_len, hkv, dh)
+    q = rope(q, posmat, cfg.rope_theta)
+    k = rope(k, posmat, cfg.rope_theta)
+    smax = cache["k"].shape[1]
+    assert t_len <= smax, (t_len, smax)
+    idx = posmat % smax                                   # (B, T) ring rows
+    valid = jnp.arange(t_len)[None, :] < n_valid[:, None]
+    # masked one-hot scatter: row s of slot b is overwritten by the (at
+    # most one — rows within a call are distinct) valid token t with
+    # idx[b, t] == s; an f32 one-hot matmul keeps the write exact
+    oh = ((jnp.arange(smax)[None, :, None] == idx[:, None, :])
+          & valid[:, None, :]).astype(jnp.float32)        # (B, S, T)
+    keep = (1.0 - oh.sum(axis=2))[..., None, None]        # (B, S, 1, 1)
+    def write(c, new):
+        upd = jnp.einsum("bst,bthd->bshd", oh, new.astype(jnp.float32))
+        return (c.astype(jnp.float32) * keep + upd).astype(c.dtype)
+    kc = write(cache["k"], k)
+    vc = write(cache["v"], v)
+    lens = jnp.minimum(posmat + 1, smax)                  # (B, T)
+    o = decode_attention(q, kc, vc, lens)
+    o = o.reshape(b, t_len, hq * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, {"k": kc, "v": vc, "pos": pos + n_valid}
+
+
 def attn_cache_pspec(cfg: ModelConfig, n_layers: int, batch: int, smax: int):
     cap = min(smax, cfg.swa_window) if cfg.swa_window else smax
     shp = (n_layers, batch, cap, cfg.n_kv_heads, cfg.dh)
@@ -514,3 +557,64 @@ def mamba_decode(p, cfg: ModelConfig, x, cache):
     y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
     return out, {"conv": hist[:, 1:], "state": state}
+
+
+def mamba_decode_block(p, cfg: ModelConfig, x, cache, *, n_valid):
+    """Slot-masked T-token recurrent step.
+
+    x (B,T,d); cache {conv (B,K-1,C), state (B,H,P,N)}; ``n_valid`` (B,)
+    — slot b consumes its first ``n_valid[b]`` tokens. The causal conv
+    runs VALID over [cached history | chunk] (exact conv-with-history, no
+    zero pad), and the SSD recurrence is a masked ``lax.scan`` of
+    ``ssd_decode_step`` so a slot's state stops advancing at its own
+    ``n_valid`` — tokens past it (other slots' chunk tail) cannot pollute
+    the carried state. The new conv history ends at each slot's last
+    valid token. Invalid tokens produce garbage outputs (discarded by the
+    caller)."""
+    b, t_len = x.shape[:2]
+    di, g, ns = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    hh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    kk = cfg.conv_kernel
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_inproj(cfg, zxbcdt)
+    hist = jnp.concatenate(
+        [cache["conv"], xbc_raw.astype(cache["conv"].dtype)],
+        axis=1)                                          # (B, K-1+T, C)
+    conv_out = jax.lax.conv_general_dilated(
+        hist.astype(jnp.float32),
+        p["conv_w"].astype(jnp.float32)[:, None, :],     # (K, 1, C) HIO
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=p["conv_w"].shape[1],
+    )                                                    # (B, T, C)
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xbc = xbc.astype(x.dtype)
+    xs = xbc[..., :di].reshape(b, t_len, hh, hp)
+    bmat = xbc[..., di:di + g * ns].reshape(b, t_len, g, ns)
+    cmat = xbc[..., di + g * ns:].reshape(b, t_len, g, ns)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    upd = jnp.arange(t_len)[:, None] < n_valid[None, :]  # (T, B)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t, m_t = inp
+        y_t, new_state = ssd_decode_step(state, x_t, dt_t, a, b_t, c_t)
+        state = jnp.where(m_t[:, None, None, None], new_state, state)
+        return state, y_t
+
+    state, ys = jax.lax.scan(
+        step, cache["state"],
+        (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0), upd))
+    y = jnp.moveaxis(ys, 0, 1).astype(jnp.float32)       # (B, T, H, P)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, t_len, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    # per-slot conv history: hist rows [n_valid, n_valid + K - 2] — the
+    # K-1 raw inputs preceding the slot's next token
+    newconv = jax.vmap(
+        lambda h_b, nv: jax.lax.dynamic_slice_in_dim(h_b, nv, kk - 1,
+                                                     axis=0))(hist, n_valid)
+    return out, {"conv": newconv, "state": state}

@@ -55,6 +55,11 @@ class Bundle:
     # serving-prefill: unembed only the last position (B, 1, vocab) —
     # avoids the (B, S, vocab) logits buffer at 32k prefill
     prefill_last: Callable = None
+    # continuous-batching slot step: (params, cache, batch{tokens (B,T)},
+    # n_valid (B,), reset_mask (B,)) -> (next_logits (B, vocab), cache).
+    # Per-slot positions, slot-masked cache updates, chunked prefill and
+    # single-token decode in one call. None = wave scheduling only.
+    decode_block: Callable = None
 
 
 # ---------------------------------------------------------------------------
@@ -254,8 +259,14 @@ def _n_cache_layers(cfg):
     return cfg.n_layers
 
 
-def lm_cache_pspec(cfg: L.ModelConfig, batch: int, smax: int):
-    cache: dict[str, Any] = {"pos": PSpec((), (), "zeros", jnp.int32)}
+def lm_cache_pspec(cfg: L.ModelConfig, batch: int, smax: int,
+                   per_slot_pos: bool = False):
+    """Decode-cache declaration. ``per_slot_pos=True`` declares the
+    continuous-batching layout: ``pos`` is a (batch,) vector — every slot
+    carries its own position counter instead of sharing one scalar."""
+    pshape = (batch,) if per_slot_pos else ()
+    plog = ("batch",) if per_slot_pos else ()
+    cache: dict[str, Any] = {"pos": PSpec(pshape, plog, "zeros", jnp.int32)}
     if cfg.family in ("dense", "vlm", "moe"):
         cache["attn"] = L.attn_cache_pspec(cfg, cfg.n_layers, batch, smax)
         del cache["attn"]["pos"]
@@ -373,6 +384,127 @@ def _shared_decode(sp, cfg, h, emb0, cache):
     return h, cache
 
 
+def _shared_decode_block(sp, cfg, h, emb0, cache, n_valid):
+    cat = jnp.concatenate([h, emb0], axis=-1)
+    a_in = rmsnorm(cat, sp["ln_in"], cfg.norm_eps)
+    a_out, cache = L.attn_decode_block(sp["attn"], cfg, a_in, cache,
+                                       n_valid=n_valid)
+    h = h + a_out
+    m_in = rmsnorm(h, sp["ln_mlp"], cfg.norm_eps)
+    h = h + L.mlp_apply(sp["mlp"], cfg, m_in)
+    return h, cache
+
+
+def lm_decode_block(params, cfg: L.ModelConfig, cache, batch, *,
+                    n_valid, reset_mask):
+    """Slot-masked T-token step: the continuous-batching workhorse.
+
+    batch {"tokens": (B, T)}; ``n_valid`` (B,) int32 in [0, T] — slot b
+    consumes its first ``n_valid[b]`` tokens (0 = untouched slot);
+    ``reset_mask`` (B,) bool clears a slot's sequence state (pos -> 0,
+    SSM conv/state -> 0) before it consumes tokens, i.e. admission of a
+    new request into a recycled slot. Stale KV rows need no clearing: the
+    per-slot valid-length mask hides them until they are overwritten.
+
+    One call serves chunked prefill (n_valid up to T prompt tokens) and
+    single-token decode (n_valid == 1) simultaneously across slots, so
+    admission never stalls decode. The cache carries a per-slot ``pos``
+    vector; KV writes are ring-buffered per slot. Token positions past
+    ``n_valid`` hold junk the masks keep out of every slot's state (MoE
+    capacity is the one shared resource junk tokens can touch; decode-
+    sized batches stay far below the 128-rounded capacity).
+
+    Returns (next_logits (B, vocab) — logits after each slot's last valid
+    token — and the new cache)."""
+    tokens = batch["tokens"]
+    b, t_len = tokens.shape
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    reset_mask = jnp.asarray(reset_mask, jnp.bool_)
+    pos = jnp.where(reset_mask, 0, cache["pos"])          # (B,)
+    h = embed_tokens(params["embed"], tokens)             # (B, T, d)
+    emb0 = h
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def step(hh, xs):
+            lp, kc, vc = xs
+            c = {"k": kc, "v": vc, "pos": pos}
+            a_in = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+            a_out, c = L.attn_decode_block(lp["attn"], cfg, a_in, c,
+                                           n_valid=n_valid)
+            hh = hh + a_out
+            m_in = rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                m_out, _ = L.moe_apply(lp["moe"], cfg, m_in)
+            else:
+                m_out = L.mlp_apply(lp["mlp"], cfg, m_in)
+            return hh + m_out, (c["k"], c["v"])
+
+        h, (ks, vs) = jax.lax.scan(
+            step, h, (params["blocks"], cache["attn"]["k"],
+                      cache["attn"]["v"]))
+        new_cache["attn"] = {"k": ks, "v": vs}
+    elif cfg.family == "ssm":
+        conv0 = jnp.where(reset_mask[None, :, None, None], 0,
+                          cache["mamba"]["conv"])
+        state0 = jnp.where(reset_mask[None, :, None, None, None], 0,
+                           cache["mamba"]["state"])
+
+        def step(hh, xs):
+            lp, conv, state = xs
+            m_in = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            out, c = L.mamba_decode_block(lp["mamba"], cfg, m_in,
+                                          {"conv": conv, "state": state},
+                                          n_valid=n_valid)
+            return hh + out, (c["conv"], c["state"])
+
+        h, (convs, states) = jax.lax.scan(
+            step, h, (params["blocks"], conv0, state0))
+        new_cache["mamba"] = {"conv": convs, "state": states}
+    elif cfg.family == "hybrid":
+        conv0 = jnp.where(reset_mask[None, :, None, None], 0,
+                          cache["mamba"]["conv"])
+        state0 = jnp.where(reset_mask[None, :, None, None, None], 0,
+                           cache["mamba"]["state"])
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+
+        def step(hh, xs):
+            lp, conv, state = xs
+            m_in = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            out, c = L.mamba_decode_block(lp["mamba"], cfg, m_in,
+                                          {"conv": conv, "state": state},
+                                          n_valid=n_valid)
+            return hh + out, (c["conv"], c["state"])
+
+        convs, states, ks, vs = [], [], [], []
+        for gi in range(n_groups):
+            sl = slice(gi * every, (gi + 1) * every)
+            grp = jax.tree.map(lambda x: x[sl], params["blocks"])
+            h, (cv, st) = jax.lax.scan(step, h, (grp, conv0[sl],
+                                                 state0[sl]))
+            c = {"k": cache["attn"]["k"][gi], "v": cache["attn"]["v"][gi],
+                 "pos": pos}
+            h, c = _shared_decode_block(params["shared"], cfg, h, emb0, c,
+                                        n_valid)
+            convs.append(cv); states.append(st)
+            ks.append(c["k"]); vs.append(c["v"])
+        new_cache["mamba"] = {"conv": jnp.concatenate(convs),
+                              "state": jnp.concatenate(states)}
+        new_cache["attn"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    else:
+        raise ValueError(cfg.family)
+    new_cache["pos"] = pos + n_valid
+
+    # next-token logits at each slot's last valid token (idle slots clamp
+    # to position 0; their row is garbage the engine ignores)
+    last = jnp.maximum(n_valid - 1, 0)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+    h_last = rmsnorm(h_last, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(h_last, head)[:, 0], new_cache
+
+
 # ---------------------------------------------------------------------------
 # bundle
 
@@ -395,8 +527,12 @@ def build_lm(cfg: L.ModelConfig) -> Bundle:
     def decode(params, cache, batch):
         return lm_decode(params, cfg, cache, batch)
 
-    def cache_pspec(batch: int, smax: int):
-        return lm_cache_pspec(cfg, batch, smax)
+    def decode_block(params, cache, batch, *, n_valid, reset_mask):
+        return lm_decode_block(params, cfg, cache, batch,
+                               n_valid=n_valid, reset_mask=reset_mask)
+
+    def cache_pspec(batch: int, smax: int, per_slot_pos: bool = False):
+        return lm_cache_pspec(cfg, batch, smax, per_slot_pos=per_slot_pos)
 
     from repro.models.common import count_pspec_params
 
@@ -409,4 +545,5 @@ def build_lm(cfg: L.ModelConfig) -> Bundle:
             + count_pspec_params(pspec["blocks"]["moe"]["router"])
     return Bundle(cfg=cfg, params_pspec=pspec, loss=loss, prefill=prefill,
                   decode=decode, cache_pspec=cache_pspec, n_params=n,
-                  n_active_params=n_active, prefill_last=prefill_last)
+                  n_active_params=n_active, prefill_last=prefill_last,
+                  decode_block=decode_block)

@@ -124,27 +124,42 @@ def chunked_attention(
 
 
 def decode_attention(
-    q: jax.Array,        # (B, 1, Hq, D)
+    q: jax.Array,        # (B, T, Hq, D) — T is 1 for classic decode
     k_cache: jax.Array,  # (B, S, Hkv, D)
     v_cache: jax.Array,  # (B, S, Hkv, D)
-    cur_len: jax.Array,  # () int32 — number of valid cache positions
+    cur_len: jax.Array,  # (), (B,) or (B, T) int32 — valid cache positions
     *,
     window: int | None = None,
     scale: float | None = None,
 ) -> jax.Array:
-    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    """Attention of T query tokens against a (possibly ring-buffered) KV
+    cache with a per-slot (and optionally per-query) valid length.
+
+    ``cur_len`` broadcasts over (B, T): a scalar is the classic shared
+    counter; a (B,) vector gives every slot its own position (continuous
+    batching); a (B, T) matrix additionally lets query token t see
+    ``cur_len[b, t]`` cache rows — the chunked-prefill case, where token t
+    of the chunk may attend exactly the rows written up to and including
+    itself."""
     b, s, hkv, d = k_cache.shape
-    hq = q.shape[2]
+    tq, hq = q.shape[1], q.shape[2]
     rep = hq // hkv
     sc = scale if scale is not None else 1.0 / (d ** 0.5)
-    qg = q.reshape(b, 1, hkv, rep, d).astype(jnp.float32)
+    qg = q.reshape(b, tq, hkv, rep, d).astype(jnp.float32)
     logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg,
                         k_cache.astype(jnp.float32)) * sc
-    kpos = jnp.arange(s)[None, None, None, None, :]
-    valid = kpos < cur_len
+    cl = jnp.asarray(cur_len, jnp.int32)
+    if cl.ndim == 0:
+        cl = cl[None, None]
+    elif cl.ndim == 1:
+        cl = cl[:, None]
+    lens = jnp.broadcast_to(cl, (b, tq))                  # (B, T)
+    kpos = jnp.arange(s)[None, None, :]
+    valid = kpos < lens[..., None]                        # (B, T, S)
     if window is not None:
-        valid = valid & (kpos >= cur_len - window)
+        valid = valid & (kpos >= lens[..., None] - window)
+    valid = valid[:, None, None]                          # (B, 1, 1, T, S)
     logits = jnp.where(valid, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v_cache.astype(jnp.float32))
-    return o.reshape(b, 1, hq, d).astype(q.dtype)
+    return o.reshape(b, tq, hq, d).astype(q.dtype)

@@ -3,8 +3,9 @@ from repro.serving.engine import (
     Result,
     ServeConfig,
     ServingEngine,
+    clear_compile_cache,
     demo_engine,
 )
 
 __all__ = ["Request", "Result", "ServeConfig", "ServingEngine",
-           "demo_engine"]
+           "clear_compile_cache", "demo_engine"]

@@ -1,17 +1,40 @@
-"""Batched serving engine: wave-batched prefill + batched greedy/sampled
-decode over a fixed slot grid.
+"""Serving engines over a fixed slot grid: continuous batching (default)
+with the legacy wave-batched scheduler kept as a measurable baseline.
 
-Design (TPU-adapted):
-  * a fixed number of decode *slots* (the jit'd prefill/decode steps each
-    have one static shape — no recompile churn);
-  * requests are admitted in waves of up to ``slots``; prompts are
-    left-padded to the wave's prompt length so the whole wave shares the
-    cache position counter (the cache pytree carries one scalar ``pos``);
-  * every engine tick decodes all live slots in one batched call — the TCU
-    reduce/scan primitives inside the model (softmax, RMSNorm, SSD) do the
-    per-token math;
-  * finished sequences are masked (their sampled tokens ignored) until the
-    wave retires.
+Continuous scheduler (TPU-adapted):
+  * a fixed number of decode *slots*; a finished slot is refilled from the
+    queue on the next tick — no wave barrier, so one long sequence never
+    strands the other slots;
+  * the KV cache is a ring buffer with a per-slot position counter: slot b
+    writes token t at row ``(pos[b] + t) % capacity`` and attends the
+    ``min(pos[b] + t + 1, capacity)`` valid rows, so slots stop sharing one
+    scalar ``pos`` and stop paying for the wave-max prompt (sequences
+    longer than the capacity degrade to sliding-window attention instead
+    of failing);
+  * prefill is chunked and interleaved with decode: every tick issues ONE
+    jitted block step of shape (slots, T) where T is ``prefill_chunk``
+    while any slot is consuming its prompt and 1 otherwise; per-slot
+    ``n_valid`` lets prefilling slots swallow up to T prompt tokens while
+    decoding slots ride along with a single token — admission never stalls
+    decode;
+  * jitted steps live in a module-level cache keyed by the bundle's model
+    config (which embeds the whole ``KernelPolicy`` — hashable since
+    PR 4/5), and the cache capacity is bucketized to powers of two, so the
+    decode-step compile count over a mixed-length workload is bounded by
+    2 x #capacity-buckets (the T=chunk and T=1 shapes), not by the number
+    of distinct request lengths.
+
+Wave scheduler (baseline, ``ServeConfig(scheduler="wave")``): requests are
+admitted in waves of up to ``slots``; prompts are left-padded to the
+wave's prompt length (one scalar cache ``pos``); the wave retires only
+when every member finishes.  Kept as the contender row in
+``benchmarks/serving_bench.py`` — the continuous win is a checked-in
+number, not a claim.
+
+Both schedulers share the slot/result bookkeeping and the sampling RNG
+(seeded from ``ServeConfig.seed``).  Encoder-decoder bundles have no
+block-decode step; asking them for the continuous scheduler warns and
+falls back to wave.
 
 For the multi-chip case the cache pytree is sharded with the same logical
 rules as the dry-run decode cells; the engine code is sharding-agnostic.
@@ -19,6 +42,8 @@ rules as the dry-run decode cells; the engine code is sharding-agnostic.
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from collections import deque
 from typing import Any
 
@@ -30,7 +55,7 @@ from repro.core import policy as kpolicy
 from repro.core.policy import KernelPolicy
 from repro.models.common import init_params
 from repro.models.lm import Bundle
-from repro.training.train_lib import make_serve_step
+from repro.training.train_lib import make_block_serve_step, make_serve_step
 
 _SEQ_CACHE_KEYS = ("k", "v", "self_k", "self_v")
 
@@ -38,10 +63,14 @@ _SEQ_CACHE_KEYS = ("k", "v", "self_k", "self_v")
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     slots: int = 4                  # concurrent sequences (static batch)
-    max_new: int = 32               # decode budget per wave
+    max_new: int = 32               # decode budget per request (default)
     eos_token: int = 2
     greedy: bool = True
     temperature: float = 1.0
+    scheduler: str = "continuous"   # continuous | wave
+    prefill_chunk: int = 16         # prompt tokens consumed per tick/slot
+    max_context: int | None = None  # cap on ring-cache capacity (rows)
+    seed: int = 0                   # sampling RNG seed
     # explicit KernelPolicy for every core op in the served model
     # (attention, SSD, MoE); strings auto-coerce. None keeps the bundle's
     # own setting (usually the active policy); a value rebuilds the
@@ -52,6 +81,12 @@ class ServeConfig:
     kernel_path: dataclasses.InitVar[str | None] = None
 
     def __post_init__(self, kernel_path):
+        if self.scheduler not in ("continuous", "wave"):
+            raise ValueError(
+                f"scheduler must be 'continuous' or 'wave', "
+                f"got {self.scheduler!r}")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         object.__setattr__(self, "policy", kpolicy.coerce_config_policy(
             self.policy, kernel_path, "ServeConfig"))
 
@@ -60,6 +95,8 @@ class ServeConfig:
 class Request:
     uid: int
     prompt: np.ndarray              # (prompt_len,) int32
+    max_new: int | None = None      # per-request budget (None: cfg.max_new)
+    arrival_s: float = 0.0          # open-loop arrival offset from run()
 
 
 @dataclasses.dataclass
@@ -67,6 +104,23 @@ class Result:
     uid: int
     tokens: list                    # generated ids (up to EOS)
     prompt_len: int
+    arrival_s: float = 0.0
+    first_token_s: float | None = None   # emission time of first token
+    finish_s: float | None = None        # emission time of last token
+    token_s: list = dataclasses.field(default_factory=list)
+    admitted_tick: int = -1
+    finish_tick: int = -1
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One row of the continuous-batching slot grid."""
+    free: bool = True
+    req: Request | None = None
+    ppos: int = 0                   # prompt tokens consumed so far
+    budget: int = 0
+    last: int = 0                   # last sampled token (decode input)
+    result: Result | None = None
 
 
 def _pad_cache_seq(cache, extra: int):
@@ -83,9 +137,45 @@ def _pad_cache_seq(cache, extra: int):
     return jax.tree_util.tree_map_with_path(pad, cache)
 
 
+def _bucket(n: int) -> int:
+    """Next power of two >= n (floor 16) — the ring-capacity buckets that
+    bound the jit compile count across mixed-length workloads."""
+    return max(16, 1 << (max(int(n), 1) - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# module-level jit compile cache
+#
+# Keyed by the bundle's frozen ModelConfig, which embeds the whole
+# KernelPolicy (path, autotune mode, per-op overrides, op_tuning) — two
+# engines serving the same config share compiled steps, and any policy
+# change (including a tuning-only change) keys a fresh entry exactly as
+# the bundle-rebuild check invalidates the bundle.
+
+_STEP_CACHE: dict = {}
+
+
+def clear_compile_cache() -> None:
+    """Drop every cached jitted serving step (tests / memory pressure)."""
+    _STEP_CACHE.clear()
+
+
+def _steps_for(bundle: Bundle) -> dict:
+    key = bundle.cfg
+    entry = _STEP_CACHE.get(key)
+    if entry is None:
+        prefill, decode = make_serve_step(bundle)
+        block = make_block_serve_step(bundle)
+        entry = {"prefill": jax.jit(prefill), "decode": jax.jit(decode),
+                 "block": None if block is None else jax.jit(block)}
+        _STEP_CACHE[key] = entry
+    return entry
+
+
 class ServingEngine:
-    """Wave-batched engine over a Bundle: ``run(requests)`` drains a list,
-    ``serve_wave`` handles one admitted wave."""
+    """Serving engine over a Bundle: ``run(requests)`` drains a list with
+    the configured scheduler; each call returns only that call's results
+    (``self.results`` keeps the full history)."""
 
     def __init__(self, bundle: Bundle, params, cfg: ServeConfig):
         # compare the WHOLE policy, not a path string: an autotune-mode or
@@ -99,80 +189,241 @@ class ServingEngine:
         self.bundle = bundle
         self.cfg = cfg
         self.params = params
-        prefill, decode = make_serve_step(bundle)
-        self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode)
-        self._rng = jax.random.PRNGKey(0)
+        steps = _steps_for(bundle)
+        self._prefill = steps["prefill"]
+        self._decode = steps["decode"]
+        self._block = steps["block"]
+        self.scheduler = cfg.scheduler
+        if self.scheduler == "continuous" and self._block is None:
+            warnings.warn(
+                "bundle has no block-decode step (encoder-decoder); "
+                "falling back to the wave scheduler", stacklevel=2)
+            self.scheduler = "wave"
+        self._rng = jax.random.PRNGKey(cfg.seed)
         self.queue: deque[Request] = deque()
         self.results: list[Result] = []
+        self.trace: list[dict] = []     # admit/finish events (tick, uid)
+        self.ticks = 0                  # block steps issued (continuous)
+        self._cache = None              # continuous ring cache (reused)
+        self._capacity = None
+
+    # -- shared plumbing ----------------------------------------------------
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def compile_stats(self) -> dict:
+        """Compiled-shape counts of the jitted serving steps (None when a
+        step was never traced / does not exist)."""
+        def size(fn):
+            if fn is None or not hasattr(fn, "_cache_size"):
+                return None
+            return fn._cache_size()
+
+        return {"prefill": size(self._prefill),
+                "decode": size(self._decode),
+                "block": size(self._block)}
+
+    def _budget(self, req: Request) -> int:
+        return self.cfg.max_new if req.max_new is None else req.max_new
+
     def _sample(self, logits: jax.Array) -> np.ndarray:
+        if logits.ndim == 3:            # wave decode emits (B, T, V)
+            logits = logits[:, -1]
         if self.cfg.greedy:
-            return np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            return np.asarray(jnp.argmax(logits, axis=-1))
         self._rng, sub = jax.random.split(self._rng)
         return np.asarray(jax.random.categorical(
-            sub, logits[:, -1] / self.cfg.temperature))
+            sub, logits / self.cfg.temperature))
 
-    def serve_wave(self, wave: list[Request]) -> list[Result]:
+    def run(self, requests: list[Request]) -> list[Result]:
+        t0 = time.perf_counter()
+        for r in sorted(requests, key=lambda r: r.arrival_s):
+            self.submit(r)
+        if self.scheduler == "continuous":
+            out = self._run_continuous(t0)
+        else:
+            out = self._run_wave(t0)
+        self.results.extend(out)        # full history; return is per-call
+        return sorted(out, key=lambda r: r.uid)
+
+    # -- continuous scheduler ----------------------------------------------
+
+    def _ensure_cache(self) -> None:
+        need = max((len(r.prompt) + self._budget(r) for r in self.queue),
+                   default=16)
+        cap = _bucket(need)
+        if self.cfg.max_context is not None:
+            cap = min(cap, _bucket(self.cfg.max_context))
+        if self._cache is None or self._capacity != cap:
+            self._cache = init_params(
+                jax.random.PRNGKey(0),
+                self.bundle.cache_pspec(self.cfg.slots, cap,
+                                        per_slot_pos=True),
+                self.bundle.cfg.dtype)
+            self._capacity = cap
+
+    def _run_continuous(self, t0: float) -> list[Result]:
         nb = self.cfg.slots
+        self._ensure_cache()
+        chunk = min(self.cfg.prefill_chunk, self._capacity)
+        slots = [_Slot() for _ in range(nb)]
+        out: list[Result] = []
+
+        while True:
+            now = time.perf_counter() - t0
+            cur = self.ticks
+            # admission: refill every free slot from the arrived queue
+            reset = np.zeros(nb, bool)
+            for i, s in enumerate(slots):
+                if s.free and self.queue and \
+                        self.queue[0].arrival_s <= now:
+                    req = self.queue.popleft()
+                    slots[i] = s = _Slot(
+                        free=False, req=req, budget=self._budget(req),
+                        result=Result(uid=req.uid, tokens=[],
+                                      prompt_len=len(req.prompt),
+                                      arrival_s=req.arrival_s,
+                                      admitted_tick=cur))
+                    reset[i] = True
+                    self.trace.append({"tick": cur, "event": "admit",
+                                       "uid": req.uid, "slot": i})
+            active = [i for i, s in enumerate(slots) if not s.free]
+            if not active:
+                if not self.queue:
+                    break
+                wait = self.queue[0].arrival_s - now
+                if wait > 0:
+                    time.sleep(min(wait, 0.01))
+                continue
+
+            # one block step: T = chunk while anyone prefills, else 1
+            any_prefill = any(slots[i].ppos < len(slots[i].req.prompt)
+                              for i in active)
+            t_len = chunk if any_prefill else 1
+            tokens = np.zeros((nb, t_len), np.int32)
+            n_valid = np.zeros(nb, np.int32)
+            for i in active:
+                s = slots[i]
+                plen = len(s.req.prompt)
+                if s.ppos < plen:
+                    take = min(t_len, plen - s.ppos)
+                    tokens[i, :take] = s.req.prompt[s.ppos:s.ppos + take]
+                    n_valid[i] = take
+                else:
+                    tokens[i, 0] = s.last
+                    n_valid[i] = 1
+            logits, self._cache = self._block(
+                self.params, self._cache, jnp.asarray(tokens),
+                jnp.asarray(n_valid), jnp.asarray(reset))
+            nxt = self._sample(logits)
+            now = time.perf_counter() - t0
+            self.ticks = cur + 1
+
+            for i in active:
+                s = slots[i]
+                plen = len(s.req.prompt)
+                if s.ppos < plen:
+                    s.ppos += int(n_valid[i])
+                    if s.ppos < plen:
+                        continue        # mid-prefill: logits are interim
+                # this tick produced a real token for slot i
+                tok = int(nxt[i])
+                s.last = tok
+                res = s.result
+                if res.first_token_s is None:
+                    res.first_token_s = now
+                finished = tok == self.cfg.eos_token
+                if not finished:
+                    res.tokens.append(tok)
+                    res.token_s.append(now)
+                    finished = len(res.tokens) >= s.budget
+                if finished:
+                    res.finish_s = now
+                    res.finish_tick = cur
+                    self.trace.append({"tick": cur, "event": "finish",
+                                       "uid": res.uid, "slot": i})
+                    out.append(res)
+                    slots[i] = _Slot()  # freed; refilled next tick
+        return out
+
+    # -- wave scheduler (baseline) ------------------------------------------
+
+    def serve_wave(self, wave: list[Request],
+                   t0: float | None = None) -> list[Result]:
+        if t0 is None:
+            t0 = time.perf_counter()
+        nb = self.cfg.slots
+        live = len(wave)
+        budgets = [self._budget(r) for r in wave]
+        wave_budget = max(budgets)
         plen = max(len(r.prompt) for r in wave)
         tokens = np.zeros((nb, plen), np.int32)
         for i, r in enumerate(wave):                # left-pad prompts
             tokens[i, plen - len(r.prompt):] = r.prompt
         logits, cache = self._prefill(self.params,
                                       {"tokens": jnp.asarray(tokens)})
-        cache = _pad_cache_seq(cache, self.cfg.max_new)
+        cache = _pad_cache_seq(cache, wave_budget)
         nxt = self._sample(logits)
+        now = time.perf_counter() - t0
 
-        out = [[int(nxt[i])] for i in range(nb)]
-        done = np.array([int(nxt[i]) == self.cfg.eos_token
-                         for i in range(nb)])
-        for _ in range(self.cfg.max_new - 1):
-            if done[:len(wave)].all():
+        out = [[int(nxt[i])] for i in range(live)]
+        times = [[now] for _ in range(live)]
+        # padding rows beyond the wave are done from the start: they are
+        # never sampled into results and never keep the wave alive
+        done = np.ones(nb, bool)
+        for i in range(live):
+            done[i] = (int(nxt[i]) == self.cfg.eos_token
+                       or budgets[i] <= 1)
+        for _ in range(wave_budget - 1):
+            if done.all():
                 break
             step_tok = jnp.asarray(nxt.reshape(nb, 1), jnp.int32)
             logits, cache = self._decode(self.params, cache,
                                          {"tokens": step_tok})
             nxt = self._sample(logits)
-            for i in range(nb):
+            now = time.perf_counter() - t0
+            for i in range(live):
                 if not done[i]:
                     out[i].append(int(nxt[i]))
-                    done[i] |= int(nxt[i]) == self.cfg.eos_token
+                    times[i].append(now)
+                    done[i] = (int(nxt[i]) == self.cfg.eos_token
+                               or len(out[i]) >= budgets[i])
         results = []
         for i, r in enumerate(wave):
-            toks = out[i]
+            toks, ts = out[i], times[i]
             if self.cfg.eos_token in toks:
-                toks = toks[:toks.index(self.cfg.eos_token)]
-            results.append(Result(uid=r.uid, tokens=toks,
-                                  prompt_len=len(r.prompt)))
+                cut = toks.index(self.cfg.eos_token)
+                toks, ts = toks[:cut], ts[:cut]
+            results.append(Result(
+                uid=r.uid, tokens=toks, prompt_len=len(r.prompt),
+                arrival_s=r.arrival_s, first_token_s=times[i][0],
+                finish_s=times[i][-1], token_s=ts))
         return results
 
-    def run(self, requests: list[Request]) -> list[Result]:
-        for r in requests:
-            self.submit(r)
+    def _run_wave(self, t0: float) -> list[Result]:
+        out: list[Result] = []
         while self.queue:
-            wave = [self.queue.popleft()
-                    for _ in range(min(self.cfg.slots, len(self.queue)))]
-            while len(wave) < self.cfg.slots:   # pad wave with dummies
-                wave.append(wave[-1])
-            uids = set()
-            res = []
-            for r in self.serve_wave(wave):
-                if r.uid not in uids:
-                    uids.add(r.uid)
-                    res.append(r)
-            self.results.extend(res)
-        return sorted(self.results, key=lambda r: r.uid)
+            now = time.perf_counter() - t0
+            wave: list[Request] = []
+            while self.queue and len(wave) < self.cfg.slots and \
+                    self.queue[0].arrival_s <= now:
+                wave.append(self.queue.popleft())
+            if not wave:                # open loop: wait for next arrival
+                wait = self.queue[0].arrival_s - now
+                if wait > 0:
+                    time.sleep(min(wait, 0.01))
+                continue
+            out.extend(self.serve_wave(wave, t0))
+        return out
 
 
 def demo_engine(bundle: Bundle, *, slots: int = 4, max_new: int = 16,
-                seed: int = 0,
+                seed: int = 0, scheduler: str = "continuous",
+                prefill_chunk: int = 16,
                 policy: "KernelPolicy | str | None" = None) -> ServingEngine:
     params = init_params(jax.random.PRNGKey(seed), bundle.params_pspec,
                          bundle.cfg.dtype)
-    return ServingEngine(bundle, params, ServeConfig(slots=slots,
-                                                     max_new=max_new,
-                                                     policy=policy))
+    return ServingEngine(bundle, params, ServeConfig(
+        slots=slots, max_new=max_new, seed=seed, scheduler=scheduler,
+        prefill_chunk=prefill_chunk, policy=policy))

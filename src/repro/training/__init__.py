@@ -1,6 +1,7 @@
 from repro.training.train_lib import (
     TrainConfig,
     init_train_state,
+    make_block_serve_step,
     make_serve_step,
     make_train_step,
     train_state_pspecs,
@@ -9,6 +10,7 @@ from repro.training.train_lib import (
 __all__ = [
     "TrainConfig",
     "init_train_state",
+    "make_block_serve_step",
     "make_serve_step",
     "make_train_step",
     "train_state_pspecs",

@@ -202,3 +202,24 @@ def make_serve_step(bundle: Bundle) -> tuple[Callable, Callable]:
         return bundle.decode(_cast_tree(params, compute_dtype), cache, batch)
 
     return prefill_step, decode_step
+
+
+def make_block_serve_step(bundle: Bundle) -> Callable | None:
+    """-> step(params, cache, tokens (B,T), n_valid (B,), reset_mask (B,))
+    -> (next_logits (B, vocab), cache) — the continuous-batching slot
+    step. The cache carries per-slot position vectors; ``n_valid`` masks
+    each slot's share of the T-token block (chunked prefill and
+    single-token decode mix freely in one call); ``reset_mask`` clears a
+    slot's sequence state on admission. Returns None when the bundle has
+    no block decode (encoder-decoder) — the engine then falls back to
+    wave scheduling."""
+    if bundle.decode_block is None:
+        return None
+    compute_dtype = bundle.cfg.dtype
+
+    def block_step(params, cache, tokens, n_valid, reset_mask):
+        return bundle.decode_block(
+            _cast_tree(params, compute_dtype), cache, {"tokens": tokens},
+            n_valid=n_valid, reset_mask=reset_mask)
+
+    return block_step

@@ -139,3 +139,244 @@ def test_engine_mamba_family():
     results = eng.run(_reqs(4))
     assert len(results) == 4
     assert all(1 <= len(r.tokens) <= 5 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+
+
+from repro.serving import clear_compile_cache, demo_engine  # noqa: E402
+
+
+def _llama_bundle_params():
+    mod = configs.get("llama3.2-1b")
+    bundle = build(mod.SMOKE)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         mod.SMOKE.dtype)
+    return bundle, params
+
+
+def test_run_returns_only_current_results():
+    """Regression: a second run() must not replay the first call's
+    results (the old wave engine returned ``sorted(self.results)``)."""
+    bundle, params = _llama_bundle_params()
+    for sched in ("continuous", "wave"):
+        eng = ServingEngine(bundle, params, ServeConfig(
+            slots=2, max_new=3, eos_token=-1, scheduler=sched))
+        first = eng.run(_reqs(3))
+        second = eng.run([Request(uid=100, prompt=np.arange(
+            5, 12, dtype=np.int32))])
+        assert [r.uid for r in first] == [0, 1, 2]
+        assert [r.uid for r in second] == [100], sched
+        assert len(eng.results) == 4          # history still accumulates
+
+
+def test_sampling_rng_seedable():
+    """ServeConfig.seed drives the sampling RNG: same seed, same sampled
+    tokens; a different seed diverges. demo_engine(seed=) threads into
+    the config, not just init_params."""
+    bundle, params = _llama_bundle_params()
+
+    def sample(seed):
+        eng = ServingEngine(bundle, params, ServeConfig(
+            slots=2, max_new=6, eos_token=-1, greedy=False,
+            temperature=1.0, seed=seed))
+        return [r.tokens for r in eng.run(_reqs(3))]
+
+    assert sample(7) == sample(7)
+    assert sample(7) != sample(8)
+    eng = demo_engine(bundle, slots=2, max_new=2, seed=5)
+    assert eng.cfg.seed == 5
+
+
+def test_wave_no_dummy_slot_decode():
+    """A short wave no longer pads itself with duplicate requests: each
+    real request yields exactly one result and padding rows are done from
+    the start (they never extend the wave)."""
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=4, max_new=3, eos_token=-1, scheduler="wave"))
+    results = eng.run(_reqs(2))
+    assert [r.uid for r in results] == [0, 1]
+    assert all(len(r.tokens) == 3 for r in results)
+    # per-request budgets: the slot with the small budget stops early
+    # while the wave continues for the bigger one
+    res = eng.run([Request(uid=10, prompt=np.arange(5, 12, dtype=np.int32),
+                           max_new=1),
+                   Request(uid=11, prompt=np.arange(5, 12, dtype=np.int32),
+                           max_new=4)])
+    assert len(res[0].tokens) == 1 and len(res[1].tokens) == 4
+
+
+def test_no_wave_barrier():
+    """Short requests admitted AFTER a long sequence finish BEFORE it:
+    the freed slot is refilled while the long request keeps decoding."""
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=2, max_new=4, eos_token=-1, scheduler="continuous",
+        prefill_chunk=8))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=0, prompt=rng.integers(3, 256, size=6,
+                                               dtype=np.int32),
+                    max_new=48)]
+    reqs += [Request(uid=i, prompt=rng.integers(3, 256, size=5,
+                                                dtype=np.int32),
+                     max_new=2) for i in range(1, 5)]
+    results = {r.uid: r for r in eng.run(reqs)}
+    long_res = results[0]
+    late_shorts = [r for uid, r in results.items()
+                   if uid > 0 and r.admitted_tick > results[1].admitted_tick]
+    assert late_shorts, "expected shorts admitted after the first wave"
+    for r in late_shorts:
+        assert r.admitted_tick > long_res.admitted_tick
+        assert r.finish_tick < long_res.finish_tick, (
+            "short admitted after the long request must finish before it "
+            "(no wave barrier)")
+
+
+def test_evicted_slot_refilled_next_tick():
+    """Every finish with work still queued is followed by an admission
+    into that slot on the very next tick."""
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=2, max_new=3, eos_token=-1, scheduler="continuous",
+        prefill_chunk=8))
+    eng.run(_reqs(6))
+    admits = {(e["slot"], e["tick"]) for e in eng.trace
+              if e["event"] == "admit"}
+    finishes = [e for e in eng.trace if e["event"] == "finish"]
+    last_admit_tick = max(t for _, t in admits)
+    for e in finishes:
+        if e["tick"] < last_admit_tick:   # queue was non-empty then
+            assert (e["slot"], e["tick"] + 1) in admits, (
+                f"slot {e['slot']} freed at tick {e['tick']} was not "
+                "refilled next tick")
+
+
+def test_compile_count_bounded_by_buckets():
+    """Across a mixed-length workload the block step compiles at most two
+    shapes per capacity bucket (T=prefill_chunk and T=1) — never one per
+    request length."""
+    clear_compile_cache()
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=2, max_new=4, eos_token=-1, scheduler="continuous",
+        prefill_chunk=4))
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        3, 256, size=plen, dtype=np.int32))
+        for i, plen in enumerate((3, 5, 9, 14, 20, 11, 7))]
+    eng.run(reqs)
+    n = eng.compile_stats()["block"]
+    assert n is not None and n <= 2, f"block step compiled {n} shapes"
+
+
+def test_continuous_matches_manual_decode():
+    """Chunked prefill + slot decode == hand-rolled prefill+decode, with a
+    chunk smaller than the prompt so multiple prefill ticks happen."""
+    mod = configs.get("llama3.2-1b")
+    bundle = build(mod.SMOKE)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         mod.SMOKE.dtype)
+    prompt = np.arange(5, 13, dtype=np.int32)
+
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=1, max_new=4, eos_token=-1, scheduler="continuous",
+        prefill_chunk=3))
+    got = eng.run([Request(uid=0, prompt=prompt)])[0].tokens
+
+    toks = jnp.asarray(prompt)[None, :]
+    logits, cache = bundle.prefill(params, {"tokens": toks})
+    from repro.serving.engine import _pad_cache_seq
+
+    cache = _pad_cache_seq(cache, 4)
+    want = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(3):
+        logits, cache = bundle.decode(
+            params, cache, {"tokens": jnp.asarray([[want[-1]]], jnp.int32)})
+        want.append(int(jnp.argmax(logits[0, -1])))
+    assert got == want
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-2.7b"])
+def test_continuous_matches_manual_decode_ssm(arch):
+    """Same exactness for the SSM and hybrid families: the masked-scan
+    prefill must stop each slot's state exactly at its own length."""
+    mod = configs.get(arch)
+    bundle = build(mod.SMOKE)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         mod.SMOKE.dtype)
+    prompt = np.arange(5, 14, dtype=np.int32)
+
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=2, max_new=3, eos_token=-1, scheduler="continuous",
+        prefill_chunk=4))
+    got = eng.run([Request(uid=0, prompt=prompt)])[0].tokens
+
+    logits, cache = bundle.prefill(params,
+                                   {"tokens": jnp.asarray(prompt)[None, :]})
+    from repro.serving.engine import _pad_cache_seq
+
+    cache = _pad_cache_seq(cache, 3)
+    want = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(2):
+        logits, cache = bundle.decode(
+            params, cache, {"tokens": jnp.asarray([[want[-1]]], jnp.int32)})
+        want.append(int(jnp.argmax(logits[0, -1])))
+    assert got == want
+
+
+def test_ring_cache_wraps_beyond_capacity():
+    """max_context caps the ring capacity; generation beyond it slides the
+    attention window instead of failing, and per-slot pos keeps counting."""
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=1, max_new=24, eos_token=-1, scheduler="continuous",
+        prefill_chunk=8, max_context=16))
+    res = eng.run([Request(uid=0, prompt=np.arange(
+        5, 17, dtype=np.int32))])[0]
+    assert len(res.tokens) == 24          # 12 + 24 > 16: wrapped fine
+    assert eng._capacity == 16
+    # prompt (12) + every decode input (23: the final emitted token is
+    # never fed back) — pos counts absolute positions past the capacity
+    assert int(eng._cache["pos"][0]) == 12 + 24 - 1
+
+
+def test_continuous_per_request_max_new():
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=2, max_new=8, eos_token=-1, scheduler="continuous"))
+    res = eng.run([Request(uid=0, prompt=np.arange(5, 10, dtype=np.int32),
+                           max_new=2),
+                   Request(uid=1, prompt=np.arange(5, 10, dtype=np.int32))])
+    assert len(res[0].tokens) == 2 and len(res[1].tokens) == 8
+
+
+def test_encdec_falls_back_to_wave():
+    """Encoder-decoder bundles have no block-decode step: asking for the
+    continuous scheduler warns and runs the wave path."""
+    mod = configs.get("seamless-m4t-medium")
+    bundle = build(mod.SMOKE)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         mod.SMOKE.dtype)
+    with pytest.warns(UserWarning, match="falling back"):
+        eng = ServingEngine(bundle, params, ServeConfig(
+            slots=2, max_new=2, scheduler="continuous"))
+    assert eng.scheduler == "wave"
+
+
+def test_open_loop_arrivals_respected():
+    """Requests with future arrival_s are not admitted before they
+    arrive, and results carry latency bookkeeping."""
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=2, max_new=2, eos_token=-1, scheduler="continuous"))
+    reqs = [Request(uid=0, prompt=np.arange(5, 10, dtype=np.int32),
+                    arrival_s=0.0),
+            Request(uid=1, prompt=np.arange(5, 10, dtype=np.int32),
+                    arrival_s=0.15)]
+    res = eng.run(reqs)
+    r1 = [r for r in res if r.uid == 1][0]
+    assert r1.first_token_s is not None and r1.first_token_s >= 0.15
+    assert len(r1.token_s) == len(r1.tokens)
+    assert r1.finish_s >= r1.first_token_s
