@@ -73,7 +73,7 @@ def _metrics(results):
 
 
 def run(budget: str = "tiny", arch: str = "llama3.2-1b",
-        policy=None) -> list[dict]:
+        policy=None, mesh_ctx=None) -> list[dict]:
     import jax
 
     from repro import configs
@@ -88,13 +88,19 @@ def run(budget: str = "tiny", arch: str = "llama3.2-1b",
     params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
                          cfg.dtype)
 
+    # sharded rows stay comparable to single-host history: every row
+    # records the process count and the mesh shape it ran under
+    mesh_label = "none" if mesh_ctx is None else mesh_ctx.label()
     rows = []
     for rate in shape["loads"]:
         for sched in ("wave", "continuous"):
+            if sched == "wave" and mesh_ctx is not None \
+                    and jax.process_count() > 1:
+                continue        # wave admission is per-host wall clock
             eng = ServingEngine(bundle, params, ServeConfig(
                 slots=shape["slots"], max_new=16, eos_token=-1,
                 scheduler=sched, prefill_chunk=shape["prefill_chunk"],
-                policy=policy))
+                policy=policy), mesh_ctx=mesh_ctx)
             wl = lambda: make_workload(
                 shape["n_req"], rate, cfg.vocab,
                 short=shape["short"], long_new=shape["long_new"])
@@ -104,7 +110,9 @@ def run(budget: str = "tiny", arch: str = "llama3.2-1b",
             row = {"scheduler": sched, "offered_load": rate,
                    "policy": "default" if pol is None else pol.label(),
                    "n_req": shape["n_req"], "slots": shape["slots"],
-                   "arch": arch}
+                   "arch": arch,
+                   "process_count": jax.process_count(),
+                   "mesh": mesh_label}
             row.update(_metrics(results))
             if sched == "continuous":
                 row["compiled_block_shapes"] = \
@@ -118,9 +126,17 @@ def main(argv=None) -> None:
     ap.add_argument("--budget", choices=tuple(BUDGETS), default="tiny")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--mesh", default=None,
+                    help="serve sharded: mesh axes as 'data=1,model=2' "
+                         "(must multiply to the device count)")
     args = ap.parse_args(argv if argv is not None else [])
 
-    rows = run(args.budget, args.arch)
+    mesh_ctx = None
+    if args.mesh:
+        from repro.parallel.mesh_context import make_context
+
+        mesh_ctx = make_context(args.mesh)
+    rows = run(args.budget, args.arch, mesh_ctx=mesh_ctx)
     cols = ["scheduler", "offered_load", "throughput_tok_s",
             "p50_ms", "p99_ms", "total_tokens"]
     print_csv("serving_open_loop",

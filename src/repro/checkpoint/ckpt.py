@@ -1,21 +1,40 @@
-"""Sharded, atomic, mesh-shape-independent checkpointing.
+"""Sharded, atomic, mesh-shape-independent checkpointing — async by default.
 
 Layout:  <dir>/step_<N>/host_<i>.npz  +  <dir>/step_<N>/manifest.json
 
 * Each host writes only its addressable shards (leaf key -> list of
   (global-index, data) entries), so no device->host all-gather is needed.
+* **Async save** (:class:`AsyncCheckpointer`): ``save()`` snapshots the
+  addressable shards to host memory (a copy, so donated/overwritten device
+  buffers can't corrupt the file) and returns; write + fsync + rename run
+  on a background thread. The *next* ``save()`` (or an explicit
+  :meth:`~AsyncCheckpointer.wait`) is the barrier — it joins the previous
+  write and re-raises any I/O error, so the step loop overlaps exactly one
+  checkpoint with compute and can never stack unbounded dirty state.
 * Commit is atomic: write into ``step_<N>.tmp``, fsync, rename. A crash
   mid-write never corrupts the latest valid checkpoint; ``latest_step``
-  ignores ``.tmp`` dirs.
+  ignores ``.tmp`` dirs, and the next save sweeps stale ``.tmp`` dirs a
+  crash left behind. **Multi-host commit**: every host writes
+  ``host_<i>.npz`` into the shared tmp dir (via a ``.part`` rename so a
+  half-written file is never counted); host 0 renames to the final name
+  only once all ``n_hosts`` host files exist, and the other hosts block
+  until the rename lands — a checkpoint either has every host's shards or
+  is not visible at all.
 * Restore is **elastic**: shards are reassembled into global host arrays
   and re-placed under whatever sharding the *new* mesh prescribes — resume
-  on 256 chips after checkpointing on 512 (or vice versa) just works.
+  on 256 chips after checkpointing on 512 (or vice versa) just works,
+  including across process counts (placement goes through
+  ``jax.make_array_from_callback``, which only touches addressable
+  devices).
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
+import threading
+import time
 
 import jax
 import numpy as np
@@ -26,12 +45,8 @@ def _flat_with_paths(tree):
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
-def save(directory: str, step: int, tree) -> str:
-    """Write checkpoint for ``step``; returns the committed path."""
-    final = os.path.join(directory, f"step_{step}")
-    tmp = final + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
-
+def _snapshot(tree):
+    """Copy this host's addressable shards to host memory (sync phase)."""
     shards: dict[str, np.ndarray] = {}
     meta: dict[str, dict] = {}
     for key, leaf in _flat_with_paths(tree):
@@ -39,37 +54,167 @@ def save(directory: str, step: int, tree) -> str:
         meta[key] = {"shape": list(leaf.shape), "dtype": str(leaf.dtype)}
         for i, s in enumerate(leaf.addressable_shards):
             start = [idx.start or 0 for idx in s.index] if s.index else []
-            arr = np.asarray(s.data)
+            arr = np.array(s.data)  # copy: the device buffer may be reused
             shards[f"{key}||{i}||{','.join(map(str, start))}"] = (
                 arr.view(np.uint16) if arr.dtype == jax.numpy.bfloat16
                 else arr)
             meta[key].setdefault("bf16", arr.dtype == jax.numpy.bfloat16)
+    return shards, meta
 
-    host = jax.process_index()
-    np.savez(os.path.join(tmp, f"host_{host}.npz"), **shards)
-    if host == 0:
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "leaves": meta,
-                       "n_hosts": jax.process_count()}, f)
-    # commit: fsync dir entries then atomic rename
-    fd = os.open(tmp, os.O_RDONLY)
-    os.fsync(fd)
-    os.close(fd)
-    if os.path.exists(final):          # re-save of an existing step
-        import shutil
 
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    return final
+def _sweep_stale_tmp(directory: str, current_step: int) -> None:
+    """Remove ``step_*.tmp`` dirs a crashed run left behind (never the
+    current step's — in a multi-host save other hosts may be writing it)."""
+    if not os.path.isdir(directory):
+        return
+    for d in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)\.tmp", d)
+        if m and int(m.group(1)) != current_step:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def _committed_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    return sorted(
+        int(m.group(1)) for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+        and os.path.exists(os.path.join(directory, d, "manifest.json")))
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with the step loop; at most one in flight.
+
+    ``save(step, tree)`` returns after the host-memory snapshot;
+    ``wait()`` blocks until the write is committed (and re-raises any
+    background error). Calling ``save`` again waits for the previous write
+    first — that is the barrier contract the training loop relies on.
+
+    ``keep_last=N`` garbage-collects older committed ``step_*`` dirs after
+    each commit (host 0 only); None keeps everything.
+    """
+
+    def __init__(self, directory: str, *, keep_last: int | None = None,
+                 poll_s: float = 0.05, timeout_s: float = 600.0,
+                 _pre_commit=None):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+        self.directory = str(directory)
+        self.keep_last = keep_last
+        self.poll_s = poll_s
+        self.timeout_s = timeout_s
+        self._pre_commit = _pre_commit  # test hook: runs before commit
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self._committed: str | None = None
+
+    def save(self, step: int, tree) -> None:
+        """Snapshot ``tree`` and schedule the write; returns immediately.
+
+        Blocks only on the *previous* save's completion (the barrier) and
+        on the device->host copy of this host's addressable shards.
+        """
+        self.wait()
+        _sweep_stale_tmp(self.directory, step)
+        shards, meta = _snapshot(tree)
+        host = jax.process_index()
+        n_hosts = jax.process_count()
+        self._thread = threading.Thread(
+            target=self._write, name=f"ckpt-step{step}",
+            args=(step, shards, meta, host, n_hosts), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> str | None:
+        """Block until the in-flight save (if any) is committed; returns
+        the last committed path. Re-raises a background write error."""
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+        return self._committed
+
+    def last_committed(self) -> str | None:
+        """The last committed path (does not block; None if the first save
+        is still in flight or never happened)."""
+        return self._committed
+
+    # -- background phase ---------------------------------------------------
+
+    def _write(self, step, shards, meta, host, n_hosts):
+        try:
+            self._committed = self._write_inner(
+                step, shards, meta, host, n_hosts)
+        except BaseException as e:  # surfaced by the next wait()/save()
+            self._error = e
+
+    def _write_inner(self, step, shards, meta, host, n_hosts) -> str:
+        final = os.path.join(self.directory, f"step_{step}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+
+        # never let a half-written npz count toward the commit quorum
+        part = os.path.join(tmp, f"host_{host}.npz.part")
+        with open(part, "wb") as f:  # np.savez would append ".npz" to a path
+            np.savez(f, **shards)
+        os.replace(part, os.path.join(tmp, f"host_{host}.npz"))
+        if host == 0:
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "leaves": meta,
+                           "n_hosts": n_hosts}, f)
+        if self._pre_commit is not None:
+            self._pre_commit()
+
+        deadline = time.monotonic() + self.timeout_s
+        if host == 0:
+            # commit only once every host's shards are on disk
+            while True:
+                have = sum(
+                    os.path.exists(os.path.join(tmp, f"host_{i}.npz"))
+                    for i in range(n_hosts))
+                if have == n_hosts:
+                    break
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"checkpoint step {step}: only {have}/{n_hosts} "
+                        f"host files after {self.timeout_s}s")
+                time.sleep(self.poll_s)
+            fd = os.open(tmp, os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+            if os.path.exists(final):  # re-save of an existing step
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            if self.keep_last is not None:
+                for old in _committed_steps(self.directory)[:-self.keep_last]:
+                    shutil.rmtree(
+                        os.path.join(self.directory, f"step_{old}"),
+                        ignore_errors=True)
+        else:
+            # the rename is host 0's; block until it lands
+            while os.path.exists(tmp) or not os.path.exists(
+                    os.path.join(final, "manifest.json")):
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"checkpoint step {step}: host 0 did not commit "
+                        f"within {self.timeout_s}s")
+                time.sleep(self.poll_s)
+        return final
+
+
+def save(directory: str, step: int, tree, *,
+         keep_last: int | None = None) -> str:
+    """Synchronous save (write + commit before returning); returns the
+    committed path. The async form is :class:`AsyncCheckpointer`."""
+    ckpt = AsyncCheckpointer(directory, keep_last=keep_last)
+    ckpt.save(step, tree)
+    return ckpt.wait()
 
 
 def latest_step(directory: str) -> int | None:
-    if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))
-             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
-    return max(steps) if steps else None
+    steps = _committed_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, step: int, target_tree, shardings=None):
@@ -108,9 +253,13 @@ def restore(directory: str, step: int, target_tree, shardings=None):
         arr = assembled[key]
         info = manifest["leaves"][key]
         if info.get("bf16"):
-            arr = arr.view(np.uint16)
-            jarr = jax.numpy.asarray(arr).view(jax.numpy.bfloat16)
+            arr = arr.view(jax.numpy.bfloat16)  # ml_dtypes view, zero-copy
+        if shd is not None:
+            # placement touches only addressable devices, so elastic
+            # restore works across process counts and mesh shapes
+            out.append(jax.make_array_from_callback(
+                tuple(info["shape"]), shd,
+                lambda idx, a=arr: a[idx]))
         else:
-            jarr = jax.numpy.asarray(arr)
-        out.append(jax.device_put(jarr, shd) if shd is not None else jarr)
+            out.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -54,7 +54,7 @@ import json
 import math
 import time
 from pathlib import Path
-from typing import Any, Iterable
+from typing import Any, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -255,6 +255,48 @@ def merge_tables(base: dict | None, new: dict) -> dict:
     if base is not None:
         merged["backends"].update(base.get("backends", {}))
     merged["backends"].update(new.get("backends", {}))
+    return merged
+
+
+def _entry_us(ent: dict) -> float:
+    """The winning path's measured time for one entry (inf when the entry
+    carries no timing — e.g. an up-converted v1/v2 table)."""
+    us = ent.get("us")
+    if isinstance(us, dict):
+        t = us.get(ent.get("path"))
+        if isinstance(t, (int, float)):
+            return float(t)
+    return math.inf
+
+
+def merge_host_tables(paths: Sequence[str | Path]) -> dict:
+    """Fold per-host table files from a multi-host job into one table.
+
+    Unlike :func:`merge_tables` (whole-section overlay, for dropping a
+    GPU-measured table into the checked-in default), this merges at
+    *entry* granularity: each host of a multi-host run measures only the
+    buckets its shards exercised, and the union is the job's table. When
+    two hosts measured the same bucket for the same backend, the faster
+    winning time takes the cell — hosts are assumed homogeneous per
+    backend, so a slower duplicate is just a noisier measurement of the
+    same machine class. Every merged entry records which file it came
+    from under ``"src"`` (provenance; ignored by resolution, preserved by
+    ``load_table``).
+    """
+    if not paths:
+        raise ValueError("merge_host_tables: no input tables")
+    merged: dict = {"version": TABLE_VERSION, "backends": {}}
+    for path in paths:
+        table = load_table(path)
+        src = Path(path).name
+        for bk, section in table["backends"].items():
+            out = merged["backends"].setdefault(
+                bk, {"jax": section.get("jax"), "entries": {}})
+            for key, ent in section["entries"].items():
+                ent = dict(ent, src=src)
+                have = out["entries"].get(key)
+                if have is None or _entry_us(ent) < _entry_us(have):
+                    out["entries"][key] = ent
     return merged
 
 
@@ -644,6 +686,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="verify the checked-in default parses and matches "
                          "the harness's bucket set (exit 1 if stale)")
+    ap.add_argument("--merge", nargs="+", metavar="TABLE",
+                    help="fold per-host table files from a multi-host job "
+                         "into one table at --out (entry-level union; "
+                         "duplicate buckets resolved by winning time, "
+                         "provenance recorded per entry)")
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--sweep-budget", choices=("full", "tiny"),
                     default="full",
@@ -655,6 +702,15 @@ def main(argv: list[str] | None = None) -> int:
                          "tuning entries are exercised on any host")
     args = ap.parse_args(argv)
 
+    if args.merge:
+        table = merge_host_tables(args.merge)
+        save_table(table, args.out)
+        load_table(args.out)  # round-trip: the merged file must validate
+        sections = {bk: len(sec["entries"])
+                    for bk, sec in table["backends"].items()}
+        print(f"merged {len(args.merge)} host tables into {args.out} "
+              f"(buckets per backend: {sections})")
+        return 0
     if args.check:
         problems = check_default()
         for p in problems:

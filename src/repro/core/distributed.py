@@ -57,6 +57,45 @@ def dist_scan(x_local: jax.Array, axis_name: str) -> jax.Array:
     return local + carry[..., None]
 
 
+def weighted_exclusive_carry(
+    total: jax.Array, log_decay: jax.Array, axis_name: str
+) -> jax.Array:
+    """Weighted exclusive scan of per-device (total, log-decay) pairs.
+
+    Solves the cross-device recurrence ``H_i = exp(L_i) * H_{i-1} + T_i``
+    over mesh axis ``axis_name`` and returns this device's *incoming* carry
+    ``H_{i-1}`` (zeros on device 0). ``total`` may carry extra trailing
+    state dims beyond ``log_decay``'s shape — ``log_decay`` broadcasts over
+    them (the SSD case: totals are ``(B, H, P, N)`` states decayed by a
+    per-``(B, H)`` scalar; the weighted-scan case has no extra dims).
+
+    Matmul form throughout: all_gather both, hit the totals with the decay
+    matrix ``exp(segsum(L))`` — the same 1-semiseparable mask as the tile
+    level, with the mesh axis playing the role of the tile row — and select
+    this device's row of the shifted result.
+    """
+    from repro.core.tiles import segsum
+
+    if total.shape[:log_decay.ndim] != log_decay.shape:
+        raise ValueError(
+            f"log_decay shape {log_decay.shape} must prefix total shape "
+            f"{total.shape}")
+    gathered_t = jax.lax.all_gather(total, axis_name)              # (ndev, ...)
+    gathered_d = jax.lax.all_gather(log_decay, axis_name)
+    ndev = gathered_t.shape[0]
+    idx = jax.lax.axis_index(axis_name)
+
+    d = jnp.moveaxis(gathered_d, 0, -1)                 # (*D, ndev)
+    m = jnp.exp(segsum(d))                              # (*D, ndev, ndev)
+    # flatten the extra state dims so the combine is one batched matmul
+    t = jnp.moveaxis(gathered_t.reshape((ndev,) + log_decay.shape + (-1,)),
+                     0, -2)                             # (*D, ndev, extra)
+    s = m @ t                                           # inclusive H_i
+    excl = jnp.concatenate(
+        [jnp.zeros_like(s[..., :1, :]), s[..., :-1, :]], axis=-2)
+    return jnp.take(excl, idx, axis=-2).reshape(total.shape)
+
+
 def dist_weighted_scan(
     x_local: jax.Array, log_a_local: jax.Array, axis_name: str
 ) -> jax.Array:
@@ -68,24 +107,7 @@ def dist_weighted_scan(
     """
     acc = jnp.float32
     local = tcu_weighted_scan(x_local, log_a_local)
-    total = local[..., -1]
-    log_decay = jnp.sum(log_a_local.astype(acc), axis=-1)
-
-    gathered_t = jax.lax.all_gather(total, axis_name)              # (ndev, ...)
-    gathered_d = jax.lax.all_gather(log_decay, axis_name)
-    ndev = gathered_t.shape[0]
-    idx = jax.lax.axis_index(axis_name)
-
-    # weighted exclusive scan over the device axis (leading), matmul-form
-    from repro.core.tiles import segsum
-
-    # move device axis last for segsum convenience
-    t = jnp.moveaxis(gathered_t, 0, -1)
-    d = jnp.moveaxis(gathered_d, 0, -1)
-    m = jnp.exp(segsum(d))
-    s = jnp.einsum("...ij,...j->...i", m, t)
-    excl = jnp.concatenate([jnp.zeros_like(s[..., :1]), s[..., :-1]], axis=-1)
-    carry = jnp.take(excl, idx, axis=-1)
-
+    carry = weighted_exclusive_carry(
+        local[..., -1], jnp.sum(log_a_local.astype(acc), axis=-1), axis_name)
     prefix = jnp.cumsum(log_a_local.astype(acc), axis=-1)
     return local + carry[..., None] * jnp.exp(prefix)

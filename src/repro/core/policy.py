@@ -143,6 +143,21 @@ def _warn_tile_downgrade() -> None:
         UserWarning, stacklevel=5)
 
 
+def _shard_effective_n(op: str, n: int) -> int:
+    """Per-shard bucket size under an active ``parallel.MeshContext``.
+
+    Sharding is what makes the per-device problem small — a model-parallel
+    shard of a reduce/scan call is just another small-n band, so the
+    crossover table and TuneSpec must key off the shard's shape, not the
+    global one. Deferred import: ``parallel`` imports this module.
+    """
+    try:
+        from repro.parallel import mesh_context
+    except ImportError:  # parallel package stripped from a minimal install
+        return n
+    return mesh_context.effective_call_n(op, n)
+
+
 # ---------------------------------------------------------------------------
 # tuning specs
 
@@ -510,6 +525,8 @@ class KernelPolicy:
         :meth:`tuning_for` (None when ``op`` is unknown) — the tile
         kernels take their geometry from it.
         """
+        if op is not None and n is not None:
+            n = _shard_effective_n(op, n)
         label = self._resolve_label(op=op, n=n, dtype=dtype, level=level,
                                     explicit=explicit)
         return ResolvedPath(

@@ -47,14 +47,30 @@ class SyntheticLMPipeline:
         self._step = 0
         self._thread: threading.Thread | None = None
 
+    def host_range(self, process_index: int | None = None,
+                   process_count: int | None = None) -> tuple[int, int]:
+        """This host's [lo, hi) slice of the global batch.
+
+        Remainder-aware: when ``global_batch`` is not divisible by the
+        process count, the first ``global_batch % process_count`` hosts
+        take one extra example, so the host slices exactly cover
+        ``[0, global_batch)`` — disjoint, no example dropped or doubled.
+        Pass explicit ``process_index``/``process_count`` to inspect
+        another host's slice (tests simulate whole topologies this way).
+        """
+        n_proc = (jax.process_count() if process_count is None
+                  else process_count)
+        idx = (jax.process_index() if process_index is None
+               else process_index)
+        base, rem = divmod(self.cfg.global_batch, n_proc)
+        lo = idx * base + min(idx, rem)
+        return lo, lo + base + (1 if idx < rem else 0)
+
     def _host_range(self) -> tuple[int, int]:
-        n_proc = jax.process_count()
-        per = self.cfg.global_batch // n_proc
-        lo = jax.process_index() * per
-        return lo, lo + per
+        return self.host_range()
 
     def host_batch(self, step: int) -> dict[str, np.ndarray]:
-        lo, hi = self._host_range()
+        lo, hi = self.host_range()
         tok = _philox_tokens(self.cfg, step, lo, hi)
         return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
 

@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel.compat import make_mesh
+from repro.parallel.mesh_context import MeshContext
 from repro.parallel.sharding import Rules
 
 # Hardware constants (TPU v5e) used by the roofline analyser.
@@ -32,7 +34,18 @@ HBM_BYTES = 16 * 2 ** 30
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
+
+
+def make_production_context(*, multi_pod: bool = False, fsdp: bool = True,
+                            seq_shard: bool = False,
+                            op_shard_axes=()) -> MeshContext:
+    """The production mesh + rules as one activatable MeshContext."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return MeshContext(mesh=mesh,
+                       rules=make_rules(mesh, fsdp=fsdp,
+                                        seq_shard=seq_shard),
+                       op_shard_axes=op_shard_axes)
 
 
 def make_rules(mesh: jax.sharding.Mesh, *, fsdp: bool = True,

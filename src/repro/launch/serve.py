@@ -44,6 +44,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling RNG seed (and synthetic request seed)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="mesh axes as 'data=1,model=2' (multiplies to the "
+                         "global device count): serve sharded — the ring "
+                         "KV cache splits over the model axis and the "
+                         "kernel policy resolves per-shard TuneSpecs")
     from repro.core import dispatch
     from repro.core import policy as kpolicy
 
@@ -67,20 +72,35 @@ def main() -> None:
     mod = configs.get(args.arch)
     cfg = mod.SMOKE if args.config == "smoke" else mod.FULL
     bundle = build(cfg)
+    mesh_ctx = None
+    if args.mesh:
+        from repro.parallel.mesh_context import make_context
+
+        mesh_ctx = make_context(args.mesh)
+        print(f"serving sharded over mesh {mesh_ctx.label()}")
     params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
                          cfg.dtype)
+    if mesh_ctx is not None:
+        from repro.models.common import partition_specs
+
+        specs = partition_specs(bundle.params_pspec, rules=mesh_ctx.rules,
+                                fsdp_ok=False)
+        shardings = jax.tree.map(mesh_ctx.named_sharding, specs)
+        params = jax.tree.map(jax.device_put, params, shardings)
     if args.ckpt_dir:
         latest = ckpt.latest_step(args.ckpt_dir)
         if latest is not None:
-            state = ckpt.restore(args.ckpt_dir, latest,
-                                 {"params": params})
+            state = ckpt.restore(
+                args.ckpt_dir, latest, {"params": params},
+                shardings=None if mesh_ctx is None
+                else {"params": shardings})
             params = state["params"]
             print(f"loaded checkpoint step {latest}")
 
     engine = ServingEngine(bundle, params, ServeConfig(
         slots=args.slots, max_new=args.max_new, policy=pol,
         scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
-        seed=args.seed))
+        seed=args.seed), mesh_ctx=mesh_ctx)
     rng = np.random.default_rng(args.seed)
     arrival = 0.0
     reqs = []

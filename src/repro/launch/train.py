@@ -36,23 +36,24 @@ from repro.configs.common import SMOKE_BATCH, SMOKE_SEQ
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
 from repro.models import build
 from repro.optim import OptConfig
-from repro.parallel.sharding import Rules, use_rules
+from repro.parallel.mesh_context import MeshContext, make_context
 from repro.training import TrainConfig, init_train_state, make_train_step
 
 
+def build_mesh_context(tp: int, mesh_arg: str | None = None) -> MeshContext:
+    """The training MeshContext: ``--mesh data=2,model=2`` wins; otherwise
+    the legacy ``--tp`` split of whatever devices exist."""
+    if mesh_arg:
+        return make_context(mesh_arg)
+    dp = jax.device_count() // tp
+    return make_context((("data", dp), ("model", tp)))
+
+
 def build_mesh_and_rules(tp: int):
-    n = jax.device_count()
-    dp = n // tp
-    mesh = jax.make_mesh((dp, tp), ("data", "model"))
-    table = {"batch": ("data",), "heads": "model", "kv_heads": "model",
-             "ff": "model", "e_ff": "model", "experts": "model",
-             "vocab": "model", "inner": "model", "inner_all": "model",
-             "ssm_heads": "model", "embed": None, "layers": None,
-             "moe_groups": ("data",), "exp_slots": "model",
-             "exp_cap": None, "kv_seq": None}
-    rules = Rules(table=table, fsdp="data" if dp > 1 else None,
-                  axis_sizes={"data": dp, "model": tp})
-    return mesh, rules
+    """Deprecated spelling of :func:`build_mesh_context` (kept for older
+    scripts); returns the context's (mesh, rules) pair."""
+    ctx = build_mesh_context(tp)
+    return ctx.mesh, ctx.rules
 
 
 def main() -> None:
@@ -63,11 +64,16 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=SMOKE_BATCH * 2)
     ap.add_argument("--seq", type=int, default=SMOKE_SEQ)
     ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="mesh axes as 'data=2,model=2' (multiplies to the "
+                         "global device count); overrides --tp")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--ckpt-every-s", type=float, default=600.0)
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="committed checkpoints to keep (0 keeps all)")
     ap.add_argument("--resume", choices=("auto", "none"), default="auto")
     ap.add_argument("--straggler-factor", type=float, default=1.5)
     ap.add_argument("--straggler-report", default=None,
@@ -98,22 +104,31 @@ def main() -> None:
     if pol is not None:
         cfg = dataclasses.replace(cfg, policy=pol)
     bundle = build(cfg)
-    mesh, rules = build_mesh_and_rules(args.tp)
+    mesh_ctx = build_mesh_context(args.tp, args.mesh)
     opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps),
                         decay_steps=args.steps, policy=pol)
     train_cfg = TrainConfig(microbatches=args.microbatches)
+    ckpt_writer = ckpt.AsyncCheckpointer(
+        args.ckpt_dir, keep_last=args.keep_last or None)
 
-    with use_rules(rules), mesh:
+    with mesh_ctx:
         state = init_train_state(jax.random.PRNGKey(0), bundle, opt_cfg,
                                  train_cfg)
-        step_fn = jax.jit(make_train_step(bundle, opt_cfg, train_cfg),
-                          donate_argnums=(0,))
+        step_fn = jax.jit(
+            make_train_step(bundle, opt_cfg, train_cfg, mesh_ctx=mesh_ctx),
+            donate_argnums=(0,))
 
         start = 0
         if args.resume == "auto":
             latest = ckpt.latest_step(args.ckpt_dir)
             if latest is not None:
-                state = ckpt.restore(args.ckpt_dir, latest, state)
+                from repro.training import train_state_pspecs
+
+                specs = train_state_pspecs(bundle, mesh_ctx.rules,
+                                           train_cfg)
+                shardings = jax.tree.map(mesh_ctx.named_sharding, specs)
+                state = ckpt.restore(args.ckpt_dir, latest, state,
+                                     shardings=shardings)
                 start = latest
                 print(f"resumed from step {latest}")
 
@@ -156,9 +171,14 @@ def main() -> None:
             due_steps = (step + 1) % args.ckpt_every == 0
             due_time = time.time() - last_ckpt_t > args.ckpt_every_s
             if due_steps or due_time or step == args.steps - 1:
-                path = ckpt.save(args.ckpt_dir, step + 1, state)
+                # async: snapshots now, writes in the background; the next
+                # save (or the final wait below) is the commit barrier
+                ckpt_writer.save(step + 1, state)
                 last_ckpt_t = time.time()
-                print(f"checkpointed -> {path}")
+                print(f"checkpoint scheduled @ step {step + 1}")
+
+        path = ckpt_writer.wait()
+        print(f"checkpointed -> {path}")
 
     print(f"done: {args.steps - start} steps, "
           f"median step {np.median(times):.3f}s")

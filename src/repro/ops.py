@@ -84,26 +84,50 @@ def _policy_arg(policy, path):
     return policy
 
 
+def _shard_ops():
+    """The shard_map routing layer (deferred: ``parallel`` imports core).
+
+    Under an active :class:`~repro.parallel.mesh_context.MeshContext`,
+    eager committed arrays whose bucket axis is sharded over the context's
+    mesh run the per-shard kernel inside ``shard_map`` with the grid-level
+    carry combine; everything else (tracers included — GSPMD partitions
+    the fused forms in-jit) falls back to plain dispatch.
+    """
+    from repro.parallel import shard_ops
+
+    return shard_ops
+
+
 def reduce(x: jax.Array, *, policy=None, path: str | None = None
            ) -> jax.Array:
     """Segmented sum over the last axis of ``x (..., n)`` -> f32
     ``(...,)``."""
-    return _dispatch.reduce(x, policy=_policy_arg(policy, path))
+    policy = _policy_arg(policy, path)
+    out = _shard_ops().sharded_reduce(x, policy=policy)
+    if out is not None:
+        return out
+    return _dispatch.reduce(x, policy=policy)
 
 
 def scan(x: jax.Array, *, policy=None, exclusive: bool = False,
          path: str | None = None) -> jax.Array:
     """Prefix sum over the last axis -> f32, same shape
     (``exclusive=True`` shifts in a leading zero)."""
-    return _dispatch.scan(x, policy=_policy_arg(policy, path),
-                          exclusive=exclusive)
+    policy = _policy_arg(policy, path)
+    out = _shard_ops().sharded_scan(x, policy=policy, exclusive=exclusive)
+    if out is not None:
+        return out
+    return _dispatch.scan(x, policy=policy, exclusive=exclusive)
 
 
 def weighted_scan(x: jax.Array, log_a: jax.Array, *, policy=None,
                   path: str | None = None) -> jax.Array:
     """Decayed scan ``y_i = exp(log_a_i) * y_{i-1} + x_i`` -> f32."""
-    return _dispatch.weighted_scan(x, log_a,
-                                   policy=_policy_arg(policy, path))
+    policy = _policy_arg(policy, path)
+    out = _shard_ops().sharded_weighted_scan(x, log_a, policy=policy)
+    if out is not None:
+        return out
+    return _dispatch.weighted_scan(x, log_a, policy=policy)
 
 
 def ragged_reduce(x: jax.Array, seg_ids: jax.Array, n_segments: int, *,
@@ -148,7 +172,12 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
         path: str | None = None):
     """Mamba-2 SSD scan -> ``y (B, L, H, P)``; with ``return_state=True``
     also the final state ``(B, H, P, N)`` f32."""
-    return _dispatch.ssd(x, dt, a, b, c,
-                         policy=_policy_arg(policy, path), chunk=chunk,
+    policy = _policy_arg(policy, path)
+    out = _shard_ops().sharded_ssd(x, dt, a, b, c, policy=policy,
+                                   chunk=chunk, matmul_dtype=matmul_dtype,
+                                   return_state=return_state)
+    if out is not None:
+        return out
+    return _dispatch.ssd(x, dt, a, b, c, policy=policy, chunk=chunk,
                          matmul_dtype=matmul_dtype,
                          return_state=return_state)

@@ -1,3 +1,11 @@
+from repro.parallel.mesh_context import (
+    MeshContext,
+    activate,
+    current_mesh_context,
+    make_context,
+    parse_mesh_arg,
+    shard_local_scope,
+)
 from repro.parallel.sharding import (
     Rules,
     current_rules,
@@ -8,10 +16,16 @@ from repro.parallel.sharding import (
 )
 
 __all__ = [
+    "MeshContext",
     "Rules",
+    "activate",
+    "current_mesh_context",
     "current_rules",
     "logical_constraint",
+    "make_context",
+    "parse_mesh_arg",
     "set_rules",
+    "shard_local_scope",
     "spec_for",
     "use_rules",
 ]

@@ -36,8 +36,15 @@ Both schedulers share the slot/result bookkeeping and the sampling RNG
 block-decode step; asking them for the continuous scheduler warns and
 falls back to wave.
 
-For the multi-chip case the cache pytree is sharded with the same logical
-rules as the dry-run decode cells; the engine code is sharding-agnostic.
+For the multi-chip case pass a :class:`~repro.parallel.mesh_context.
+MeshContext`: the ring cache is then allocated *sharded* under the
+context's rules (``kv_heads`` -> the model axis, so each host holds only
+its KV shards), the block step activates the context (kernel policy
+resolves per-shard TuneSpecs) and pins logits replicated, and in
+multi-host runs the engine switches to lockstep admission — every host
+is fed the same request stream and admits queue-order, because each
+block step is one SPMD collective program that all hosts must enter with
+identical shapes. Admission/eviction bookkeeping itself stays host-local.
 """
 from __future__ import annotations
 
@@ -160,12 +167,12 @@ def clear_compile_cache() -> None:
     _STEP_CACHE.clear()
 
 
-def _steps_for(bundle: Bundle) -> dict:
-    key = bundle.cfg
+def _steps_for(bundle: Bundle, mesh_ctx=None) -> dict:
+    key = (bundle.cfg, None if mesh_ctx is None else mesh_ctx.key())
     entry = _STEP_CACHE.get(key)
     if entry is None:
         prefill, decode = make_serve_step(bundle)
-        block = make_block_serve_step(bundle)
+        block = make_block_serve_step(bundle, mesh_ctx=mesh_ctx)
         entry = {"prefill": jax.jit(prefill), "decode": jax.jit(decode),
                  "block": None if block is None else jax.jit(block)}
         _STEP_CACHE[key] = entry
@@ -177,7 +184,8 @@ class ServingEngine:
     the configured scheduler; each call returns only that call's results
     (``self.results`` keeps the full history)."""
 
-    def __init__(self, bundle: Bundle, params, cfg: ServeConfig):
+    def __init__(self, bundle: Bundle, params, cfg: ServeConfig,
+                 mesh_ctx=None):
         # compare the WHOLE policy, not a path string: an autotune-mode or
         # per-op-override change must invalidate the cached bundle too
         # (its jitted prefill/decode steps baked the old choices in)
@@ -189,7 +197,19 @@ class ServingEngine:
         self.bundle = bundle
         self.cfg = cfg
         self.params = params
-        steps = _steps_for(bundle)
+        self.mesh_ctx = mesh_ctx
+        # multi-host serving runs every host through the same tick
+        # sequence (SPMD: each block step is a collective program). The
+        # hosts must therefore make identical admission decisions, so
+        # wall-clock arrival gating is disabled — every host is fed the
+        # same request stream and admits it queue-order ("lockstep").
+        # Admission/eviction bookkeeping itself stays host-local python.
+        self._lockstep = mesh_ctx is not None and jax.process_count() > 1
+        if self._lockstep and cfg.scheduler == "wave":
+            raise ValueError(
+                "multi-host serving requires the continuous scheduler "
+                "(wave admission depends on per-host wall clocks)")
+        steps = _steps_for(bundle, mesh_ctx)
         self._prefill = steps["prefill"]
         self._decode = steps["decode"]
         self._block = steps["block"]
@@ -227,13 +247,31 @@ class ServingEngine:
     def _budget(self, req: Request) -> int:
         return self.cfg.max_new if req.max_new is None else req.max_new
 
+    def _fetch(self, arr: jax.Array) -> np.ndarray:
+        """Device array -> host np. Multi-host arrays are not fully
+        addressable; the block step pins its outputs replicated, so this
+        host's shard 0 IS the global value."""
+        if self._lockstep:
+            return np.asarray(arr.addressable_data(0))
+        return np.asarray(arr)
+
+    def _to_device(self, arr: np.ndarray) -> jax.Array:
+        """Host np -> device array; in multi-host, a *global* replicated
+        array (every host passes the same value — lockstep invariant)."""
+        if self._lockstep:
+            sharding = jax.sharding.NamedSharding(
+                self.mesh_ctx.mesh, jax.sharding.PartitionSpec())
+            return jax.make_array_from_process_local_data(
+                sharding, np.asarray(arr))
+        return jnp.asarray(arr)
+
     def _sample(self, logits: jax.Array) -> np.ndarray:
         if logits.ndim == 3:            # wave decode emits (B, T, V)
             logits = logits[:, -1]
         if self.cfg.greedy:
-            return np.asarray(jnp.argmax(logits, axis=-1))
+            return self._fetch(jnp.argmax(logits, axis=-1))
         self._rng, sub = jax.random.split(self._rng)
-        return np.asarray(jax.random.categorical(
+        return self._fetch(jax.random.categorical(
             sub, logits / self.cfg.temperature))
 
     def run(self, requests: list[Request]) -> list[Result]:
@@ -256,11 +294,26 @@ class ServingEngine:
         if self.cfg.max_context is not None:
             cap = min(cap, _bucket(self.cfg.max_context))
         if self._cache is None or self._capacity != cap:
-            self._cache = init_params(
-                jax.random.PRNGKey(0),
-                self.bundle.cache_pspec(self.cfg.slots, cap,
-                                        per_slot_pos=True),
-                self.bundle.cfg.dtype)
+            pspec_tree = self.bundle.cache_pspec(self.cfg.slots, cap,
+                                                 per_slot_pos=True)
+            ctx = self.mesh_ctx
+            if ctx is not None and ctx.mesh is not None:
+                # sharded ring cache: build under jit with out_shardings
+                # from the context's rules (kv_heads -> model axis), so
+                # each host only allocates its addressable KV shards
+                from repro.models.common import partition_specs
+
+                specs = partition_specs(pspec_tree, rules=ctx.rules,
+                                        fsdp_ok=False)
+                shardings = jax.tree.map(ctx.named_sharding, specs)
+                self._cache = jax.jit(
+                    lambda: init_params(jax.random.PRNGKey(0), pspec_tree,
+                                        self.bundle.cfg.dtype),
+                    out_shardings=shardings)()
+            else:
+                self._cache = init_params(
+                    jax.random.PRNGKey(0), pspec_tree,
+                    self.bundle.cfg.dtype)
             self._capacity = cap
 
     def _run_continuous(self, t0: float) -> list[Result]:
@@ -274,10 +327,12 @@ class ServingEngine:
             now = time.perf_counter() - t0
             cur = self.ticks
             # admission: refill every free slot from the arrived queue
+            # (lockstep mode ignores arrival clocks — see __init__)
             reset = np.zeros(nb, bool)
             for i, s in enumerate(slots):
                 if s.free and self.queue and \
-                        self.queue[0].arrival_s <= now:
+                        (self._lockstep
+                         or self.queue[0].arrival_s <= now):
                     req = self.queue.popleft()
                     slots[i] = s = _Slot(
                         free=False, req=req, budget=self._budget(req),
@@ -293,7 +348,7 @@ class ServingEngine:
                 if not self.queue:
                     break
                 wait = self.queue[0].arrival_s - now
-                if wait > 0:
+                if wait > 0 and not self._lockstep:
                     time.sleep(min(wait, 0.01))
                 continue
 
@@ -314,8 +369,8 @@ class ServingEngine:
                     tokens[i, 0] = s.last
                     n_valid[i] = 1
             logits, self._cache = self._block(
-                self.params, self._cache, jnp.asarray(tokens),
-                jnp.asarray(n_valid), jnp.asarray(reset))
+                self.params, self._cache, self._to_device(tokens),
+                self._to_device(n_valid), self._to_device(reset))
             nxt = self._sample(logits)
             now = time.perf_counter() - t0
             self.ticks = cur + 1

@@ -132,9 +132,16 @@ def _cast_tree(tree, dtype):
 
 
 def make_train_step(bundle: Bundle, opt_cfg: OptConfig,
-                    train_cfg: TrainConfig = TrainConfig()) -> Callable:
+                    train_cfg: TrainConfig = TrainConfig(), *,
+                    mesh_ctx=None) -> Callable:
     """-> step(state, batch) -> (state, metrics). Pure; jit at the call
-    site with in/out shardings (GSPMD inserts every collective)."""
+    site with in/out shardings (GSPMD inserts every collective).
+
+    ``mesh_ctx`` (a :class:`~repro.parallel.mesh_context.MeshContext`)
+    activates at every call, so tracing sees the context's rules and the
+    kernel policy resolves TuneSpecs for the *shard* shapes."""
+    from repro.parallel.mesh_context import activate
+
     compute_dtype = bundle.cfg.dtype
     nmb = train_cfg.microbatches
 
@@ -163,24 +170,26 @@ def make_train_step(bundle: Bundle, opt_cfg: OptConfig,
         return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
     def step(state, batch):
-        loss, grads = grads_of(state["params"], batch)
-        new_state = dict(state)
-        if train_cfg.compress_grads:
-            key, sub = jax.random.split(state["rng"])
-            grads, err = _compress(grads, state.get("err"), sub)
-            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-            new_state["err"] = err
-            new_state["rng"] = key
-        if train_cfg.optimizer == "adafactor":
-            p, opt, metrics = adafactor_update(
-                grads, state["opt"], state["params"], opt_cfg)
-        else:
-            p, opt, metrics = adamw_update(
-                grads, state["opt"], state["params"], opt_cfg)
-        new_state["params"] = p
-        new_state["opt"] = opt
-        metrics["loss"] = loss
-        return new_state, metrics
+        with activate(mesh_ctx):
+            loss, grads = grads_of(state["params"], batch)
+            new_state = dict(state)
+            if train_cfg.compress_grads:
+                key, sub = jax.random.split(state["rng"])
+                grads, err = _compress(grads, state.get("err"), sub)
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.float32), grads)
+                new_state["err"] = err
+                new_state["rng"] = key
+            if train_cfg.optimizer == "adafactor":
+                p, opt, metrics = adafactor_update(
+                    grads, state["opt"], state["params"], opt_cfg)
+            else:
+                p, opt, metrics = adamw_update(
+                    grads, state["opt"], state["params"], opt_cfg)
+            new_state["params"] = p
+            new_state["opt"] = opt
+            metrics["loss"] = loss
+            return new_state, metrics
 
     return step
 
@@ -204,7 +213,8 @@ def make_serve_step(bundle: Bundle) -> tuple[Callable, Callable]:
     return prefill_step, decode_step
 
 
-def make_block_serve_step(bundle: Bundle) -> Callable | None:
+def make_block_serve_step(bundle: Bundle, *,
+                          mesh_ctx=None) -> Callable | None:
     """-> step(params, cache, tokens (B,T), n_valid (B,), reset_mask (B,))
     -> (next_logits (B, vocab), cache) — the continuous-batching slot
     step. The cache carries per-slot position vectors; ``n_valid`` masks
@@ -212,14 +222,27 @@ def make_block_serve_step(bundle: Bundle) -> Callable | None:
     single-token decode mix freely in one call); ``reset_mask`` clears a
     slot's sequence state on admission. Returns None when the bundle has
     no block decode (encoder-decoder) — the engine then falls back to
-    wave scheduling."""
+    wave scheduling.
+
+    ``mesh_ctx`` activates at every call (sharded serving: the ring KV
+    cache shards over the model axis via the context's rules); the
+    returned logits are pinned replicated so every host can fetch its
+    addressable copy for sampling."""
     if bundle.decode_block is None:
         return None
+    from repro.parallel.mesh_context import activate
+
     compute_dtype = bundle.cfg.dtype
 
     def block_step(params, cache, tokens, n_valid, reset_mask):
-        return bundle.decode_block(
-            _cast_tree(params, compute_dtype), cache, {"tokens": tokens},
-            n_valid=n_valid, reset_mask=reset_mask)
+        with activate(mesh_ctx):
+            logits, cache = bundle.decode_block(
+                _cast_tree(params, compute_dtype), cache,
+                {"tokens": tokens}, n_valid=n_valid, reset_mask=reset_mask)
+            if mesh_ctx is not None and mesh_ctx.mesh is not None:
+                logits = jax.lax.with_sharding_constraint(
+                    logits, jax.sharding.NamedSharding(
+                        mesh_ctx.mesh, jax.sharding.PartitionSpec()))
+            return logits, cache
 
     return block_step

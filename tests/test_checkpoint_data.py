@@ -88,6 +88,78 @@ def test_train_state_roundtrip(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# async checkpointing
+
+
+def test_async_save_returns_before_commit(tmp_path):
+    """save() must return while the write is still in flight; wait() is
+    the commit barrier (the ISSUE's async acceptance criterion)."""
+    import threading
+
+    gate = threading.Event()
+    writer = ckpt.AsyncCheckpointer(str(tmp_path), _pre_commit=gate.wait)
+    tree = _tree()
+    writer.save(4, tree)                      # returns with commit gated
+    assert not (tmp_path / "step_4").exists()
+    assert ckpt.latest_step(str(tmp_path)) is None
+    gate.set()
+    path = writer.wait()
+    assert path.endswith("step_4")
+    assert (tmp_path / "step_4" / "manifest.json").exists()
+    restored = ckpt.restore(str(tmp_path), 4, tree)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+
+
+def test_async_second_save_is_barrier(tmp_path):
+    """A second save() observes the first one committed (no two writes in
+    flight), and the committed checkpoint restores."""
+    writer = ckpt.AsyncCheckpointer(str(tmp_path))
+    tree = _tree()
+    writer.save(1, tree)
+    writer.save(2, tree)                      # waits for step 1 first
+    assert (tmp_path / "step_1" / "manifest.json").exists()
+    writer.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+
+def test_async_save_error_surfaces_on_wait(tmp_path):
+    def boom():
+        raise RuntimeError("disk on fire")
+
+    writer = ckpt.AsyncCheckpointer(str(tmp_path), _pre_commit=boom)
+    writer.save(1, _tree())
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        writer.wait()
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_keep_last_gc(tmp_path):
+    writer = ckpt.AsyncCheckpointer(str(tmp_path), keep_last=2)
+    tree = _tree()
+    for step in (1, 2, 3, 4):
+        writer.save(step, tree)
+    writer.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_3", "step_4"]
+
+
+def test_crashed_tmp_cleaned_on_next_save(tmp_path):
+    """A stale step_*.tmp from a crashed run is swept by the next save,
+    and latest_step never saw it."""
+    stale = tmp_path / "step_9.tmp"
+    os.makedirs(stale)
+    (stale / "host_0.npz").write_bytes(b"partial garbage")
+    assert ckpt.latest_step(str(tmp_path)) is None
+    writer = ckpt.AsyncCheckpointer(str(tmp_path))
+    writer.save(10, _tree())
+    writer.wait()
+    assert not stale.exists()
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
+# ---------------------------------------------------------------------------
 # data pipeline
 
 
@@ -120,6 +192,37 @@ def test_data_host_shards_disjoint_and_stable():
     full = _philox_tokens(cfg, 3, 0, 16)
     lo_hi = [(0, 4), (4, 8), (8, 12), (12, 16)]
     shards = [_philox_tokens(cfg, 3, lo, hi) for lo, hi in lo_hi]
+    np.testing.assert_array_equal(np.concatenate(shards), full)
+
+
+def test_data_host_range_remainder():
+    """global_batch=10 over 4 hosts -> sizes [3, 3, 2, 2], slices disjoint
+    and exactly covering [0, 10)."""
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=10)
+    p = SyntheticLMPipeline(cfg)
+    ranges = [p.host_range(process_index=i, process_count=4)
+              for i in range(4)]
+    assert [hi - lo for lo, hi in ranges] == [3, 3, 2, 2]
+    covered = [i for lo, hi in ranges for i in range(lo, hi)]
+    assert covered == list(range(10))
+
+
+def test_data_host_range_divisible_matches_even_split():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=16)
+    p = SyntheticLMPipeline(cfg)
+    assert [p.host_range(process_index=i, process_count=4)
+            for i in range(4)] == [(0, 4), (4, 8), (8, 12), (12, 16)]
+
+
+def test_data_simulated_hosts_cover_global_batch():
+    """Shards drawn per simulated host concatenate to the full batch even
+    with a remainder (the multi-host data contract)."""
+    cfg = DataConfig(vocab=500, seq_len=8, global_batch=10, seed=2)
+    p = SyntheticLMPipeline(cfg)
+    full = _philox_tokens(cfg, 4, 0, cfg.global_batch)
+    shards = [_philox_tokens(cfg, 4, *p.host_range(process_index=i,
+                                                   process_count=3))
+              for i in range(3)]
     np.testing.assert_array_equal(np.concatenate(shards), full)
 
 

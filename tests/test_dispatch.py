@@ -77,6 +77,44 @@ def test_no_pallas_triton_import_outside_triton_package():
     )
 
 
+def test_no_shard_map_import_outside_parallel_compat():
+    """Only ``parallel/compat.py`` may import ``shard_map`` — the 0.4.x
+    vs 0.6+ rename lives behind exactly one shim (the PR-1 break class:
+    a renamed jax symbol imported from many files)."""
+    pat = re.compile(
+        r"^\s*(?:from\s+jax\.experimental\.shard_map\s+import"
+        r"|import\s+jax\.experimental\.shard_map"
+        r"|from\s+jax\s+import\s+[^\n]*\bshard_map\b)",
+        re.MULTILINE)
+    offenders = [
+        str(p.relative_to(SRC))
+        for p in sorted(SRC.rglob("*.py"))
+        if p.relative_to(SRC).parts != ("parallel", "compat.py")
+        and pat.search(p.read_text())
+    ]
+    assert not offenders, (
+        f"raw shard_map import in {offenders}; "
+        "import it from repro.parallel.compat instead"
+    )
+
+
+def test_no_make_mesh_outside_parallel():
+    """Only the ``parallel`` package may call ``jax.make_mesh`` — every
+    other layer consumes a MeshContext (or ``parallel.compat.make_mesh``),
+    so mesh construction policy (axis types, version shims) has one home."""
+    pat = re.compile(r"\bjax\s*\.\s*make_mesh\s*\(")
+    offenders = [
+        str(p.relative_to(SRC))
+        for p in sorted(SRC.rglob("*.py"))
+        if p.relative_to(SRC).parts[0] != "parallel"
+        and pat.search(p.read_text())
+    ]
+    assert not offenders, (
+        f"raw jax.make_mesh call in {offenders}; build meshes via "
+        "repro.parallel.mesh_context.make_context or parallel.compat"
+    )
+
+
 # ---------------------------------------------------------------------------
 # path resolution
 

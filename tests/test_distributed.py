@@ -154,6 +154,85 @@ def test_training_shards_run_on_mesh():
     assert "MESH_TRAIN_OK" in out
 
 
+def test_shard_ops_route_and_match_unsharded():
+    """ops.reduce/scan/weighted_scan on committed sharded arrays under an
+    active MeshContext run the shard_map path and match the unsharded
+    references (the tentpole's numerics contract)."""
+    out = _run(4, """
+        from jax.sharding import NamedSharding
+        from repro import ops
+        from repro.parallel import shard_ops
+        from repro.parallel.mesh_context import make_context
+
+        ctx = make_context("data=4")
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 4096))
+        la = -jax.random.uniform(jax.random.PRNGKey(1), (3, 4096))
+        want_r = np.asarray(ops.reduce(x))
+        want_s = np.asarray(ops.scan(x))
+        want_w = np.asarray(ops.weighted_scan(x, la))
+
+        shd = NamedSharding(ctx.mesh, P(None, "data"))
+        xs, las = jax.device_put(x, shd), jax.device_put(la, shd)
+        with ctx:
+            assert shard_ops._routing_ctx(xs, 1) is not None
+            got_r = np.asarray(ops.reduce(xs))
+            got_s = np.asarray(ops.scan(xs))
+            got_w = np.asarray(ops.weighted_scan(xs, las))
+        np.testing.assert_allclose(got_r, want_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_s, want_s, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(got_w, want_w, rtol=1e-3, atol=1e-3)
+
+        # non-divisible bucket axis: conservative fallback, still correct
+        x_odd = jax.random.normal(jax.random.PRNGKey(2), (2, 1023))
+        with ctx:
+            assert shard_ops._routing_ctx(x_odd, 1) is None
+            np.testing.assert_allclose(np.asarray(ops.reduce(x_odd)),
+                                       np.asarray(jnp.sum(
+                                           x_odd.astype(jnp.float32), -1)),
+                                       rtol=1e-4, atol=1e-4)
+        print("SHARD_OPS_OK")
+    """)
+    assert "SHARD_OPS_OK" in out
+
+
+def test_shard_ops_ssd_matches_unsharded():
+    """Sequence-sharded SSD (shard finals carried by the 1-semiseparable
+    combine) against the unsharded op, y and final state both."""
+    out = _run(4, """
+        from jax.sharding import NamedSharding
+        from repro import ops
+        from repro.parallel.mesh_context import make_context
+
+        ctx = make_context("data=4")
+        bsz, L, h, p, g, n = 1, 128, 2, 8, 1, 4
+        ks = jax.random.split(jax.random.PRNGKey(8), 5)
+        x = 0.2 * jax.random.normal(ks[0], (bsz, L, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, L, h)))
+        a = -jnp.exp(0.2 * jax.random.normal(ks[2], (h,)))
+        bb = jax.random.normal(ks[3], (bsz, L, g, n)) / np.sqrt(n)
+        cc = jax.random.normal(ks[4], (bsz, L, g, n)) / np.sqrt(n)
+        want_y, want_h = ops.ssd(x, dt, a, bb, cc, return_state=True)
+
+        seq = lambda nd: NamedSharding(
+            ctx.mesh, P(*((None, "data") + (None,) * (nd - 2))))
+        xs = jax.device_put(x, seq(4))
+        dts = jax.device_put(dt, seq(3))
+        bbs = jax.device_put(bb, seq(4))
+        ccs = jax.device_put(cc, seq(4))
+        with ctx:
+            got_y, got_h = ops.ssd(xs, dts, a, bbs, ccs, return_state=True)
+            got_y2 = ops.ssd(xs, dts, a, bbs, ccs)
+        np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(got_y2), np.asarray(got_y),
+                                   rtol=1e-5, atol=1e-5)
+        print("SHARD_SSD_OK")
+    """)
+    assert "SHARD_SSD_OK" in out
+
+
 def test_elastic_restart_across_mesh_sizes(tmp_path):
     """Fault-tolerance contract: checkpoint under a 4-device mesh, restore
     and continue under a 2-device mesh — values identical (elastic)."""
