@@ -10,6 +10,8 @@ for the power results. Every benchmark prints a CSV block
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -19,10 +21,34 @@ import numpy as np
 # resolves natively. Set by ``benchmarks.run --backend``.
 BENCH_BACKEND = "auto"
 
+# Where each benchmark's BENCH_<name>.json lands ("." = cwd). Set by
+# ``benchmarks.run --json-dir`` so a sweep collects its machine-readable
+# rows in one place for CI artifact upload.
+BENCH_JSON_DIR = "."
+
 
 def set_bench_backend(backend: str) -> None:
     global BENCH_BACKEND
     BENCH_BACKEND = backend
+
+
+def set_bench_json_dir(directory: str) -> None:
+    global BENCH_JSON_DIR
+    BENCH_JSON_DIR = directory
+
+
+def write_bench_json(bench: str, rows: list, meta: dict | None = None) -> str:
+    """Persist one benchmark's rows as ``BENCH_<bench>.json`` under
+    :data:`BENCH_JSON_DIR`. ``rows`` is a list of dicts with a stable
+    per-benchmark schema (CI checks the serving one); ``meta`` merges into
+    the top level alongside ``bench``/``rows``."""
+    os.makedirs(BENCH_JSON_DIR, exist_ok=True)
+    path = os.path.join(BENCH_JSON_DIR, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench, **(meta or {}), "rows": rows}, f,
+                  indent=2)
+    print(f"# wrote {path} ({len(rows)} rows)")
+    return path
 
 
 def select_paths(labels: dict[str, str]) -> dict[str, str]:
@@ -99,8 +125,16 @@ def tuning_label(path: str, op: str, n: int | None = None,
     return spec.label() if spec is not None else "-"
 
 
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall seconds per call of an already-jit'd fn."""
+def time_stats(fn, *args, iters: int = 5, warmup: int = 2) -> dict:
+    """Wall-clock statistics per call of an already-jit'd fn.
+
+    The ``warmup`` calls run first and are *discarded* — they absorb the
+    jit compile and any first-touch allocation, so the measured ``iters``
+    time steady state only. Reports the median with the interquartile
+    range (p25/p75) rather than a bare mean: serving-container wall
+    clocks have heavy-tailed noise, and every bench row records the
+    ``iters``/``warmup`` that produced it so two runs are comparable.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -108,11 +142,56 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    p25, p50, p75 = (float(x) for x in np.percentile(ts, (25, 50, 75)))
+    return {"median_s": p50, "p25_s": p25, "p75_s": p75,
+            "iqr_s": p75 - p25, "iters": iters, "warmup": warmup}
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call of an already-jit'd fn (compile and
+    warmup discarded — see :func:`time_stats`)."""
+    return time_stats(fn, *args, iters=iters, warmup=warmup)["median_s"]
 
 
 def elems_per_sec(n_elems: int, seconds: float) -> float:
     return n_elems / max(seconds, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# bandwidth / roofline model
+#
+# Reduction and scan are bandwidth-bound (the paper's premise): the useful
+# work per element is O(1), so the honest cross-machine metric is achieved
+# memory bandwidth against the host's peak, not raw wall clock. The peaks
+# below are deliberately round defaults per backend class; a real
+# measurement host overrides with REPRO_PEAK_GBPS (note: NOT one of the
+# policy env vars — those are parsed only by repro.core.policy).
+
+DEFAULT_PEAK_GBPS = {"cpu": 50.0, "gpu": 900.0, "tpu": 1200.0}
+ENV_PEAK_GBPS = "REPRO_PEAK_GBPS"
+
+
+def peak_gbps() -> float:
+    """This host's assumed peak memory bandwidth in GB/s:
+    ``$REPRO_PEAK_GBPS`` if set, else a per-backend-class default."""
+    env = os.environ.get(ENV_PEAK_GBPS, "").strip()
+    if env:
+        return float(env)
+    b = jax.default_backend()
+    b = "gpu" if b in ("cuda", "rocm") else b
+    return DEFAULT_PEAK_GBPS.get(b, DEFAULT_PEAK_GBPS["cpu"])
+
+
+def bandwidth_model(bytes_moved: int, seconds: float) -> dict:
+    """Roofline annotation for one timed kernel call: achieved GB/s for
+    ``bytes_moved`` (the op's minimal read+write traffic) against this
+    host's :func:`peak_gbps`."""
+    peak = peak_gbps()
+    achieved = bytes_moved / max(seconds, 1e-12) / 1e9
+    return {"bytes_moved": int(bytes_moved),
+            "achieved_gbps": round(achieved, 4),
+            "peak_gbps": peak,
+            "pct_peak": round(100.0 * achieved / peak, 3)}
 
 
 def hlo_op_mix(fn, *args) -> dict:

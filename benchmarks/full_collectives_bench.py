@@ -3,15 +3,18 @@
 The device-level composition (tile scan -> tile-totals scan -> carry add,
 repro.core.tcu_scan's recursion) against XLA's native sum/cumsum, over
 input sizes 2^16..2^24. All contenders via repro.core.dispatch paths.
+Rows carry median/IQR and the roofline pair (reduce: n reads + 1 write;
+scan: n reads + n writes) and land in ``BENCH_full_collectives.json``.
 """
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import elems_per_sec, print_csv, time_fn
+from benchmarks.common import (bandwidth_model, elems_per_sec, print_csv,
+                               time_stats, write_bench_json)
 
 
-def run() -> list:
+def run() -> list[dict]:
     from repro.core import dispatch
 
     rows = []
@@ -25,15 +28,28 @@ def run() -> list:
             "base_full_scan": lambda a: dispatch.scan(a, policy="baseline"),
         }
         for name, fn in cases.items():
-            t = time_fn(jax.jit(fn), x)
-            rows.append([name, n, f"{t * 1e6:.1f}",
-                         f"{elems_per_sec(n, t) / 1e9:.3f}"])
+            st = time_stats(jax.jit(fn), x)
+            t = st["median_s"]
+            bytes_moved = ((n + 1) if name.endswith("reduce")
+                           else 2 * n) * x.dtype.itemsize
+            rows.append({
+                "algo": name, "n": n,
+                "us_per_call": round(t * 1e6, 1),
+                "iqr_us": round(st["iqr_s"] * 1e6, 1),
+                "iters": st["iters"], "warmup": st["warmup"],
+                "belems_s": round(elems_per_sec(n, t) / 1e9, 3),
+                **bandwidth_model(bytes_moved, t),
+            })
     return rows
 
 
 def main() -> None:
-    print_csv("fig13_14_full_reduce_scan",
-              ["algo", "n", "us_per_call", "belems_s"], run())
+    rows = run()
+    cols = ["algo", "n", "us_per_call", "iqr_us", "belems_s",
+            "achieved_gbps", "pct_peak"]
+    print_csv("fig13_14_full_reduce_scan", cols,
+              [[r[c] for c in cols] for r in rows])
+    write_bench_json("full_collectives", rows)
 
 
 if __name__ == "__main__":

@@ -58,8 +58,15 @@ def main(argv: list[str] | None = None) -> None:
                          "benchmark's tuning= column)")
     ap.add_argument("--kernel-path", default=None,
                     help="deprecated alias for --policy <path-label>")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory the BENCH_<name>.json row files land "
+                         "in (created if missing)")
+    from repro.obs import cli as obs_cli
+
+    obs_cli.add_obs_args(ap)
     args = ap.parse_args(argv)
     common.set_bench_backend(args.backend)
+    common.set_bench_json_dir(args.json_dir)
 
     from repro.core import policy as kpolicy
 
@@ -69,17 +76,18 @@ def main(argv: list[str] | None = None) -> None:
     if pol is not None:
         kpolicy.set_policy(pol)
 
-    t0 = time.time()
-    ran = 0
-    for name, module in BENCHES:
-        if args.filter and args.filter not in name:
-            continue
-        m = importlib.import_module(module)
-        t = time.time()
-        m.main()
-        print(f"# [{name}] {time.time() - t:.1f}s")
-        ran += 1
-    print(f"\n# {ran} benchmarks in {time.time() - t0:.1f}s")
+    with obs_cli.obs_scope(args):
+        t0 = time.time()
+        ran = 0
+        for name, module in BENCHES:
+            if args.filter and args.filter not in name:
+                continue
+            m = importlib.import_module(module)
+            t = time.time()
+            m.main()
+            print(f"# [{name}] {time.time() - t:.1f}s")
+            ran += 1
+        print(f"\n# {ran} benchmarks in {time.time() - t0:.1f}s")
 
 
 if __name__ == "__main__":

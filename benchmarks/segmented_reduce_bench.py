@@ -12,16 +12,21 @@ layer's paths (repro.core.dispatch — one switch, no ad-hoc imports):
     on TPU, Pallas-Triton on GPU); skipped on hosts with no native
     lowering (see ``common.select_paths`` / ``run.py --backend``)
 
-Derived column ``belems_s`` = billions of half-precision-equivalent elements
-per second (the paper's y-axis).
+Derived columns: ``belems_s`` = billions of elements per second (the
+paper's y-axis) and the roofline pair ``gbps``/``pct_peak`` — reduction is
+bandwidth-bound, so achieved bytes/s against the host's peak is the
+cross-machine-comparable number (see ``common.bandwidth_model``). Each
+timed row reports the median with IQR over ``iters`` post-warmup calls and
+lands in ``BENCH_segmented_reduce.json``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (elems_per_sec, print_csv, select_paths,
-                               time_fn, tuning_label)
+from benchmarks.common import (bandwidth_model, elems_per_sec, print_csv,
+                               select_paths, time_stats, tuning_label,
+                               write_bench_json)
 
 TOTAL = 1 << 22
 
@@ -33,7 +38,7 @@ CONTENDERS = {
 }
 
 
-def run(total: int = TOTAL) -> list:
+def run(total: int = TOTAL) -> list[dict]:
     rows = []
     x = jax.random.normal(jax.random.PRNGKey(0), (total,), jnp.float32)
     paths = select_paths(CONTENDERS)
@@ -48,19 +53,31 @@ def run(total: int = TOTAL) -> list:
             name: jax.jit(lambda a, p=p: dispatch.reduce(a, policy=p))
             for name, p in paths.items()
         }
+        # minimal traffic: read every element, write one total per segment
+        bytes_moved = (total + segs) * xs.dtype.itemsize
         for name, fn in fns.items():
-            t = time_fn(fn, xs)
-            rows.append([name, seg, segs, f"{t * 1e6:.1f}",
-                         f"{elems_per_sec(total, t) / 1e9:.3f}",
-                         tuning_label(paths[name], "reduce", seg, xs.dtype)])
+            st = time_stats(fn, xs)
+            t = st["median_s"]
+            rows.append({
+                "algo": name, "segment_size": seg, "n_segments": segs,
+                "us_per_call": round(t * 1e6, 1),
+                "iqr_us": round(st["iqr_s"] * 1e6, 1),
+                "iters": st["iters"], "warmup": st["warmup"],
+                "belems_s": round(elems_per_sec(total, t) / 1e9, 3),
+                "tuning": tuning_label(paths[name], "reduce", seg,
+                                       xs.dtype),
+                **bandwidth_model(bytes_moved, t),
+            })
     return rows
 
 
 def main() -> None:
     rows = run()
-    print_csv("fig10_segmented_reduce",
-              ["algo", "segment_size", "n_segments", "us_per_call",
-               "belems_s", "tuning"], rows)
+    cols = ["algo", "segment_size", "n_segments", "us_per_call", "iqr_us",
+            "belems_s", "achieved_gbps", "pct_peak", "tuning"]
+    print_csv("fig10_segmented_reduce", cols,
+              [[r[c] for c in cols] for r in rows])
+    write_bench_json("segmented_reduce", rows, {"total_elems": TOTAL})
 
 
 if __name__ == "__main__":

@@ -4,14 +4,19 @@ Contenders (one switch, repro.core.dispatch): the matmul-form scan
 (path="fused") vs XLA's native ``jnp.cumsum`` (path="baseline", the Thrust
 stand-in) vs the explicit Pallas kernel (path="tile" — TPU or Triton,
 skipped where no native lowering exists). Fixed 2^22-element input.
+
+Scan reads and writes every element, so the minimal-traffic roofline model
+is 2x the input bytes; each row carries the median/IQR over ``iters``
+post-warmup calls and lands in ``BENCH_segmented_scan.json``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (elems_per_sec, print_csv, select_paths,
-                               time_fn, tuning_label)
+from benchmarks.common import (bandwidth_model, elems_per_sec, print_csv,
+                               select_paths, time_stats, tuning_label,
+                               write_bench_json)
 
 TOTAL = 1 << 22
 
@@ -22,7 +27,7 @@ CONTENDERS = {
 }
 
 
-def run(total: int = TOTAL) -> list:
+def run(total: int = TOTAL) -> list[dict]:
     from repro.core import dispatch
 
     rows = []
@@ -36,18 +41,30 @@ def run(total: int = TOTAL) -> list:
             name: jax.jit(lambda a, p=p: dispatch.scan(a, policy=p))
             for name, p in paths.items()
         }
+        # scan writes a prefix per element: read all + write all
+        bytes_moved = 2 * total * xs.dtype.itemsize
         for name, fn in fns.items():
-            t = time_fn(fn, xs)
-            rows.append([name, seg, segs, f"{t * 1e6:.1f}",
-                         f"{elems_per_sec(total, t) / 1e9:.3f}",
-                         tuning_label(paths[name], "scan", seg, xs.dtype)])
+            st = time_stats(fn, xs)
+            t = st["median_s"]
+            rows.append({
+                "algo": name, "segment_size": seg, "n_segments": segs,
+                "us_per_call": round(t * 1e6, 1),
+                "iqr_us": round(st["iqr_s"] * 1e6, 1),
+                "iters": st["iters"], "warmup": st["warmup"],
+                "belems_s": round(elems_per_sec(total, t) / 1e9, 3),
+                "tuning": tuning_label(paths[name], "scan", seg, xs.dtype),
+                **bandwidth_model(bytes_moved, t),
+            })
     return rows
 
 
 def main() -> None:
-    print_csv("fig12_segmented_scan",
-              ["algo", "segment_size", "n_segments", "us_per_call",
-               "belems_s", "tuning"], run())
+    rows = run()
+    cols = ["algo", "segment_size", "n_segments", "us_per_call", "iqr_us",
+            "belems_s", "achieved_gbps", "pct_peak", "tuning"]
+    print_csv("fig12_segmented_scan", cols,
+              [[r[c] for c in cols] for r in rows])
+    write_bench_json("segmented_scan", rows, {"total_elems": TOTAL})
 
 
 if __name__ == "__main__":

@@ -22,14 +22,14 @@ import json
 import numpy as np
 
 try:
-    from benchmarks.common import print_csv
+    from benchmarks.common import bandwidth_model, print_csv
 except ModuleNotFoundError:     # run as a script: sys.path[0] is
     import os                   # benchmarks/, not the repo root
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
-    from benchmarks.common import print_csv
+    from benchmarks.common import bandwidth_model, print_csv
 
 BUDGETS = {
     # n_req, slots, short max_new range, long max_new, prefill_chunk, loads
@@ -63,10 +63,14 @@ def _metrics(results):
     total = sum(len(r.tokens) for r in results)
     makespan = (max(r.finish_s for r in results)
                 - min(r.arrival_s for r in results))
+    p25, p50, p75 = (float(x) for x in np.percentile(lats, (25, 50, 75)))
     return {
         "throughput_tok_s": round(total / max(makespan, 1e-9), 2),
-        "p50_ms": round(float(np.percentile(lats, 50)), 2),
+        "p50_ms": round(p50, 2),
         "p99_ms": round(float(np.percentile(lats, 99)), 2),
+        "p25_ms": round(p25, 2),
+        "p75_ms": round(p75, 2),
+        "iqr_ms": round(p75 - p25, 2),
         "total_tokens": total,
         "makespan_s": round(makespan, 4),
     }
@@ -87,6 +91,11 @@ def run(budget: str = "tiny", arch: str = "llama3.2-1b",
     bundle = build(cfg)
     params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
                          cfg.dtype)
+    # roofline proxy: a decode step streams the whole parameter set once
+    # per generated token, which dominates traffic at batch sizes this
+    # small — so bytes ~= param_bytes * total_tokens over the makespan
+    param_bytes = sum(p.size * p.dtype.itemsize
+                      for p in jax.tree.leaves(params))
 
     # sharded rows stay comparable to single-host history: every row
     # records the process count and the mesh shape it ran under
@@ -112,8 +121,11 @@ def run(budget: str = "tiny", arch: str = "llama3.2-1b",
                    "n_req": shape["n_req"], "slots": shape["slots"],
                    "arch": arch,
                    "process_count": jax.process_count(),
-                   "mesh": mesh_label}
+                   "mesh": mesh_label,
+                   "warmup_runs": 1, "measured_runs": 1}
             row.update(_metrics(results))
+            row.update(bandwidth_model(
+                param_bytes * row["total_tokens"], row["makespan_s"]))
             if sched == "continuous":
                 row["compiled_block_shapes"] = \
                     eng.compile_stats()["block"]
@@ -129,6 +141,9 @@ def main(argv=None) -> None:
     ap.add_argument("--mesh", default=None,
                     help="serve sharded: mesh axes as 'data=1,model=2' "
                          "(must multiply to the device count)")
+    from repro.obs import cli as obs_cli
+
+    obs_cli.add_obs_args(ap)
     args = ap.parse_args(argv if argv is not None else [])
 
     mesh_ctx = None
@@ -136,9 +151,13 @@ def main(argv=None) -> None:
         from repro.parallel.mesh_context import make_context
 
         mesh_ctx = make_context(args.mesh)
-    rows = run(args.budget, args.arch, mesh_ctx=mesh_ctx)
+    # the obs scope opens before run(): the warmup pass is where the
+    # engine compiles, so trace-time resolution events need it active
+    with obs_cli.obs_scope(args):
+        rows = run(args.budget, args.arch, mesh_ctx=mesh_ctx)
     cols = ["scheduler", "offered_load", "throughput_tok_s",
-            "p50_ms", "p99_ms", "total_tokens"]
+            "p50_ms", "p99_ms", "iqr_ms", "achieved_gbps", "pct_peak",
+            "total_tokens"]
     print_csv("serving_open_loop",
               cols, [[r[c] for c in cols] for r in rows])
     with open(args.out, "w") as f:

@@ -4,14 +4,17 @@ sizes (2^4..2^13) — the regime where the paper reports up to 100x.
 The V100 contrast was TCU-fragment ops vs shuffle loops; the TPU-native
 contrast is one MXU matmul per 128 segments vs XLA's per-segment vector
 reduction. We report both wall time and the HLO dot/VPU flop split — the
-structural evidence that the work moved onto the matrix unit.
+structural evidence that the work moved onto the matrix unit. Timed rows
+carry median/IQR plus the roofline pair and land in
+``BENCH_small_segments.json``.
 """
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import (elems_per_sec, hlo_op_mix, print_csv,
-                               select_paths, time_fn, tuning_label)
+from benchmarks.common import (bandwidth_model, elems_per_sec, hlo_op_mix,
+                               print_csv, select_paths, time_stats,
+                               tuning_label, write_bench_json)
 
 N_SEGMENTS = 4096
 
@@ -47,11 +50,21 @@ def run() -> tuple[list, list]:
             for name, (op, path) in CONTENDERS.items() if name in keep
         }
         for name, fn in cases.items():
-            t = time_fn(jax.jit(fn), x)
+            st = time_stats(jax.jit(fn), x)
+            t = st["median_s"]
             op, path = CONTENDERS[name]
-            rows.append([name, seg, f"{t * 1e6:.1f}",
-                         f"{elems_per_sec(x.size, t) / 1e9:.3f}",
-                         tuning_label(path, op, seg, x.dtype)])
+            # reduce: read all, write one per segment; scan: read+write all
+            bytes_moved = (x.size + N_SEGMENTS if op == "reduce"
+                           else 2 * x.size) * x.dtype.itemsize
+            rows.append({
+                "algo": name, "segment_size": seg,
+                "us_per_call": round(t * 1e6, 1),
+                "iqr_us": round(st["iqr_s"] * 1e6, 1),
+                "iters": st["iters"], "warmup": st["warmup"],
+                "belems_s": round(elems_per_sec(x.size, t) / 1e9, 3),
+                "tuning": tuning_label(path, op, seg, x.dtype),
+                **bandwidth_model(bytes_moved, t),
+            })
         for name in ("tcu_reduce", "base_reduce"):
             mix = hlo_op_mix(cases[name], x)
             mix_rows.append([name, seg, f"{mix['dot_flops']:.3g}",
@@ -61,11 +74,13 @@ def run() -> tuple[list, list]:
 
 def main() -> None:
     rows, mix_rows = run()
-    print_csv("fig11_small_segments",
-              ["algo", "segment_size", "us_per_call", "belems_s",
-               "tuning"], rows)
+    cols = ["algo", "segment_size", "us_per_call", "iqr_us", "belems_s",
+            "achieved_gbps", "pct_peak", "tuning"]
+    print_csv("fig11_small_segments", cols,
+              [[r[c] for c in cols] for r in rows])
     print_csv("fig11_alu_mix", ["algo", "segment_size", "dot_flops",
                                 "vpu_flops"], mix_rows)
+    write_bench_json("small_segments", rows, {"n_segments": N_SEGMENTS})
 
 
 if __name__ == "__main__":

@@ -4,14 +4,17 @@ scan at model scale — vs the sequential recurrence, over sequence length.
 The chunked form is O(L/Q) matmul passes (all MXU work); the sequential
 form is O(L) vector steps. This is the integration point that makes the
 paper's technique land in two assigned architectures (mamba2, zamba2).
+Rows carry median/IQR plus the roofline pair (operand reads + output
+write) and land in ``BENCH_ssd.json``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (elems_per_sec, print_csv, select_paths,
-                               time_fn, tuning_label)
+from benchmarks.common import (bandwidth_model, elems_per_sec, print_csv,
+                               select_paths, time_stats, tuning_label,
+                               write_bench_json)
 
 CONTENDERS = {
     "ssd_chunked_matmul": "fused",
@@ -20,7 +23,7 @@ CONTENDERS = {
 }
 
 
-def run() -> list:
+def run() -> list[dict]:
     from repro.core import dispatch
 
     paths = select_paths(CONTENDERS)
@@ -36,18 +39,32 @@ def run() -> list:
         cc = jax.random.normal(ks[4], (b, L, g, n)) / jnp.sqrt(float(n))
 
         toks = b * L
+        # operand reads (x, dt, B, C) + output write (same shape as x)
+        bytes_moved = (2 * x.size + dt.size + bb.size
+                       + cc.size) * x.dtype.itemsize
         for name, path in paths.items():
             fn = jax.jit(lambda *t, p=path: dispatch.ssd(*t, policy=p))
-            t1 = time_fn(fn, x, dt, a, bb, cc, iters=3)
-            rows.append([name, L, f"{t1 * 1e3:.2f}",
-                         f"{elems_per_sec(toks, t1) / 1e3:.1f}",
-                         tuning_label(path, "ssd", L, x.dtype)])
+            st = time_stats(fn, x, dt, a, bb, cc, iters=3)
+            t1 = st["median_s"]
+            rows.append({
+                "algo": name, "seq_len": L,
+                "ms_per_call": round(t1 * 1e3, 2),
+                "iqr_ms": round(st["iqr_s"] * 1e3, 2),
+                "iters": st["iters"], "warmup": st["warmup"],
+                "ktok_s": round(elems_per_sec(toks, t1) / 1e3, 1),
+                "tuning": tuning_label(path, "ssd", L, x.dtype),
+                **bandwidth_model(bytes_moved, t1),
+            })
     return rows
 
 
 def main() -> None:
-    print_csv("ssd_weighted_scan", ["algo", "seq_len", "ms_per_call",
-                                    "ktok_s", "tuning"], run())
+    rows = run()
+    cols = ["algo", "seq_len", "ms_per_call", "iqr_ms", "ktok_s",
+            "achieved_gbps", "pct_peak", "tuning"]
+    print_csv("ssd_weighted_scan", cols,
+              [[r[c] for c in cols] for r in rows])
+    write_bench_json("ssd", rows)
 
 
 if __name__ == "__main__":

@@ -39,6 +39,9 @@ import time
 import jax
 import numpy as np
 
+from repro.obs import profiling as _prof
+from repro.obs import runtime as _obs
+
 
 def _flat_with_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -116,12 +119,25 @@ class AsyncCheckpointer:
         """
         self.wait()
         _sweep_stale_tmp(self.directory, step)
-        shards, meta = _snapshot(tree)
+        # the session is captured HERE and handed to the writer thread:
+        # the background write must land in the session that was active
+        # when the save was issued, even if the scope closes meanwhile
+        sess = _obs.ACTIVE
+        t_snap = time.perf_counter() if sess is not None else 0.0
+        with _prof.span("ckpt/snapshot"):
+            shards, meta = _snapshot(tree)
+        if sess is not None:
+            dur = time.perf_counter() - t_snap
+            sess.histogram(
+                "repro_ckpt_snapshot_seconds",
+                "device->host shard snapshot (blocks the step loop)"
+            ).observe(dur)
+            sess.emit("ckpt", phase="snapshot", step=int(step), seconds=dur)
         host = jax.process_index()
         n_hosts = jax.process_count()
         self._thread = threading.Thread(
             target=self._write, name=f"ckpt-step{step}",
-            args=(step, shards, meta, host, n_hosts), daemon=True)
+            args=(step, shards, meta, host, n_hosts, sess), daemon=True)
         self._thread.start()
 
     def wait(self) -> str | None:
@@ -129,7 +145,18 @@ class AsyncCheckpointer:
         the last committed path. Re-raises a background write error."""
         t, self._thread = self._thread, None
         if t is not None:
-            t.join()
+            sess = _obs.ACTIVE
+            if sess is not None:
+                t_join = time.perf_counter()
+                t.join()
+                dur = time.perf_counter() - t_join
+                sess.histogram(
+                    "repro_ckpt_commit_barrier_seconds",
+                    "time the step loop blocked joining the in-flight "
+                    "checkpoint write").observe(dur)
+                sess.emit("ckpt", phase="commit_barrier", seconds=dur)
+            else:
+                t.join()
         if self._error is not None:
             err, self._error = self._error, None
             raise err
@@ -142,12 +169,21 @@ class AsyncCheckpointer:
 
     # -- background phase ---------------------------------------------------
 
-    def _write(self, step, shards, meta, host, n_hosts):
+    def _write(self, step, shards, meta, host, n_hosts, sess=None):
+        t_w = time.perf_counter()
         try:
             self._committed = self._write_inner(
                 step, shards, meta, host, n_hosts)
         except BaseException as e:  # surfaced by the next wait()/save()
             self._error = e
+            return
+        if sess is not None:   # the session captured at save() time —
+            # this thread records into it even after the scope moved on
+            dur = time.perf_counter() - t_w
+            sess.histogram(
+                "repro_ckpt_write_seconds",
+                "background write+fsync+commit duration").observe(dur)
+            sess.emit("ckpt", phase="write", step=int(step), seconds=dur)
 
     def _write_inner(self, step, shards, meta, host, n_hosts) -> str:
         final = os.path.join(self.directory, f"step_{step}")

@@ -133,6 +133,17 @@ def dtype_tag(dtype: Any) -> str:
             "float64": "f64"}.get(name, name)
 
 
+_DTYPE_FROM_TAG = {"f32": "float32", "bf16": "bfloat16", "f16": "float16",
+                   "f64": "float64"}
+
+
+def dtype_from_tag(tag: str):
+    """Inverse of :func:`dtype_tag` — obs resolution events carry the
+    short tag, and re-resolving one (tests, ``--check``) needs the real
+    dtype back."""
+    return jnp.dtype(_DTYPE_FROM_TAG.get(tag, tag))
+
+
 def band(n: int) -> int:
     """log2 segment-size band, clamped to [0, MAX_BAND]."""
     return max(0, min(int(math.log2(max(int(n), 1))), MAX_BAND))
@@ -673,6 +684,64 @@ def check_default(default_path: str | Path = DEFAULT_TABLE_PATH) -> list[str]:
     return problems
 
 
+def describe_bucket(key: str, ent: dict | None = None) -> str:
+    """One human-readable line for a table bucket, rendered with the obs
+    resolution-event formatter so ``--check`` output reads the same as a
+    traced dispatch. With ``ent``, shows what the table recorded (winning
+    path, tuning, winning time); without, shows what this host's default
+    policy would resolve for the bucket today."""
+    from repro.obs import events as _ev
+
+    op, tag, b = key.split("/")
+    n = 1 << int(b)
+    if ent is not None:
+        event = {"op": op, "n": n, "dtype": tag, "band": int(b),
+                 "backend": current_backend(),
+                 "chosen_path": ent.get("path"),
+                 "tuning": ent.get("tuning") or {},
+                 "table_src": "table-entry"}
+        return f"{_ev.format_resolution(event)} us={_entry_us(ent):.2f}"
+    from repro.core import policy as kpolicy
+
+    probe = kpolicy.KernelPolicy(interpret_fallback="silent")
+    try:
+        resolved = probe.resolve(op=op, n=n, dtype=dtype_from_tag(tag))
+    except (RuntimeError, ValueError) as e:
+        return f"op={op} n={n} dtype={tag}: unresolvable here ({e})"
+    return _ev.format_resolution({
+        "op": op, "n": n, "dtype": tag, "band": int(b),
+        "backend": current_backend(), "chosen_path": str(resolved),
+        "tuning": (resolved.tuning.as_dict()
+                   if resolved.tuning is not None else {}),
+        "table_src": "heuristic"})
+
+
+def check_report(default_path: str | Path = DEFAULT_TABLE_PATH) -> list[str]:
+    """Per-bucket detail behind ``--check``: one :func:`describe_bucket`
+    line for every bucket the structural check flagged — missing buckets
+    show what this host would resolve today, stale buckets show what the
+    table recorded. Empty when the table is unreadable or fresh (the
+    structural problems from :func:`check_default` stand alone then)."""
+    lines: list[str] = []
+    try:
+        table = load_table(default_path)
+    except (OSError, ValueError, json.JSONDecodeError):
+        return lines
+    section = table["backends"].get(current_backend())
+    if section is None:
+        return lines
+    want = {bucket_key(op, 1 << b, dtype)
+            for op in OP_CONTENDERS for dtype in DEFAULT_DTYPES
+            for b in DEFAULT_BANDS}
+    have = set(section["entries"])
+    for key in sorted(want - have):
+        lines.append(f"  missing {key}: today -> {describe_bucket(key)}")
+    for key in sorted(have - want):
+        lines.append(f"  stale   {key}: table -> "
+                     f"{describe_bucket(key, section['entries'][key])}")
+    return lines
+
+
 def main(argv: list[str] | None = None) -> int:
     import argparse
 
@@ -715,6 +784,8 @@ def main(argv: list[str] | None = None) -> int:
         problems = check_default()
         for p in problems:
             print(f"STALE: {p}")
+        for line in check_report():
+            print(line)
         if not problems:
             print(f"autotune default table OK ({DEFAULT_TABLE_PATH})")
         return 1 if problems else 0

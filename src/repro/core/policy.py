@@ -57,6 +57,8 @@ import os
 import warnings
 from typing import Any, Iterator, Mapping
 
+from repro.obs import runtime as _obs
+
 # The env vars (parsed ONLY here; other modules may re-export the names):
 ENV_PATH = "REPRO_KERNEL_PATH"         # default path label
 ENV_AUTOTUNE = "REPRO_AUTOTUNE"        # "off"/"0"/"static"/"false" -> off
@@ -525,12 +527,59 @@ class KernelPolicy:
         :meth:`tuning_for` (None when ``op`` is unknown) — the tile
         kernels take their geometry from it.
         """
+        n_raw = n
         if op is not None and n is not None:
             n = _shard_effective_n(op, n)
         label = self._resolve_label(op=op, n=n, dtype=dtype, level=level,
                                     explicit=explicit)
-        return ResolvedPath(
+        resolved = ResolvedPath(
             label, self.tuning_for(op, n, dtype, label=label))
+        if _obs.ACTIVE is not None:   # observability off by default: the
+            # disabled path costs one module-global load and this branch
+            self._emit_resolution(op=op, n_raw=n_raw, n=n, dtype=dtype,
+                                  level=level, explicit=explicit,
+                                  resolved=resolved)
+        return resolved
+
+    def _emit_resolution(self, *, op, n_raw, n, dtype, level, explicit,
+                         resolved: "ResolvedPath") -> None:
+        """Record one resolution into the active obs session (only called
+        when a session is active): a ``resolution`` event carrying the
+        dispatch-audit schema (``repro.obs.events.RESOLUTION_FIELDS``) and
+        a ``repro_resolutions_total`` counter labelled by op/path/level."""
+        sess = _obs.ACTIVE
+        if sess is None:   # raced a disable(); nothing to record into
+            return
+        from repro.core import autotune  # deferred: imports us
+
+        shaped = op is not None and n is not None
+        requested = explicit if explicit is not None else self.for_op(op)
+        if requested != "auto":
+            table_src = "none"        # no table consultation happened
+        elif not shaped or self.autotune == "off":
+            table_src = "static"      # static backend check resolved auto
+        else:
+            entries = autotune.current_entries(self)
+            if entries is not None and \
+                    autotune.bucket_key(op, n, dtype) in entries:
+                table_src = str(autotune.table_path(self))
+            else:
+                table_src = "heuristic"
+        tuning = resolved.tuning.as_dict() \
+            if resolved.tuning is not None else None
+        sess.emit(
+            "resolution",
+            op=op, n=n_raw, shard_n=n,
+            shard_divisor=(max(1, n_raw // n) if shaped and n else 1),
+            dtype=autotune.dtype_tag(dtype) if shaped else None,
+            backend=autotune.current_backend(),
+            band=autotune.band(n) if shaped else None,
+            level=level, explicit=explicit, chosen_path=str(resolved),
+            tuning=tuning, table_src=table_src)
+        sess.counter(
+            "repro_resolutions_total",
+            "KernelPolicy.resolve() calls by op/path/level").inc(
+            op=str(op), path=str(resolved), level=str(level))
 
     def _resolve_label(self, op: str | None, n: int | None, dtype: Any,
                        level: str, explicit: str | None) -> str:

@@ -55,6 +55,8 @@ from typing import Any, Callable
 
 import jax
 
+from repro.obs import runtime as _obs
+
 # the env var's *name*; it is parsed only by repro.core.policy
 ENV_PATH = "REPRO_KERNEL_PATH"
 PATHS = ("auto", "fused", "tile", "tile_tpu", "tile_gpu", "interpret")
@@ -296,6 +298,25 @@ def _call_shape(name: str, args: tuple) -> tuple:
     return None, None
 
 
+def _emit_invoke(name: str, n, dt, p) -> None:
+    """One ``kernel_invoke`` event + counter per registry execution (only
+    called when an obs session is active)."""
+    sess = _obs.ACTIVE
+    if sess is None:
+        return
+    from repro.core import autotune  # deferred: imports us
+
+    tuning = getattr(p, "tuning", None)
+    sess.emit("kernel_invoke", op=name,
+              n=(int(n) if n is not None else None),
+              dtype=(autotune.dtype_tag(dt) if dt is not None else None),
+              path=str(p),
+              tuning=(tuning.as_dict() if tuning is not None else None))
+    sess.counter(
+        "repro_kernel_invocations_total",
+        "kernel-registry executions by op/path").inc(op=name, path=str(p))
+
+
 def pallas_op(name: str, *args: Any, policy: Any = None,
               path: str | None = None,
               use_pallas: bool | None = None, **kwargs: Any) -> Any:
@@ -318,6 +339,8 @@ def pallas_op(name: str, *args: Any, policy: Any = None,
     path = _merge_use_pallas(path, use_pallas)
     p = kpolicy.as_policy(policy).resolve(op=name, n=n, dtype=dt,
                                           level="kernel", explicit=path)
+    if _obs.ACTIVE is not None:   # off by default; one global load
+        _emit_invoke(name, n, dt, p)
     if p == "fused":
         return op.fused(*args, **kwargs)
     if op.knobs:

@@ -20,6 +20,7 @@ from repro import configs
 from repro.checkpoint import ckpt
 from repro.models import build
 from repro.models.common import init_params
+from repro.obs import cli as obs_cli
 from repro.serving import Request, ServeConfig, ServingEngine
 
 
@@ -63,12 +64,18 @@ def main() -> None:
                          "'ssd.q=64,attention.block_q=256'")
     ap.add_argument("--kernel-path", default=None, choices=dispatch.PATHS,
                     help="deprecated alias for --policy <path-label>")
+    obs_cli.add_obs_args(ap)
     args = ap.parse_args()
 
     pol = kpolicy.policy_from_cli(args.policy, args.kernel_path,
                                   "deprecated:launch.serve.kernel_path",
                                   tune_arg=args.tune)
 
+    with obs_cli.obs_scope(args):
+        run(args, pol)
+
+
+def run(args, pol) -> None:
     mod = configs.get(args.arch)
     cfg = mod.SMOKE if args.config == "smoke" else mod.FULL
     bundle = build(cfg)

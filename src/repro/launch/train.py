@@ -35,6 +35,8 @@ from repro.checkpoint import ckpt
 from repro.configs.common import SMOKE_BATCH, SMOKE_SEQ
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
 from repro.models import build
+from repro.obs import cli as obs_cli
+from repro.obs import profiling as _prof
 from repro.optim import OptConfig
 from repro.parallel.mesh_context import MeshContext, make_context
 from repro.training import TrainConfig, init_train_state, make_train_step
@@ -93,12 +95,18 @@ def main() -> None:
                          "'ssd.q=64,attention.block_q=256'")
     ap.add_argument("--kernel-path", default=None, choices=dispatch.PATHS,
                     help="deprecated alias for --policy <path-label>")
+    obs_cli.add_obs_args(ap)
     args = ap.parse_args()
 
     pol = kpolicy.policy_from_cli(args.policy, args.kernel_path,
                                   "deprecated:launch.train.kernel_path",
                                   tune_arg=args.tune)
 
+    with obs_cli.obs_scope(args) as obs_sess:
+        run(args, pol, obs_sess)
+
+
+def run(args, pol, obs_sess=None) -> None:
     mod = configs.get(args.arch)
     cfg = mod.SMOKE if args.config == "smoke" else mod.FULL
     if pol is not None:
@@ -148,10 +156,21 @@ def main() -> None:
                     (args.batch, args.seq, cfg.d_model), cfg.dtype),
                     "tokens": batch["tokens"], "labels": batch["labels"]}
             t0 = time.time()
-            state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
+            with _prof.span("train/step"):
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
             dt = time.time() - t0
             times.append(dt)
+            if obs_sess is not None:
+                obs_sess.histogram(
+                    "repro_train_step_seconds",
+                    "optimizer step wall time").observe(dt)
+                obs_sess.gauge(
+                    "repro_train_tokens_per_s",
+                    "training throughput at the last step").set(
+                    args.batch * args.seq / max(dt, 1e-9))
+                obs_sess.emit("train_step", step=step, seconds=dt,
+                              loss=float(metrics["loss"]))
 
             med = float(np.median(times[-50:]))
             straggle = len(times) > 5 and dt > args.straggler_factor * med

@@ -1,0 +1,49 @@
+"""Profiling hooks: ``jax.profiler`` traces behind one CLI flag.
+
+``--profile-dir <dir>`` on the train/serve/bench CLIs wraps the run in
+:func:`tracing`, which starts a ``jax.profiler`` trace into the directory
+(viewable with TensorBoard / Perfetto). Hot sections inside the run are
+annotated with :func:`span`, which is a no-op unless a trace is active —
+the annotations therefore cost nothing in normal operation, same contract
+as the metrics layer.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+# True while a jax.profiler trace started by tracing() is running; span()
+# guards on it so annotations stay free when not profiling.
+_TRACING = False
+
+
+@contextlib.contextmanager
+def tracing(profile_dir: str | None) -> Iterator[None]:
+    """Trace the enclosed block into ``profile_dir`` (no-op when None)."""
+    global _TRACING
+    if not profile_dir:
+        yield
+        return
+    import jax
+
+    jax.profiler.start_trace(str(profile_dir))
+    _TRACING = True
+    try:
+        yield
+    finally:
+        _TRACING = False
+        jax.profiler.stop_trace()
+
+
+@contextlib.contextmanager
+def span(name: str) -> Iterator[None]:
+    """Named trace annotation around a hot section (serving block step,
+    train step, checkpoint snapshot). No-op unless :func:`tracing` is
+    active, so call sites can annotate unconditionally."""
+    if not _TRACING:
+        yield
+        return
+    import jax
+
+    with jax.profiler.TraceAnnotation(str(name)):
+        yield

@@ -35,6 +35,7 @@ from repro.core.distributed import (
     dist_exclusive_carry,
     weighted_exclusive_carry,
 )
+from repro.obs import runtime as _obs
 from repro.parallel.compat import shard_map
 from repro.parallel.mesh_context import (
     current_mesh_context,
@@ -43,6 +44,24 @@ from repro.parallel.mesh_context import (
 
 __all__ = ["sharded_reduce", "sharded_scan", "sharded_weighted_scan",
            "sharded_ssd"]
+
+
+def _emit_route(op: str, x, dim: int, ctx, axes) -> None:
+    """One ``sharded_dispatch`` event when a shard_map route is taken
+    (only called when an obs session is active) — the audit record that a
+    call left plain dispatch for the mesh path, and over which axes."""
+    sess = _obs.ACTIVE
+    if sess is None:
+        return
+    sizes = ctx.axis_sizes
+    nshards = 1
+    for a in axes:
+        nshards *= sizes.get(a, 1)
+    sess.emit("sharded_dispatch", op=op, n=int(x.shape[dim]),
+              dim=int(dim), mesh_axes=list(axes), nshards=int(nshards))
+    sess.counter(
+        "repro_sharded_dispatch_total",
+        "calls routed through shard_map by op").inc(op=op)
 
 
 def _routing_ctx(x, dim: int):
@@ -82,6 +101,8 @@ def sharded_reduce(x, *, policy=None):
     if route is None:
         return None
     ctx, spec, axes = route
+    if _obs.ACTIVE is not None:
+        _emit_route("reduce", x, x.ndim - 1, ctx, axes)
     from repro.core import dispatch
 
     def body(xs):
@@ -105,6 +126,8 @@ def sharded_scan(x, *, policy=None, exclusive: bool = False):
     ctx, spec, axes = route
     if len(axes) != 1:
         return None  # multi-axis bucket sharding: fall back
+    if _obs.ACTIVE is not None:
+        _emit_route("scan", x, x.ndim - 1, ctx, axes)
     from repro.core import dispatch
 
     def body(xs):
@@ -130,6 +153,8 @@ def sharded_weighted_scan(x, log_a, *, policy=None):
     if not isinstance(la_sh, NamedSharding) \
             or _full_spec(la_sh.spec, log_a.ndim) != spec:
         return None
+    if _obs.ACTIVE is not None:
+        _emit_route("weighted_scan", x, x.ndim - 1, ctx, axes)
     from repro.core import dispatch
 
     def body(xs, las):
@@ -175,6 +200,8 @@ def sharded_ssd(x, dt, a, b, c, *, policy=None, chunk=None,
             any(e is not None for e in _full_spec(a.sharding.spec, a.ndim)):
         return None
     dt_spec, b_spec, c_spec = arg_specs
+    if _obs.ACTIVE is not None:
+        _emit_route("ssd", x, 1, ctx, axes)
     from repro.core import dispatch
 
     nd = ctx.axis_sizes[axis]

@@ -62,6 +62,8 @@ from repro.core import policy as kpolicy
 from repro.core.policy import KernelPolicy
 from repro.models.common import init_params
 from repro.models.lm import Bundle
+from repro.obs import profiling as _prof
+from repro.obs import runtime as _obs
 from repro.training.train_lib import make_block_serve_step, make_serve_step
 
 _SEQ_CACHE_KEYS = ("k", "v", "self_k", "self_v")
@@ -78,6 +80,10 @@ class ServeConfig:
     prefill_chunk: int = 16         # prompt tokens consumed per tick/slot
     max_context: int | None = None  # cap on ring-cache capacity (rows)
     seed: int = 0                   # sampling RNG seed
+    trace_ring: int = 4096          # admit/finish events kept in memory
+    #   (the engine's trace is a bounded ring — a long-running service
+    #   must not grow a per-event python list without bound; the full
+    #   stream is available via repro.obs's JSON-lines sink)
     # explicit KernelPolicy for every core op in the served model
     # (attention, SSD, MoE); strings auto-coerce. None keeps the bundle's
     # own setting (usually the active policy); a value rebuilds the
@@ -94,6 +100,8 @@ class ServeConfig:
                 f"got {self.scheduler!r}")
         if self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if self.trace_ring < 1:
+            raise ValueError("trace_ring must be >= 1")
         object.__setattr__(self, "policy", kpolicy.coerce_config_policy(
             self.policy, kernel_path, "ServeConfig"))
 
@@ -170,6 +178,11 @@ def clear_compile_cache() -> None:
 def _steps_for(bundle: Bundle, mesh_ctx=None) -> dict:
     key = (bundle.cfg, None if mesh_ctx is None else mesh_ctx.key())
     entry = _STEP_CACHE.get(key)
+    if _obs.ACTIVE is not None:
+        _obs.ACTIVE.counter(
+            "repro_serving_compile_cache_total",
+            "serving step-cache lookups by result").inc(
+            result=("hit" if entry is not None else "miss"))
     if entry is None:
         prefill, decode = make_serve_step(bundle)
         block = make_block_serve_step(bundle, mesh_ctx=mesh_ctx)
@@ -222,12 +235,32 @@ class ServingEngine:
         self._rng = jax.random.PRNGKey(cfg.seed)
         self.queue: deque[Request] = deque()
         self.results: list[Result] = []
-        self.trace: list[dict] = []     # admit/finish events (tick, uid)
+        # admit/finish events (tick, uid): a bounded ring, not a list — a
+        # long-running service must not grow per-event state without bound
+        self._trace: deque[dict] = deque(maxlen=cfg.trace_ring)
         self.ticks = 0                  # block steps issued (continuous)
         self._cache = None              # continuous ring cache (reused)
         self._capacity = None
 
     # -- shared plumbing ----------------------------------------------------
+
+    @property
+    def trace(self) -> list[dict]:
+        """The retained admit/finish events, oldest first (bounded by
+        ``ServeConfig.trace_ring``; the unbounded stream goes to the obs
+        event sink when a session is active)."""
+        return list(self._trace)
+
+    def _trace_event(self, tick: int, event: str, uid: int,
+                     slot: int) -> None:
+        ev = {"tick": tick, "event": event, "uid": uid, "slot": slot}
+        self._trace.append(ev)
+        sess = _obs.ACTIVE
+        if sess is not None:
+            sess.emit("serving", **ev)
+            sess.counter(
+                "repro_serving_requests_total",
+                "request lifecycle events by type").inc(event=event)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -324,7 +357,9 @@ class ServingEngine:
         out: list[Result] = []
 
         while True:
+            sess = _obs.ACTIVE       # per-tick: sessions can open mid-run
             now = time.perf_counter() - t0
+            tick_start = t0 + now    # same clock read; no cost when off
             cur = self.ticks
             # admission: refill every free slot from the arrived queue
             # (lockstep mode ignores arrival clocks — see __init__)
@@ -341,8 +376,7 @@ class ServingEngine:
                                       arrival_s=req.arrival_s,
                                       admitted_tick=cur))
                     reset[i] = True
-                    self.trace.append({"tick": cur, "event": "admit",
-                                       "uid": req.uid, "slot": i})
+                    self._trace_event(cur, "admit", req.uid, i)
             active = [i for i, s in enumerate(slots) if not s.free]
             if not active:
                 if not self.queue:
@@ -356,6 +390,14 @@ class ServingEngine:
             any_prefill = any(slots[i].ppos < len(slots[i].req.prompt)
                               for i in active)
             t_len = chunk if any_prefill else 1
+            if sess is not None:
+                t_adm = time.perf_counter()
+                sess.gauge("repro_serving_queue_depth",
+                           "requests waiting for a slot").set(
+                    len(self.queue))
+                sess.gauge("repro_serving_slot_occupancy",
+                           "fraction of decode slots busy").set(
+                    len(active) / nb)
             tokens = np.zeros((nb, t_len), np.int32)
             n_valid = np.zeros(nb, np.int32)
             for i in active:
@@ -368,9 +410,12 @@ class ServingEngine:
                 else:
                     tokens[i, 0] = s.last
                     n_valid[i] = 1
-            logits, self._cache = self._block(
-                self.params, self._cache, self._to_device(tokens),
-                self._to_device(n_valid), self._to_device(reset))
+            with _prof.span("serving/block_step"):
+                logits, self._cache = self._block(
+                    self.params, self._cache, self._to_device(tokens),
+                    self._to_device(n_valid), self._to_device(reset))
+            if sess is not None:
+                t_step = time.perf_counter()
             nxt = self._sample(logits)
             now = time.perf_counter() - t0
             self.ticks = cur + 1
@@ -388,18 +433,46 @@ class ServingEngine:
                 res = s.result
                 if res.first_token_s is None:
                     res.first_token_s = now
+                    if sess is not None:
+                        sess.histogram(
+                            "repro_serving_ttft_seconds",
+                            "request arrival to first token").observe(
+                            max(0.0, now - res.arrival_s))
                 finished = tok == self.cfg.eos_token
                 if not finished:
+                    if sess is not None and res.token_s:
+                        sess.histogram(
+                            "repro_serving_token_latency_seconds",
+                            "gap between consecutive emitted tokens"
+                        ).observe(max(0.0, now - res.token_s[-1]))
                     res.tokens.append(tok)
                     res.token_s.append(now)
+                    if sess is not None:
+                        sess.counter("repro_serving_tokens_total",
+                                     "decode tokens emitted").inc()
                     finished = len(res.tokens) >= s.budget
                 if finished:
                     res.finish_s = now
                     res.finish_tick = cur
-                    self.trace.append({"tick": cur, "event": "finish",
-                                       "uid": res.uid, "slot": i})
+                    self._trace_event(cur, "finish", res.uid, i)
                     out.append(res)
                     slots[i] = _Slot()  # freed; refilled next tick
+
+            if sess is not None:
+                # contiguous boundaries: the four phase durations sum to
+                # the tick wall time exactly (tested to float tolerance)
+                t_end = time.perf_counter()
+                ph = sess.histogram(
+                    "repro_serving_tick_phase_seconds",
+                    "per-tick phase wall time (phases sum to the tick)")
+                ph.observe(t_adm - tick_start, phase="admission")
+                ph.observe(t_step - t_adm,
+                           phase=("prefill" if any_prefill else "decode"))
+                ph.observe((t0 + now) - t_step, phase="sample")
+                ph.observe(t_end - (t0 + now), phase="bookkeep")
+                sess.histogram(
+                    "repro_serving_tick_seconds",
+                    "block-step tick wall time").observe(t_end - tick_start)
         return out
 
     # -- wave scheduler (baseline) ------------------------------------------

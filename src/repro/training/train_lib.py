@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.models.common import init_params, partition_specs, shape_structs
 from repro.models.lm import Bundle
+from repro.obs import runtime as _obs
 from repro.optim import OptConfig, adamw_update, init_opt_state
 from repro.optim.adafactor import adafactor_update, init_adafactor_state
 from repro.optim.compress import compress_grads as _compress
@@ -170,6 +171,16 @@ def make_train_step(bundle: Bundle, opt_cfg: OptConfig,
         return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
     def step(state, batch):
+        if _obs.ACTIVE is not None:
+            # trace-time (python body of the jitted step): one event per
+            # (re)compile — static fields only, this is a retrace counter
+            _obs.ACTIVE.emit(
+                "train_step_trace", optimizer=train_cfg.optimizer,
+                microbatches=nmb,
+                compress=bool(train_cfg.compress_grads))
+            _obs.ACTIVE.counter(
+                "repro_train_step_traces_total",
+                "train-step retraces (jit compiles)").inc()
         with activate(mesh_ctx):
             loss, grads = grads_of(state["params"], batch)
             new_state = dict(state)
@@ -235,6 +246,16 @@ def make_block_serve_step(bundle: Bundle, *,
     compute_dtype = bundle.cfg.dtype
 
     def block_step(params, cache, tokens, n_valid, reset_mask):
+        if _obs.ACTIVE is not None:
+            # trace-time retrace counter: fires once per compiled shape
+            # (the serving engine's T=chunk and T=1 block variants)
+            _obs.ACTIVE.emit(
+                "serve_block_trace", slots=int(tokens.shape[0]),
+                block_t=int(tokens.shape[1]))
+            _obs.ACTIVE.counter(
+                "repro_serve_block_traces_total",
+                "block-step retraces (jit compiles) by T").inc(
+                block_t=str(int(tokens.shape[1])))
         with activate(mesh_ctx):
             logits, cache = bundle.decode_block(
                 _cast_tree(params, compute_dtype), cache,
