@@ -1,0 +1,138 @@
+"""Diff two ``BENCH_*.json`` files and exit nonzero on regression.
+
+Rows are keyed by their identifying fields — scheduler/contender, policy,
+cache kind, workload, offered load, op/backend/band/dtype — whichever of
+them a row carries; metric fields are compared with a relative tolerance.
+Throughput-like metrics regress when the candidate drops below
+``baseline * (1 - tol)``; latency-like metrics regress when it rises
+above ``baseline * (1 + tol)``. Keys present in only one file are
+reported but are not failures (benchmarks grow contenders), unless
+``--require-keys`` is set.
+
+This is the ROADMAP perf-trajectory gate's comparison engine: CI runs the
+serving bench and diffs it against the checked-in ``BENCH_serving.json``.
+CPU-container timings are noisy, so the CI leg passes a generous
+tolerance — the gate's job until real-hardware rows land is catching
+collapses (a scheduler stall, an accidental recompile per tick), not
+single-digit-percent drift.
+
+Usage:
+    python benchmarks/check_regression.py BASELINE.json CANDIDATE.json \
+        [--tol 0.25] [--metrics throughput_tok_s,p99_ms] [--require-keys]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# identity fields, in display order (a row is keyed by those it carries)
+KEY_FIELDS = ("bench", "scheduler", "contender", "name", "workload",
+              "cache_kind", "policy", "offered_load", "op", "backend",
+              "band", "dtype", "shape", "n", "mesh", "process_count")
+
+# metric direction: regression = lower for these ...
+HIGHER_BETTER = ("throughput_tok_s", "achieved_gbps", "pct_peak",
+                 "gflops", "tokens_per_s")
+# ... and higher for these
+LOWER_BETTER = ("p50_ms", "p99_ms", "p25_ms", "p75_ms", "iqr_ms",
+                "median_us", "mean_us", "makespan_s", "peak_pages_in_use")
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((f, row[f]) for f in KEY_FIELDS if f in row)
+
+
+def load_rows(path: str) -> dict[tuple, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    out = {}
+    for row in rows:
+        key = row_key(row)
+        if key in out:
+            raise SystemExit(f"{path}: duplicate row key {key}")
+        out[key] = row
+    return out
+
+
+def compare(base: dict[tuple, dict], cand: dict[tuple, dict], *,
+            tol: float, metrics: tuple[str, ...] | None = None):
+    """-> (regressions, improvements, missing, added); each regression is
+    (key, metric, baseline, candidate, limit)."""
+    regressions, improvements = [], []
+    missing = [k for k in base if k not in cand]
+    added = [k for k in cand if k not in base]
+    for key, brow in base.items():
+        crow = cand.get(key)
+        if crow is None:
+            continue
+        for metric, worse_is_lower in (
+                [(m, True) for m in HIGHER_BETTER]
+                + [(m, False) for m in LOWER_BETTER]):
+            if metrics is not None and metric not in metrics:
+                continue
+            b, c = brow.get(metric), crow.get(metric)
+            if not isinstance(b, (int, float)) or \
+                    not isinstance(c, (int, float)) or \
+                    isinstance(b, bool) or isinstance(c, bool):
+                continue
+            if worse_is_lower:
+                limit = b * (1.0 - tol)
+                if c < limit:
+                    regressions.append((key, metric, b, c, limit))
+                elif c > b * (1.0 + tol):
+                    improvements.append((key, metric, b, c))
+            else:
+                limit = b * (1.0 + tol)
+                if c > limit:
+                    regressions.append((key, metric, b, c, limit))
+                elif c < b * (1.0 - tol):
+                    improvements.append((key, metric, b, c))
+    return regressions, improvements, missing, added
+
+
+def _fmt_key(key: tuple) -> str:
+    return ",".join(f"{f}={v}" for f, v in key)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="reference BENCH_*.json")
+    ap.add_argument("candidate", help="freshly measured BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="relative tolerance (0.25 = 25%% headroom)")
+    ap.add_argument("--metrics", default=None,
+                    help="comma list restricting the compared metrics "
+                         "(default: every known metric both rows carry)")
+    ap.add_argument("--require-keys", action="store_true",
+                    help="fail when a baseline row is missing from the "
+                         "candidate (schema gate, not just perf)")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    cand = load_rows(args.candidate)
+    metrics = tuple(args.metrics.split(",")) if args.metrics else None
+    regs, imps, missing, added = compare(base, cand, tol=args.tol,
+                                         metrics=metrics)
+
+    for key, metric, b, c, limit in regs:
+        print(f"REGRESSION {metric}: {b} -> {c} (limit {limit:.4g}) "
+              f"[{_fmt_key(key)}]")
+    for key, metric, b, c in imps:
+        print(f"improvement {metric}: {b} -> {c} [{_fmt_key(key)}]")
+    for key in missing:
+        print(f"missing from candidate: [{_fmt_key(key)}]")
+    for key in added:
+        print(f"new in candidate: [{_fmt_key(key)}]")
+    print(f"# compared {len(base)} baseline rows vs {len(cand)} candidate "
+          f"rows at tol={args.tol}: {len(regs)} regressions, "
+          f"{len(imps)} improvements, {len(missing)} missing, "
+          f"{len(added)} added")
+    if regs or (args.require_keys and missing):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

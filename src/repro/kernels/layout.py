@@ -40,6 +40,13 @@ LANES = 128      # TPU MXU/VPU lane count — the systolic-array edge
 SUBLANES = 8     # TPU f32 sublane tile (min second-to-last dim)
 MMA_TILE = 16    # GPU tensor-core MMA fragment edge (WMMA 16x16x16)
 
+# KV-cache page height for the paged serving pool (serving/kvpool.py):
+# a power-of-two multiple of SUBLANES so a page is a whole number of
+# sublane tiles and divides every pow2-bucketized ring capacity. Like
+# the constants above this is geometry, so it lives here and nowhere
+# else (callers import it; the grep-guard bans literal copies).
+KV_PAGE_ROWS = 2 * SUBLANES
+
 # Per-(backend, op) default tuning — the values the kernels hard-coded
 # before the TuneSpec refactor. Keys must stay within
 # repro.core.policy.KNOB_SCHEMA (test-enforced). The "tpu" section also

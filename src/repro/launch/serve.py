@@ -39,6 +39,17 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt tokens a prefilling slot consumes per "
                          "tick (continuous scheduler)")
+    ap.add_argument("--cache", choices=("ring", "paged"), default="ring",
+                    help="KV-cache layout (continuous scheduler): per-slot "
+                         "ring buffers, or the paged block-table pool with "
+                         "prompt-prefix sharing and copy-on-write")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="paged cache: total KV pool pages (default "
+                         "(slots+1) x pages-per-slot)")
+    ap.add_argument("--page-rows", type=int, default=None,
+                    help="paged cache: rows per page — a power-of-two "
+                         "multiple of the sublane tile (default "
+                         "kernels/layout.KV_PAGE_ROWS)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop Poisson arrival rate in requests/s "
                          "(0: all requests available immediately)")
@@ -107,6 +118,8 @@ def run(args, pol) -> None:
     engine = ServingEngine(bundle, params, ServeConfig(
         slots=args.slots, max_new=args.max_new, policy=pol,
         scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
+        cache_kind=args.cache, pool_pages=args.pool_pages,
+        page_rows=args.page_rows,
         seed=args.seed), mesh_ctx=mesh_ctx)
     rng = np.random.default_rng(args.seed)
     arrival = 0.0
@@ -128,6 +141,13 @@ def run(args, pol) -> None:
     print(f"{len(results)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / max(dt, 1e-9):.1f} tok/s, "
           f"scheduler={engine.scheduler})")
+    kv = engine.kv_stats()
+    if kv is not None:
+        print(f"paged KV pool: peak {kv.get('peak_pages_in_use', 0)}/"
+              f"{kv.get('pages_total', 0)} pages, "
+              f"{kv['shared_tokens']} prompt tokens prefix-shared, "
+              f"{kv['cow_copies']} CoW copies, {kv['defers']} admissions "
+              "deferred")
     if args.arrival_rate > 0:
         lats = [1e3 * (ts - r.arrival_s)
                 for r in results for ts in r.token_s]

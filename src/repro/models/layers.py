@@ -211,6 +211,63 @@ def attn_decode_block(p, cfg: ModelConfig, x, cache, *, n_valid):
     return out, {"k": kc, "v": vc, "pos": pos + n_valid}
 
 
+def attn_decode_paged(p, cfg: ModelConfig, x, cache, *, n_valid, tables):
+    """Block-table variant of :func:`attn_decode_block` for the paged KV
+    pool (``serving/kvpool.py``).
+
+    x (B,T,d); cache {k, v: (P, R, Hkv, Dh) — the *shared* page pool —
+    pos: (B,)}; ``tables`` (B, MP) int32 maps slot b's logical page
+    ``(pos // R) % MP`` to a physical pool page. Token t of slot b lands
+    at flat pool row ``tables[b, (pos_t//R) % MP] * R + pos_t % R`` via
+    the same masked one-hot f32-matmul scatter the ring path uses (the
+    paper's MMA-form data movement, exact for 0/1 weights); the host
+    manager guarantees written rows are globally exclusive across slots
+    (copy-on-write precedes any write to a shared page), so one einsum
+    scatters every slot into the pool at once. Attention gathers the
+    slot's pages back into ring order — for position p the gathered row
+    index is ``((p//R)%MP)*R + p%R == p % (MP*R)``, exactly the ring row
+    of a capacity-``MP*R`` cache — so paged attention is bit-identical to
+    the ring path, sliding-window truncation included."""
+    b, t_len = x.shape[:2]
+    dh, hq, hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    pos = cache["pos"]                                    # (B,)
+    posmat = pos[:, None] + jnp.arange(t_len, dtype=jnp.int32)[None, :]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, t_len, hq, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, t_len, hkv, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, t_len, hkv, dh)
+    q = rope(q, posmat, cfg.rope_theta)
+    k = rope(k, posmat, cfg.rope_theta)
+    n_pages, r = cache["k"].shape[:2]
+    mp = tables.shape[1]
+    cap = mp * r                                          # ring-equivalent
+    assert t_len <= cap, (t_len, cap)
+    logical = (posmat // r) % mp                          # (B, T)
+    phys = jnp.take_along_axis(tables, logical, axis=1)   # (B, T)
+    rows = phys * r + posmat % r                          # flat pool rows
+    valid = jnp.arange(t_len)[None, :] < n_valid[:, None]
+    flat = n_pages * r
+    oh = ((jnp.arange(flat)[None, :, None] == rows[:, None, :])
+          & valid[:, None, :]).astype(jnp.float32)        # (B, PR, T)
+    # rows are globally exclusive (CoW) -> sum over slots AND tokens
+    keep = (1.0 - oh.sum(axis=(0, 2)))[:, None, None]     # (PR, 1, 1)
+
+    def write(c, new):
+        cf = c.reshape(flat, hkv, dh).astype(jnp.float32)
+        upd = jnp.einsum("bst,bthd->shd", oh, new.astype(jnp.float32))
+        return (cf * keep + upd).astype(c.dtype).reshape(c.shape)
+
+    kc = write(cache["k"], k)
+    vc = write(cache["v"], v)
+    # gather each slot's pages back into ring order: (B, MP*R, Hkv, Dh)
+    k_seq = jnp.take(kc, tables, axis=0).reshape(b, cap, hkv, dh)
+    v_seq = jnp.take(vc, tables, axis=0).reshape(b, cap, hkv, dh)
+    lens = jnp.minimum(posmat + 1, cap)                   # (B, T)
+    o = decode_attention(q, k_seq, v_seq, lens)
+    o = o.reshape(b, t_len, hq * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, {"k": kc, "v": vc, "pos": pos + n_valid}
+
+
 def attn_cache_pspec(cfg: ModelConfig, n_layers: int, batch: int, smax: int):
     cap = min(smax, cfg.swa_window) if cfg.swa_window else smax
     shp = (n_layers, batch, cap, cfg.n_kv_heads, cfg.dh)
@@ -220,6 +277,17 @@ def attn_cache_pspec(cfg: ModelConfig, n_layers: int, batch: int, smax: int):
         "v": PSpec(shp, log, "zeros"),
         "pos": PSpec((), (), "zeros", jnp.int32),
     }
+
+
+def attn_page_cache_pspec(cfg: ModelConfig, n_layers: int, pages: int,
+                          page_rows: int):
+    """Paged-pool KV declaration: one pool of ``pages`` fixed-height pages
+    shared by every slot (block tables map slots to pages). The page axes
+    stay unsharded — pages are a pooled resource, not a batch dim; the
+    model axis still shards ``kv_heads`` exactly as the ring cache."""
+    shp = (n_layers, pages, page_rows, cfg.n_kv_heads, cfg.dh)
+    log = ("layers", None, None, "kv_heads", None)
+    return {"k": PSpec(shp, log, "zeros"), "v": PSpec(shp, log, "zeros")}
 
 
 # ---------------------------------------------------------------------------
@@ -528,6 +596,25 @@ def mamba_cache_pspec(cfg: ModelConfig, n_layers: int, batch: int):
                       ("layers", "batch", None, "inner_all"), "zeros"),
         "state": PSpec((n_layers, batch, hh, hp, ns),
                        ("layers", "batch", "ssm_heads", None, None), "zeros",
+                       jnp.float32),
+    }
+
+
+def mamba_snap_pspec(cfg: ModelConfig, n_layers: int, pages: int):
+    """SSM state-snapshot pool for the paged serving cache: ``pages``
+    slots each holding a full (conv history, SSD state) pair captured at
+    a prompt boundary, so later requests extending that exact prompt skip
+    its prefill. Live per-slot state stays in :func:`mamba_cache_pspec`;
+    only snapshots are pooled. Page axis unsharded (pooled resource);
+    model axis shards the channel dims exactly as the live arrays."""
+    di, g, ns = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    hh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * g * ns
+    return {
+        "conv": PSpec((n_layers, pages, cfg.conv_kernel - 1, conv_dim),
+                      ("layers", None, None, "inner_all"), "zeros"),
+        "state": PSpec((n_layers, pages, hh, hp, ns),
+                       ("layers", None, "ssm_heads", None, None), "zeros",
                        jnp.float32),
     }
 

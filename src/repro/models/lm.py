@@ -60,6 +60,10 @@ class Bundle:
     # Per-slot positions, slot-masked cache updates, chunked prefill and
     # single-token decode in one call. None = wave scheduling only.
     decode_block: Callable = None
+    # paged-pool variant: same signature plus page=dict of page-table
+    # inputs from serving/kvpool.py (tables, kv_copy, snap_save/load,
+    # reset_pos per family). None = ring cache only.
+    decode_block_paged: Callable = None
 
 
 # ---------------------------------------------------------------------------
@@ -260,13 +264,40 @@ def _n_cache_layers(cfg):
 
 
 def lm_cache_pspec(cfg: L.ModelConfig, batch: int, smax: int,
-                   per_slot_pos: bool = False):
+                   per_slot_pos: bool = False, *, kind: str = "ring",
+                   pool_pages: int = 0, page_rows: int = 0,
+                   state_pages: int = 0):
     """Decode-cache declaration. ``per_slot_pos=True`` declares the
     continuous-batching layout: ``pos`` is a (batch,) vector — every slot
-    carries its own position counter instead of sharing one scalar."""
+    carries its own position counter instead of sharing one scalar.
+
+    ``kind="paged"`` swaps the per-slot KV rings for one shared pool of
+    ``pool_pages`` pages of ``page_rows`` rows (block tables map slots to
+    pages; see ``serving/kvpool.py``); ``smax`` then only fixes the table
+    width implicitly via the engine. SSM families keep their live per-slot
+    conv/state arrays unchanged and add a ``state_pages``-slot snapshot
+    pool for prompt-boundary prefix sharing."""
     pshape = (batch,) if per_slot_pos else ()
     plog = ("batch",) if per_slot_pos else ()
     cache: dict[str, Any] = {"pos": PSpec(pshape, plog, "zeros", jnp.int32)}
+    if kind == "paged":
+        assert per_slot_pos, "paged cache is continuous-batching only"
+        if cfg.family in ("dense", "vlm", "moe"):
+            cache["attn"] = L.attn_page_cache_pspec(
+                cfg, cfg.n_layers, pool_pages, page_rows)
+        elif cfg.family == "ssm":
+            cache["mamba"] = L.mamba_cache_pspec(cfg, cfg.n_layers, batch)
+            cache["snap"] = L.mamba_snap_pspec(cfg, cfg.n_layers,
+                                               state_pages)
+        elif cfg.family == "hybrid":
+            cache["mamba"] = L.mamba_cache_pspec(cfg, cfg.n_layers, batch)
+            cache["snap"] = L.mamba_snap_pspec(cfg, cfg.n_layers,
+                                               state_pages)
+            cache["attn"] = L.attn_page_cache_pspec(
+                cfg, _n_cache_layers(cfg), pool_pages, page_rows)
+        else:
+            raise ValueError(f"no paged cache for family {cfg.family!r}")
+        return cache
     if cfg.family in ("dense", "vlm", "moe"):
         cache["attn"] = L.attn_cache_pspec(cfg, cfg.n_layers, batch, smax)
         del cache["attn"]["pos"]
@@ -505,6 +536,157 @@ def lm_decode_block(params, cfg: L.ModelConfig, cache, batch, *,
     return unembed(h_last, head)[:, 0], new_cache
 
 
+def _shared_decode_block_paged(sp, cfg, h, emb0, cache, n_valid, tables):
+    cat = jnp.concatenate([h, emb0], axis=-1)
+    a_in = rmsnorm(cat, sp["ln_in"], cfg.norm_eps)
+    a_out, cache = L.attn_decode_paged(sp["attn"], cfg, a_in, cache,
+                                       n_valid=n_valid, tables=tables)
+    h = h + a_out
+    m_in = rmsnorm(h, sp["ln_mlp"], cfg.norm_eps)
+    h = h + L.mlp_apply(sp["mlp"], cfg, m_in)
+    return h, cache
+
+
+def _snap_io(cfg, reset_mask, snap_load, snap_save, live_conv, live_state,
+             snap):
+    """SSM snapshot pool plumbing for the paged path.
+
+    Returns the tick's initial conv/state (reset -> zeros, or a snapshot
+    gathered from the pool when the host planned a prefix-sharing load)
+    and the updated snapshot pool (pre-tick state of slots the host
+    marked for capture scattered in via a one-hot matmul — capture runs
+    at the first tick after prefill, when live state is exactly
+    state-after-prompt). Save destinations are freshly allocated pages,
+    never a page being loaded this tick, so save-before-load ordering is
+    immaterial."""
+    use = reset_mask & (snap_load >= 0)
+    li = jnp.maximum(snap_load, 0)
+    lconv = jnp.take(snap["conv"], li, axis=1).astype(live_conv.dtype)
+    lstate = jnp.take(snap["state"], li, axis=1)
+    conv0 = jnp.where(reset_mask[None, :, None, None], 0, live_conv)
+    conv0 = jnp.where(use[None, :, None, None], lconv, conv0)
+    state0 = jnp.where(reset_mask[None, :, None, None, None], 0, live_state)
+    state0 = jnp.where(use[None, :, None, None, None], lstate, state0)
+    sp = snap["conv"].shape[1]
+    ohs = (jnp.arange(sp)[:, None] == snap_save[None, :]
+           ).astype(jnp.float32)                          # (Sp, B)
+    keep = 1.0 - ohs.sum(axis=1)                          # (Sp,)
+    nconv = (snap["conv"].astype(jnp.float32) * keep[None, :, None, None]
+             + jnp.einsum("sb,lbkc->lskc", ohs, conv0.astype(jnp.float32))
+             ).astype(snap["conv"].dtype)
+    nstate = (snap["state"] * keep[None, :, None, None, None]
+              + jnp.einsum("sb,lbhpn->lshpn", ohs, state0))
+    return conv0, state0, {"conv": nconv, "state": nstate}
+
+
+def lm_decode_block_paged(params, cfg: L.ModelConfig, cache, batch, *,
+                          n_valid, reset_mask, page):
+    """Paged-pool twin of :func:`lm_decode_block`.
+
+    ``page`` carries the host manager's per-tick plan
+    (``serving/kvpool.py``): ``reset_pos`` (B,) — admission start
+    positions (> 0 when a shared prefix is skipped); attention families
+    add ``tables`` (B, MP) block tables and ``kv_copy`` (P,) — a pool-
+    level page gather (identity rows except copy-on-write destinations,
+    which read their source page) applied ONCE before the layer scan so a
+    CoW costs one gather for all layers; SSM families add ``snap_save`` /
+    ``snap_load`` (B,) snapshot-pool page indices (-1 = none). Same
+    contract otherwise: returns (next_logits (B, vocab), new cache)."""
+    tokens = batch["tokens"]
+    b, t_len = tokens.shape
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    reset_mask = jnp.asarray(reset_mask, jnp.bool_)
+    pos = jnp.where(reset_mask, jnp.asarray(page["reset_pos"], jnp.int32),
+                    cache["pos"])                          # (B,)
+    h = embed_tokens(params["embed"], tokens)              # (B, T, d)
+    emb0 = h
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        tables = jnp.asarray(page["tables"], jnp.int32)
+        kv_copy = jnp.asarray(page["kv_copy"], jnp.int32)
+        kpool = jnp.take(cache["attn"]["k"], kv_copy, axis=1)
+        vpool = jnp.take(cache["attn"]["v"], kv_copy, axis=1)
+
+        def step(hh, xs):
+            lp, kc, vc = xs
+            c = {"k": kc, "v": vc, "pos": pos}
+            a_in = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+            a_out, c = L.attn_decode_paged(lp["attn"], cfg, a_in, c,
+                                           n_valid=n_valid, tables=tables)
+            hh = hh + a_out
+            m_in = rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                m_out, _ = L.moe_apply(lp["moe"], cfg, m_in)
+            else:
+                m_out = L.mlp_apply(lp["mlp"], cfg, m_in)
+            return hh + m_out, (c["k"], c["v"])
+
+        h, (ks, vs) = jax.lax.scan(step, h, (params["blocks"], kpool,
+                                             vpool))
+        new_cache["attn"] = {"k": ks, "v": vs}
+    elif cfg.family == "ssm":
+        conv0, state0, new_cache["snap"] = _snap_io(
+            cfg, reset_mask, jnp.asarray(page["snap_load"], jnp.int32),
+            jnp.asarray(page["snap_save"], jnp.int32),
+            cache["mamba"]["conv"], cache["mamba"]["state"], cache["snap"])
+
+        def step(hh, xs):
+            lp, conv, state = xs
+            m_in = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            out, c = L.mamba_decode_block(lp["mamba"], cfg, m_in,
+                                          {"conv": conv, "state": state},
+                                          n_valid=n_valid)
+            return hh + out, (c["conv"], c["state"])
+
+        h, (convs, states) = jax.lax.scan(
+            step, h, (params["blocks"], conv0, state0))
+        new_cache["mamba"] = {"conv": convs, "state": states}
+    elif cfg.family == "hybrid":
+        conv0, state0, new_cache["snap"] = _snap_io(
+            cfg, reset_mask, jnp.asarray(page["snap_load"], jnp.int32),
+            jnp.asarray(page["snap_save"], jnp.int32),
+            cache["mamba"]["conv"], cache["mamba"]["state"], cache["snap"])
+        tables = jnp.asarray(page["tables"], jnp.int32)
+        kv_copy = jnp.asarray(page["kv_copy"], jnp.int32)
+        kpool = jnp.take(cache["attn"]["k"], kv_copy, axis=1)
+        vpool = jnp.take(cache["attn"]["v"], kv_copy, axis=1)
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+
+        def step(hh, xs):
+            lp, conv, state = xs
+            m_in = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            out, c = L.mamba_decode_block(lp["mamba"], cfg, m_in,
+                                          {"conv": conv, "state": state},
+                                          n_valid=n_valid)
+            return hh + out, (c["conv"], c["state"])
+
+        convs, states, ks, vs = [], [], [], []
+        for gi in range(n_groups):
+            sl = slice(gi * every, (gi + 1) * every)
+            grp = jax.tree.map(lambda x: x[sl], params["blocks"])
+            h, (cv, st) = jax.lax.scan(step, h, (grp, conv0[sl],
+                                                 state0[sl]))
+            c = {"k": kpool[gi], "v": vpool[gi], "pos": pos}
+            h, c = _shared_decode_block_paged(params["shared"], cfg, h,
+                                              emb0, c, n_valid, tables)
+            convs.append(cv); states.append(st)
+            ks.append(c["k"]); vs.append(c["v"])
+        new_cache["mamba"] = {"conv": jnp.concatenate(convs),
+                              "state": jnp.concatenate(states)}
+        new_cache["attn"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    else:
+        raise ValueError(cfg.family)
+    new_cache["pos"] = pos + n_valid
+
+    last = jnp.maximum(n_valid - 1, 0)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+    h_last = rmsnorm(h_last, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(h_last, head)[:, 0], new_cache
+
+
 # ---------------------------------------------------------------------------
 # bundle
 
@@ -531,8 +713,16 @@ def build_lm(cfg: L.ModelConfig) -> Bundle:
         return lm_decode_block(params, cfg, cache, batch,
                                n_valid=n_valid, reset_mask=reset_mask)
 
-    def cache_pspec(batch: int, smax: int, per_slot_pos: bool = False):
-        return lm_cache_pspec(cfg, batch, smax, per_slot_pos=per_slot_pos)
+    def decode_block_paged(params, cache, batch, *, n_valid, reset_mask,
+                           page):
+        return lm_decode_block_paged(params, cfg, cache, batch,
+                                     n_valid=n_valid, reset_mask=reset_mask,
+                                     page=page)
+
+    def cache_pspec(batch: int, smax: int, per_slot_pos: bool = False,
+                    **kind_kwargs):
+        return lm_cache_pspec(cfg, batch, smax, per_slot_pos=per_slot_pos,
+                              **kind_kwargs)
 
     from repro.models.common import count_pspec_params
 
@@ -546,4 +736,5 @@ def build_lm(cfg: L.ModelConfig) -> Bundle:
     return Bundle(cfg=cfg, params_pspec=pspec, loss=loss, prefill=prefill,
                   decode=decode, cache_pspec=cache_pspec, n_params=n,
                   n_active_params=n_active, prefill_last=prefill_last,
-                  decode_block=decode_block)
+                  decode_block=decode_block,
+                  decode_block_paged=decode_block_paged)

@@ -6,6 +6,8 @@ from repro.serving.engine import (
     clear_compile_cache,
     demo_engine,
 )
+from repro.serving.kvpool import PagedKVManager, PagePool, PrefixTrie
 
 __all__ = ["Request", "Result", "ServeConfig", "ServingEngine",
-           "clear_compile_cache", "demo_engine"]
+           "clear_compile_cache", "demo_engine",
+           "PagePool", "PrefixTrie", "PagedKVManager"]

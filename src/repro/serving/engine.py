@@ -79,6 +79,17 @@ class ServeConfig:
     scheduler: str = "continuous"   # continuous | wave
     prefill_chunk: int = 16         # prompt tokens consumed per tick/slot
     max_context: int | None = None  # cap on ring-cache capacity (rows)
+    # KV-cache layout for the continuous scheduler: "ring" keeps the
+    # per-slot ring buffers (PR 6 baseline); "paged" switches to the
+    # block-table page pool with prefix sharing and copy-on-write
+    # (serving/kvpool.py) — admission allocates pages lazily, shared
+    # prompt prefixes map to the same physical pages, and pool pressure
+    # defers admission instead of crashing.
+    cache_kind: str = "ring"        # ring | paged
+    page_rows: int | None = None    # page height (None: layout.KV_PAGE_ROWS)
+    pool_pages: int | None = None   # KV pool size (None: (slots+1) pages/slot)
+    state_pages: int | None = None  # SSM snapshot pool size (None: 2*slots)
+    prefix_sharing: bool = True     # trie-share prompt prefixes (paged only)
     seed: int = 0                   # sampling RNG seed
     trace_ring: int = 4096          # admit/finish events kept in memory
     #   (the engine's trace is a bounded ring — a long-running service
@@ -98,6 +109,14 @@ class ServeConfig:
             raise ValueError(
                 f"scheduler must be 'continuous' or 'wave', "
                 f"got {self.scheduler!r}")
+        if self.cache_kind not in ("ring", "paged"):
+            raise ValueError(
+                f"cache_kind must be 'ring' or 'paged', "
+                f"got {self.cache_kind!r}")
+        if self.cache_kind == "paged" and self.scheduler == "wave":
+            raise ValueError(
+                "the paged KV cache requires the continuous scheduler "
+                "(wave batching shares one scalar position counter)")
         if self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         if self.trace_ring < 1:
@@ -186,8 +205,10 @@ def _steps_for(bundle: Bundle, mesh_ctx=None) -> dict:
     if entry is None:
         prefill, decode = make_serve_step(bundle)
         block = make_block_serve_step(bundle, mesh_ctx=mesh_ctx)
+        paged = make_block_serve_step(bundle, mesh_ctx=mesh_ctx, paged=True)
         entry = {"prefill": jax.jit(prefill), "decode": jax.jit(decode),
-                 "block": None if block is None else jax.jit(block)}
+                 "block": None if block is None else jax.jit(block),
+                 "block_paged": None if paged is None else jax.jit(paged)}
         _STEP_CACHE[key] = entry
     return entry
 
@@ -226,12 +247,19 @@ class ServingEngine:
         self._prefill = steps["prefill"]
         self._decode = steps["decode"]
         self._block = steps["block"]
+        self._block_paged = steps["block_paged"]
         self.scheduler = cfg.scheduler
+        self.cache_kind = cfg.cache_kind
         if self.scheduler == "continuous" and self._block is None:
             warnings.warn(
                 "bundle has no block-decode step (encoder-decoder); "
                 "falling back to the wave scheduler", stacklevel=2)
             self.scheduler = "wave"
+            if self.cache_kind == "paged":
+                warnings.warn(
+                    "paged KV cache requires the continuous scheduler; "
+                    "ignoring cache_kind='paged'", stacklevel=2)
+                self.cache_kind = "ring"
         self._rng = jax.random.PRNGKey(cfg.seed)
         self.queue: deque[Request] = deque()
         self.results: list[Result] = []
@@ -241,6 +269,8 @@ class ServingEngine:
         self.ticks = 0                  # block steps issued (continuous)
         self._cache = None              # continuous ring cache (reused)
         self._capacity = None
+        self._kv = None                 # PagedKVManager (cache_kind=paged)
+        self._overflow_warned = False   # max_context degrade: warn once
 
     # -- shared plumbing ----------------------------------------------------
 
@@ -252,8 +282,9 @@ class ServingEngine:
         return list(self._trace)
 
     def _trace_event(self, tick: int, event: str, uid: int,
-                     slot: int) -> None:
-        ev = {"tick": tick, "event": event, "uid": uid, "slot": slot}
+                     slot: int, **extra) -> None:
+        ev = {"tick": tick, "event": event, "uid": uid, "slot": slot,
+              **extra}
         self._trace.append(ev)
         sess = _obs.ACTIVE
         if sess is not None:
@@ -275,7 +306,14 @@ class ServingEngine:
 
         return {"prefill": size(self._prefill),
                 "decode": size(self._decode),
-                "block": size(self._block)}
+                "block": size(self._block),
+                "block_paged": size(self._block_paged)}
+
+    def kv_stats(self) -> dict | None:
+        """Paged-pool occupancy/sharing counters (None under the ring
+        cache): pages in use / free / shared, peak in use, CoW copies,
+        defers, trie entries — see ``PagedKVManager.stats``."""
+        return None if self._kv is None else self._kv.stats()
 
     def _budget(self, req: Request) -> int:
         return self.cfg.max_new if req.max_new is None else req.max_new
@@ -326,9 +364,37 @@ class ServingEngine:
         cap = _bucket(need)
         if self.cfg.max_context is not None:
             cap = min(cap, _bucket(self.cfg.max_context))
+        pspec_kwargs: dict = {}
+        if self.cache_kind == "paged":
+            from repro.kernels.layout import KV_PAGE_ROWS
+            from repro.serving import kvpool
+
+            rows = self.cfg.page_rows or KV_PAGE_ROWS
+            kvpool.validate_page_rows(rows)
+            swa = self.bundle.cfg.swa_window
+            if swa:
+                # page granularity: the sliding window rounds UP to a
+                # whole page (a paged slot keeps >= swa rows, never fewer)
+                cap = min(cap, -(-swa // rows) * rows)
+            cap = max(cap, rows)
+            mp = cap // rows
+            pool_pages = self.cfg.pool_pages or (self.cfg.slots + 1) * mp
+            state_pages = self.cfg.state_pages or 2 * self.cfg.slots
+            pspec_kwargs = {"kind": "paged", "pool_pages": pool_pages,
+                            "page_rows": rows, "state_pages": state_pages}
+            if self._kv is None or self._capacity != cap or \
+                    self._kv.kv is not None and \
+                    self._kv.kv.n_pages != pool_pages:
+                self._kv = kvpool.PagedKVManager(
+                    slots=self.cfg.slots, page_rows=rows, maxpages=mp,
+                    pool_pages=pool_pages,
+                    family=self.bundle.cfg.family,
+                    state_pages=state_pages,
+                    sharing=self.cfg.prefix_sharing)
         if self._cache is None or self._capacity != cap:
             pspec_tree = self.bundle.cache_pspec(self.cfg.slots, cap,
-                                                 per_slot_pos=True)
+                                                 per_slot_pos=True,
+                                                 **pspec_kwargs)
             ctx = self.mesh_ctx
             if ctx is not None and ctx.mesh is not None:
                 # sharded ring cache: build under jit with out_shardings
@@ -362,23 +428,63 @@ class ServingEngine:
             tick_start = t0 + now    # same clock read; no cost when off
             cur = self.ticks
             # admission: refill every free slot from the arrived queue
-            # (lockstep mode ignores arrival clocks — see __init__)
+            # (lockstep mode ignores arrival clocks — see __init__).
+            # Paged mode admits head-of-line only: a deferred request
+            # blocks later ones (FIFO; skipping ahead would starve it).
             reset = np.zeros(nb, bool)
+            blocked = False
             for i, s in enumerate(slots):
-                if s.free and self.queue and \
-                        (self._lockstep
-                         or self.queue[0].arrival_s <= now):
-                    req = self.queue.popleft()
-                    slots[i] = s = _Slot(
-                        free=False, req=req, budget=self._budget(req),
-                        result=Result(uid=req.uid, tokens=[],
-                                      prompt_len=len(req.prompt),
-                                      arrival_s=req.arrival_s,
-                                      admitted_tick=cur))
-                    reset[i] = True
-                    self._trace_event(cur, "admit", req.uid, i)
+                if blocked or not s.free or not self.queue:
+                    continue
+                if not (self._lockstep or self.queue[0].arrival_s <= now):
+                    continue
+                req = self.queue[0]
+                budget = self._budget(req)
+                start = 0
+                if self._kv is not None:
+                    got = self._kv.admit(i, req.prompt, budget,
+                                         uid=req.uid)
+                    if got is None:     # pool pressure: defer admission
+                        blocked = True
+                        continue
+                    start = got
+                need = len(req.prompt) + budget
+                if need > self._capacity:
+                    # capacity saturated at max_context: the slot degrades
+                    # to sliding-window attention (ring/paged overwrite
+                    # their oldest rows). Correct for SWA models, lossy
+                    # for full-attention ones — say so, don't be silent.
+                    if not self._overflow_warned:
+                        warnings.warn(
+                            f"request uid={req.uid} needs {need} cache "
+                            f"rows but capacity is {self._capacity} "
+                            f"(max_context={self.cfg.max_context}); "
+                            "oldest rows will be overwritten — degrading "
+                            "to sliding-window attention. Further "
+                            "overflows are traced, not warned.",
+                            stacklevel=2)
+                        self._overflow_warned = True
+                    self._trace_event(cur, "swa_degrade", req.uid, i,
+                                      need=need, capacity=self._capacity)
+                self.queue.popleft()
+                slots[i] = s = _Slot(
+                    free=False, req=req, budget=budget,
+                    result=Result(uid=req.uid, tokens=[],
+                                  prompt_len=len(req.prompt),
+                                  arrival_s=req.arrival_s,
+                                  admitted_tick=cur))
+                s.ppos = start          # trie-shared prefix tokens skipped
+                reset[i] = True
+                self._trace_event(cur, "admit", req.uid, i, start=start)
             active = [i for i, s in enumerate(slots) if not s.free]
             if not active:
+                if blocked:
+                    req = self.queue[0]
+                    raise RuntimeError(
+                        f"paged KV pool cannot admit request "
+                        f"uid={req.uid} (prompt {len(req.prompt)} + "
+                        f"budget {self._budget(req)}) even with every "
+                        "slot idle — raise ServeConfig.pool_pages")
                 if not self.queue:
                     break
                 wait = self.queue[0].arrival_s - now
@@ -410,10 +516,21 @@ class ServingEngine:
                 else:
                     tokens[i, 0] = s.last
                     n_valid[i] = 1
-            with _prof.span("serving/block_step"):
-                logits, self._cache = self._block(
-                    self.params, self._cache, self._to_device(tokens),
-                    self._to_device(n_valid), self._to_device(reset))
+            if self._kv is not None:
+                page_np = self._kv.plan_tick(
+                    {i: int(n_valid[i]) for i in active})
+                page = {k: self._to_device(v)
+                        for k, v in page_np.items()}
+                with _prof.span("serving/block_step"):
+                    logits, self._cache = self._block_paged(
+                        self.params, self._cache, self._to_device(tokens),
+                        self._to_device(n_valid), self._to_device(reset),
+                        page)
+            else:
+                with _prof.span("serving/block_step"):
+                    logits, self._cache = self._block(
+                        self.params, self._cache, self._to_device(tokens),
+                        self._to_device(n_valid), self._to_device(reset))
             if sess is not None:
                 t_step = time.perf_counter()
             nxt = self._sample(logits)
@@ -422,9 +539,13 @@ class ServingEngine:
 
             for i in active:
                 s = slots[i]
+                if self._kv is not None:
+                    self._kv.advance(i, int(n_valid[i]))
                 plen = len(s.req.prompt)
                 if s.ppos < plen:
                     s.ppos += int(n_valid[i])
+                    if self._kv is not None and s.ppos >= plen:
+                        self._kv.mark_prefilled(i)
                     if s.ppos < plen:
                         continue        # mid-prefill: logits are interim
                 # this tick produced a real token for slot i
@@ -456,8 +577,14 @@ class ServingEngine:
                     res.finish_tick = cur
                     self._trace_event(cur, "finish", res.uid, i)
                     out.append(res)
+                    if self._kv is not None:
+                        self._kv.release(i)   # pages back to the pool
                     slots[i] = _Slot()  # freed; refilled next tick
 
+            if self._kv is not None:
+                self._kv.end_tick()
+                if sess is not None:
+                    self._kv.emit_gauges()
             if sess is not None:
                 # contiguous boundaries: the four phase durations sum to
                 # the tick wall time exactly (tested to float tolerance)

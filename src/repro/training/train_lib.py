@@ -224,8 +224,8 @@ def make_serve_step(bundle: Bundle) -> tuple[Callable, Callable]:
     return prefill_step, decode_step
 
 
-def make_block_serve_step(bundle: Bundle, *,
-                          mesh_ctx=None) -> Callable | None:
+def make_block_serve_step(bundle: Bundle, *, mesh_ctx=None,
+                          paged: bool = False) -> Callable | None:
     """-> step(params, cache, tokens (B,T), n_valid (B,), reset_mask (B,))
     -> (next_logits (B, vocab), cache) — the continuous-batching slot
     step. The cache carries per-slot position vectors; ``n_valid`` masks
@@ -235,31 +235,40 @@ def make_block_serve_step(bundle: Bundle, *,
     no block decode (encoder-decoder) — the engine then falls back to
     wave scheduling.
 
+    ``paged=True`` builds the page-pool variant instead: the step takes a
+    trailing ``page`` dict (block tables, CoW gather, snapshot save/load,
+    reset positions — the per-tick plan from ``serving/kvpool.py``), so
+    chunked prefill and decode still mix in the same single jitted call.
+
     ``mesh_ctx`` activates at every call (sharded serving: the ring KV
     cache shards over the model axis via the context's rules); the
     returned logits are pinned replicated so every host can fetch its
     addressable copy for sampling."""
-    if bundle.decode_block is None:
+    decode = bundle.decode_block_paged if paged else bundle.decode_block
+    if decode is None:
         return None
     from repro.parallel.mesh_context import activate
 
     compute_dtype = bundle.cfg.dtype
 
-    def block_step(params, cache, tokens, n_valid, reset_mask):
+    def block_step(params, cache, tokens, n_valid, reset_mask, page=None):
         if _obs.ACTIVE is not None:
             # trace-time retrace counter: fires once per compiled shape
             # (the serving engine's T=chunk and T=1 block variants)
             _obs.ACTIVE.emit(
                 "serve_block_trace", slots=int(tokens.shape[0]),
-                block_t=int(tokens.shape[1]))
+                block_t=int(tokens.shape[1]),
+                cache_kind="paged" if paged else "ring")
             _obs.ACTIVE.counter(
                 "repro_serve_block_traces_total",
                 "block-step retraces (jit compiles) by T").inc(
                 block_t=str(int(tokens.shape[1])))
         with activate(mesh_ctx):
-            logits, cache = bundle.decode_block(
+            kw = {"page": page} if paged else {}
+            logits, cache = decode(
                 _cast_tree(params, compute_dtype), cache,
-                {"tokens": tokens}, n_valid=n_valid, reset_mask=reset_mask)
+                {"tokens": tokens}, n_valid=n_valid, reset_mask=reset_mask,
+                **kw)
             if mesh_ctx is not None and mesh_ctx.mesh is not None:
                 logits = jax.lax.with_sharding_constraint(
                     logits, jax.sharding.NamedSharding(

@@ -1,0 +1,341 @@
+"""Host-side unit tests for the paged KV-cache subsystem
+(serving/kvpool.py): page pool refcounts and limbo, prefix-trie
+match/register/evict, manager admission with reservations, deferral,
+CoW planning, and release accounting — plus the check_regression
+comparison engine the CI serving gate runs on. No device work here;
+the device-exactness tests live in test_serving.py."""
+import numpy as np
+import pytest
+
+from repro.kernels.layout import KV_PAGE_ROWS, SUBLANES
+from repro.serving import PagedKVManager, PagePool, PrefixTrie
+from repro.serving.kvpool import validate_page_rows
+
+R = KV_PAGE_ROWS
+
+
+# ---------------------------------------------------------------------------
+# geometry
+
+
+def test_page_rows_come_from_layout():
+    """KV_PAGE_ROWS is owned by kernels/layout.py and must satisfy its own
+    validator: a power-of-two multiple of the sublane tile."""
+    assert validate_page_rows(KV_PAGE_ROWS) == KV_PAGE_ROWS
+    assert KV_PAGE_ROWS % SUBLANES == 0
+    for bad in (0, SUBLANES - 1, SUBLANES * 3, SUBLANES + 1):
+        with pytest.raises(ValueError, match="power-of-two"):
+            validate_page_rows(bad)
+
+
+# ---------------------------------------------------------------------------
+# page pool
+
+
+def test_pool_alloc_free_refcount():
+    pool = PagePool(3)
+    a, b = pool.alloc(), pool.alloc()
+    assert (a, b) == (0, 1)               # deterministic: page 0 first
+    assert pool.in_use == 2 and pool.free_count == 1
+    pool.incref(a)
+    assert pool.refcount(a) == 2 and pool.shared_count() == 1
+    assert not pool.decref(a)             # still referenced
+    assert pool.decref(a)                 # now free again
+    assert pool.free_count == 2
+    c, d = pool.alloc(), pool.alloc()
+    assert c is not None and d is not None
+    assert pool.alloc() is None           # exhausted -> None, not raise
+    assert pool.peak_in_use == 3
+    pool.decref(b)
+    with pytest.raises(AssertionError):
+        pool.decref(b)                    # double free is a bug
+
+
+def test_pool_defer_free_limbo():
+    """defer_free pools park freed pages in limbo until flush(): a
+    snapshot freed this tick may still be read by this tick's block step,
+    so its page must not be reallocated before end_tick."""
+    pool = PagePool(1, defer_free=True)
+    a = pool.alloc()
+    assert pool.decref(a)
+    assert pool.alloc() is None           # in limbo, not allocatable
+    pool.flush()
+    assert pool.alloc() == a
+
+
+# ---------------------------------------------------------------------------
+# prefix trie
+
+
+def _toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return tuple(int(t) for t in rng.integers(3, 250, size=n))
+
+
+def test_trie_match_register_full_and_partial():
+    pool = PagePool(8)
+    trie = PrefixTrie(R)
+    prompt = _toks(2 * R + 3)
+    pages = [pool.alloc() for _ in range(3)]
+    trie.register(prompt, pages, None, pool, tail_rows=3)
+    # the trie increfs what it stores: owner release must not free them
+    assert all(pool.refcount(p) == 2 for p in pages)
+
+    # identical prompt, capped at plen-1: both full pages + a 2-row lcp
+    # of the partial tail
+    m = trie.match(prompt, need_state=False, max_len=len(prompt) - 1)
+    assert m.length == 2 * R + 2
+    assert m.kv_pages == [(pages[0], R), (pages[1], R), (pages[2], 2)]
+
+    # divergence inside page 1: only page 0 shared (full pages are
+    # all-or-nothing boundaries; sub-page runs only match on the tail)
+    div = prompt[:R + 1] + (255,) + prompt[R + 2:]
+    m = trie.match(div, need_state=False, max_len=len(div) - 1)
+    assert m.length == R and m.kv_pages == [(pages[0], R)]
+
+    # need_state: no snapshot registered anywhere -> no match at all
+    m = trie.match(prompt, need_state=True, max_len=len(prompt) - 1)
+    assert m.length == 0 and m.state_page is None
+
+
+def test_trie_state_requires_exact_boundary():
+    """A snapshot is valid only at exactly its capture length: sharers
+    must extend the whole registered prompt, and a partial entry matches
+    in full or not at all."""
+    kv_pool, st_pool = PagePool(4), PagePool(2, defer_free=True)
+    trie = PrefixTrie(R)
+    prompt = _toks(R + 5)
+    pages = [kv_pool.alloc(), kv_pool.alloc()]
+    sp = st_pool.alloc()
+    trie.register(prompt, pages, sp, kv_pool, tail_rows=5)
+    assert trie.has_state_at(prompt)
+
+    # extension of the whole prompt: state boundary at plen
+    ext = prompt + _toks(4, seed=9)
+    m = trie.match(ext, need_state=True, max_len=len(ext) - 1)
+    assert m.length == len(prompt) and m.state_page == sp
+
+    # diverging inside the partial tail: no full-entry match -> nothing
+    div = prompt[:-1] + (255, 7)
+    m = trie.match(div, need_state=True, max_len=len(div) - 1)
+    assert m.length == 0
+    # ... though attention-only matching still shares the lcp
+    m = trie.match(div, need_state=False, max_len=len(div) - 1)
+    assert m.length == R + 4
+
+
+def test_trie_register_first_writer_wins():
+    pool = PagePool(8)
+    trie = PrefixTrie(R)
+    prompt = _toks(R)
+    a = pool.alloc()
+    trie.register(prompt, [a], None, pool, tail_rows=R)
+    b = pool.alloc()
+    newly, _ = trie.register(prompt, [b], None, pool, tail_rows=R)
+    assert newly == 0                     # duplicate: b not referenced
+    assert pool.refcount(a) == 2 and pool.refcount(b) == 1
+    m = trie.match(prompt + (9,), need_state=False, max_len=R)
+    assert m.kv_pages == [(a, R)]
+
+
+def test_trie_evict_lru_respects_protection():
+    pool = PagePool(4)
+    trie = PrefixTrie(R)
+    old, new = _toks(R, seed=1), _toks(R, seed=2)
+    p_old, p_new = pool.alloc(), pool.alloc()
+    trie.register(old, [p_old], None, pool, tail_rows=R)
+    trie.register(new, [p_new], None, pool, tail_rows=R)
+    pool.decref(p_old), pool.decref(p_new)    # owners released
+    # protect the LRU entry: eviction must take the newer one instead
+    ent = trie.root.children[old]
+    freed, _ = trie.evict(pool, PagePool(1), need_kv=1,
+                          protect={id(ent)})
+    assert freed == 1
+    assert old in trie.root.children          # protected entry survives
+    assert new not in trie.root.children
+
+
+def test_trie_evict_does_not_free_live_pages():
+    """Eviction drops the trie entry but a page a live slot still maps
+    is merely un-shared, never returned to the free list."""
+    pool = PagePool(2)
+    trie = PrefixTrie(R)
+    p = pool.alloc()
+    trie.register(_toks(R), [p], None, pool, tail_rows=R)   # trie: rc 2
+    freed, _ = trie.evict(pool, PagePool(1), need_kv=1)
+    assert freed == 0 and trie.n_entries == 0
+    assert pool.refcount(p) == 1              # the "slot" still owns it
+
+
+# ---------------------------------------------------------------------------
+# manager
+
+
+def _mgr(pool_pages=8, maxpages=4, slots=2, **kw):
+    return PagedKVManager(slots=slots, page_rows=R, maxpages=maxpages,
+                          pool_pages=pool_pages, family="dense", **kw)
+
+
+def test_manager_admit_reserves_and_allocates_lazily():
+    mgr = _mgr()
+    start = mgr.admit(0, _toks(R + 2), budget=4, uid=7)
+    assert start == 0                     # empty trie: nothing shared
+    assert mgr.kv.in_use == 0             # allocation is lazy
+    assert mgr._outstanding == 2          # ceil((R+2+4)/R) pages reserved
+    plan = mgr.plan_tick({0: R})          # first prefill chunk
+    assert mgr.kv.in_use == 1 and mgr._outstanding == 1
+    assert plan["tables"].shape == (2, 4)
+    assert (plan["kv_copy"] == np.arange(8)).all()   # no CoW yet
+    mgr.advance(0, R)
+    mgr.plan_tick({0: 2})
+    assert mgr.kv.in_use == 2 and mgr._outstanding == 0
+    mgr.advance(0, 2)
+    mgr.release(0)
+    assert mgr.kv.in_use == 0 and mgr._outstanding == 0
+
+
+def test_manager_defers_when_pool_cannot_cover():
+    mgr = _mgr(pool_pages=3, maxpages=4)
+    assert mgr.admit(0, _toks(R), budget=2 * R) is not None   # 3 pages
+    assert mgr.admit(1, _toks(R, seed=5), budget=0) is None   # deferred
+    assert mgr.stats()["defers"] == 1
+    # the freed reservation makes the retry succeed
+    mgr.release(0)
+    assert mgr.admit(1, _toks(R, seed=5), budget=0) is not None
+
+
+def test_manager_eviction_recycles_trie_pages():
+    """Pages held only by the trie are evicted to cover a new admission;
+    pages a live slot maps survive eviction."""
+    mgr = _mgr(pool_pages=2, maxpages=2, slots=1)
+    prompt = _toks(R)
+    mgr.admit(0, prompt, budget=0)
+    mgr.plan_tick({0: R})
+    mgr.advance(0, R)
+    mgr.mark_prefilled(0)                 # full page registered in trie
+    mgr.release(0)
+    assert mgr.kv.in_use == 1             # trie keeps the prompt page
+    # a different prompt needing 2 pages: must evict the trie entry
+    assert mgr.admit(0, _toks(R, seed=4), budget=R) is not None
+    assert mgr.stats()["evictions"] == 1
+    assert mgr.trie.n_entries == 0
+
+
+def test_manager_shared_prefix_and_cow():
+    """Sharer maps registered pages without new allocations; its first
+    write into the shared partial-tail page triggers CoW with a
+    device-copy entry, and the trie's original page stays intact."""
+    mgr = _mgr(pool_pages=6, maxpages=4)
+    prompt = _toks(R + 2)                 # full page + 2-row tail
+    mgr.admit(0, prompt, budget=0, uid=0)
+    mgr.plan_tick({0: R + 2})
+    p0, p1 = int(mgr.tables[0, 0]), int(mgr.tables[0, 1])
+    mgr.advance(0, R + 2)
+    mgr.mark_prefilled(0)                 # registers page + partial tail
+    mgr.release(0)
+    assert mgr.kv.refcount(p0) == 1 and mgr.kv.refcount(p1) == 1
+
+    # sharer extends the registered prompt: full page + 2-row tail map
+    sharer = prompt + _toks(3, seed=8)
+    start = mgr.admit(1, sharer, budget=2, uid=1)
+    assert start == R + 2
+    assert int(mgr.tables[1, 0]) == p0 and int(mgr.tables[1, 1]) == p1
+    assert mgr.kv.refcount(p0) == 2       # trie + sharer
+    assert mgr.stats()["shared_tokens"] == R + 2
+
+    # the sharer's remaining prompt rows land in the tail page: CoW
+    plan = mgr.plan_tick({1: len(sharer) - start})
+    new = int(mgr.tables[1, 1])
+    assert new != p1
+    assert plan["kv_copy"][new] == p1     # device copies old -> new
+    assert mgr.kv.refcount(p1) == 1       # trie keeps the original
+    assert mgr.stats()["cow_copies"] == 1
+    assert int(mgr.tables[1, 0]) == p0    # untouched page still shared
+    mgr.release(1)
+    assert mgr.kv.refcount(p0) == 1       # trie only — alive for reuse
+
+
+def test_manager_exhaustion_raises_only_without_reservation():
+    """The RuntimeError path is a genuine invariant breach (allocating
+    past every reservation), not reachable through admit's deferral."""
+    mgr = _mgr(pool_pages=1, maxpages=4, slots=1)
+    rec_prompt = _toks(2)
+    assert mgr.admit(0, rec_prompt, budget=1) is not None
+    mgr.plan_tick({0: 2})
+    # forge an out-of-contract allocation: no pages left, empty trie
+    rec = mgr._recs[0]
+    with pytest.raises(RuntimeError, match="pool_pages"):
+        mgr._alloc_kv(rec, 0, "new")
+
+
+def test_manager_wrap_reuses_table_entries():
+    """Generation past maxpages*R ring-recycles the block table in place
+    (sole owner): no extra pages, pos keeps counting."""
+    mgr = _mgr(pool_pages=4, maxpages=2, slots=1)
+    mgr.admit(0, _toks(4), budget=4 * R)  # wraps: reservation = maxpages
+    assert mgr._outstanding == 2
+    pos = 0
+    for take in (4,) + (R,) * 3:
+        mgr.plan_tick({0: take})
+        mgr.advance(0, take)
+        pos += take
+    assert mgr.kv.in_use == 2             # table is full, recycled in place
+    assert mgr._recs[0].pos == pos
+
+
+# ---------------------------------------------------------------------------
+# check_regression (the CI gate's comparison engine)
+
+
+def test_check_regression_compare_and_exit_codes(tmp_path, capsys):
+    import json
+    import sys
+
+    sys.path.insert(0, "benchmarks")
+    try:
+        from check_regression import compare, load_rows, main, row_key
+    finally:
+        sys.path.pop(0)
+
+    base_rows = [
+        {"scheduler": "continuous", "workload": "mixed",
+         "cache_kind": "ring", "offered_load": 8.0,
+         "throughput_tok_s": 100.0, "p99_ms": 50.0},
+        {"scheduler": "wave", "workload": "mixed", "cache_kind": "ring",
+         "offered_load": 8.0, "throughput_tok_s": 40.0, "p99_ms": 900.0},
+    ]
+    good = [dict(base_rows[0], throughput_tok_s=95.0, p99_ms=55.0),
+            dict(base_rows[1])]
+    bad = [dict(base_rows[0], throughput_tok_s=40.0),   # collapse
+           dict(base_rows[1], p99_ms=3000.0)]
+
+    b = {row_key(r): r for r in base_rows}
+    regs, imps, missing, added = compare(
+        b, {row_key(r): r for r in good}, tol=0.25)
+    assert not regs and not missing and not added
+    regs, _, _, _ = compare(b, {row_key(r): r for r in bad}, tol=0.25)
+    assert {(m, bv) for _, m, bv, _, _ in regs} == {
+        ("throughput_tok_s", 100.0), ("p99_ms", 900.0)}
+
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps({"rows": base_rows}))
+    good_p = tmp_path / "good.json"
+    good_p.write_text(json.dumps({"rows": good}))
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps({"rows": bad}))
+    assert main([str(base_p), str(good_p), "--tol", "0.25"]) == 0
+    assert main([str(base_p), str(bad_p), "--tol", "0.25"]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out
+
+    # a vanished row only fails under --require-keys
+    short_p = tmp_path / "short.json"
+    short_p.write_text(json.dumps({"rows": good[:1]}))
+    assert main([str(base_p), str(short_p), "--tol", "0.25"]) == 0
+    assert main([str(base_p), str(short_p), "--tol", "0.25",
+                 "--require-keys"]) == 1
+    # duplicate keys are a hard error (silent last-wins would mask rows)
+    dup_p = tmp_path / "dup.json"
+    dup_p.write_text(json.dumps({"rows": [base_rows[0], base_rows[0]]}))
+    with pytest.raises(SystemExit, match="duplicate"):
+        load_rows(str(dup_p))

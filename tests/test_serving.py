@@ -380,3 +380,140 @@ def test_open_loop_arrivals_respected():
     assert r1.first_token_s is not None and r1.first_token_s >= 0.15
     assert len(r1.token_s) == len(r1.tokens)
     assert r1.finish_s >= r1.first_token_s
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (serving/kvpool.py)
+
+
+def _run_tokens(bundle, params, reqs, **cfg_kw):
+    eng = ServingEngine(bundle, params, ServeConfig(**cfg_kw))
+    return {r.uid: r.tokens for r in eng.run(reqs)}, eng
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-1.3b",
+                                  "zamba2-2.7b"])
+def test_paged_matches_ring_token_for_token(arch):
+    """cache_kind='paged' is a memory-layout change, not a model change:
+    greedy tokens must match the ring cache exactly across all three
+    cache families (attention / SSM / hybrid), with chunked prefill and
+    more requests than slots so slots recycle."""
+    mod = configs.get(arch)
+    bundle = build(mod.SMOKE)
+    params = init_params(jax.random.PRNGKey(0), bundle.params_pspec,
+                         mod.SMOKE.dtype)
+    rng = np.random.default_rng(3)
+    reqs = lambda: [Request(uid=i, prompt=rng.integers(
+        3, 256, size=plen, dtype=np.int32), max_new=5)
+        for i, plen in enumerate((5, 19, 11, 26, 8, 14))]
+    rng = np.random.default_rng(3)
+    ring, _ = _run_tokens(bundle, params, reqs(), slots=3, max_new=5,
+                          eos_token=-1, scheduler="continuous",
+                          prefill_chunk=6, cache_kind="ring")
+    rng = np.random.default_rng(3)
+    paged, eng = _run_tokens(bundle, params, reqs(), slots=3, max_new=5,
+                             eos_token=-1, scheduler="continuous",
+                             prefill_chunk=6, cache_kind="paged")
+    assert paged == ring
+    kv = eng.kv_stats()
+    assert kv is not None
+    if arch != "mamba2-1.3b":             # pure-SSM: no KV pages at all
+        assert kv["allocs"] > 0
+
+
+def test_paged_wrap_beyond_capacity_matches_ring():
+    """Sliding-window wrap: for capacity S the paged gather row
+    ``((p // R) % MP) * R + p % R`` equals ``p % S`` — bit-identical to
+    the ring, including the overwrite order. The admission overflow
+    warns once (satellite: no more silent degrade) and traces after."""
+    bundle, params = _llama_bundle_params()
+    req = lambda: [Request(uid=0, prompt=np.arange(5, 17, dtype=np.int32))]
+    out = {}
+    for kind in ("ring", "paged"):
+        with pytest.warns(UserWarning, match="sliding-window"):
+            out[kind], eng = _run_tokens(
+                bundle, params, req(), slots=1, max_new=24, eos_token=-1,
+                scheduler="continuous", prefill_chunk=8, max_context=16,
+                cache_kind=kind)
+        assert [e for e in eng.trace if e["event"] == "swa_degrade"]
+    assert len(out["paged"][0]) == 24
+    assert out["paged"] == out["ring"]
+
+
+def test_paged_shared_prefix_shares_pages_and_matches_ring():
+    """The tentpole's acceptance bar: a shared-prefix workload under the
+    paged cache (a) produces exactly the ring cache's tokens, (b) maps
+    prompt pages shared (shared_tokens > 0, CoW on divergence), and (c)
+    peaks at strictly fewer physical pages than n_req full contexts."""
+    bundle, params = _llama_bundle_params()
+    from repro.kernels.layout import KV_PAGE_ROWS
+
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(3, 256, size=40, dtype=np.int32)
+    reqs = lambda: [Request(uid=i, prompt=np.concatenate(
+        [prefix, rng.integers(3, 256, size=4, dtype=np.int32)]).astype(
+            np.int32), max_new=4) for i in range(6)]
+    rng = np.random.default_rng(5)
+    ring, _ = _run_tokens(bundle, params, reqs(), slots=2, max_new=4,
+                          eos_token=-1, scheduler="continuous",
+                          prefill_chunk=8, max_context=64,
+                          cache_kind="ring")
+    rng = np.random.default_rng(5)
+    paged, eng = _run_tokens(bundle, params, reqs(), slots=2, max_new=4,
+                             eos_token=-1, scheduler="continuous",
+                             prefill_chunk=8, max_context=64,
+                             cache_kind="paged")
+    assert paged == ring
+    kv = eng.kv_stats()
+    assert kv["shared_tokens"] > 0        # later waves mapped the prefix
+    assert kv["cow_copies"] > 0           # divergent tails CoW'd
+    full_ctx_pages = 6 * (eng._capacity // KV_PAGE_ROWS)
+    assert kv["peak_pages_in_use"] < full_ctx_pages, (
+        kv["peak_pages_in_use"], full_ctx_pages)
+
+
+def test_paged_pool_exhaustion_defers_then_completes():
+    """A pool too small for every queued request at once back-pressures:
+    admissions defer until releases free pages, every request still
+    completes, and the tokens still match the ring cache."""
+    bundle, params = _llama_bundle_params()
+    rng = np.random.default_rng(7)
+    reqs = lambda: [Request(uid=i, prompt=rng.integers(
+        3, 256, size=18, dtype=np.int32), max_new=4) for i in range(4)]
+    rng = np.random.default_rng(7)
+    ring, _ = _run_tokens(bundle, params, reqs(), slots=2, max_new=4,
+                          eos_token=-1, scheduler="continuous",
+                          prefill_chunk=8, cache_kind="ring")
+    # 18 + 4 tokens -> 2 pages per request; 3 pages covers one slot plus
+    # nothing to spare, so the second slot's admission must defer
+    rng = np.random.default_rng(7)
+    paged, eng = _run_tokens(bundle, params, reqs(), slots=2, max_new=4,
+                             eos_token=-1, scheduler="continuous",
+                             prefill_chunk=8, cache_kind="paged",
+                             pool_pages=3, prefix_sharing=False)
+    assert paged == ring
+    assert len(paged) == 4                # nothing dropped
+    assert eng.kv_stats()["defers"] > 0
+
+
+def test_paged_pool_too_small_raises():
+    """When even an empty engine cannot reserve one request's worst case,
+    deferral would livelock — the engine raises with the knob to turn."""
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=1, max_new=8, eos_token=-1, scheduler="continuous",
+        cache_kind="paged", pool_pages=1))
+    with pytest.raises(RuntimeError, match="pool_pages"):
+        eng.run([Request(uid=0, prompt=np.arange(
+            5, 45, dtype=np.int32))])
+
+
+def test_paged_page_rows_validated():
+    bundle, params = _llama_bundle_params()
+    eng = ServingEngine(bundle, params, ServeConfig(
+        slots=1, max_new=2, eos_token=-1, scheduler="continuous",
+        cache_kind="paged", page_rows=12))
+    with pytest.raises(ValueError, match="power-of-two"):
+        eng.run([Request(uid=0, prompt=np.arange(5, 10, dtype=np.int32))])
+    with pytest.raises(ValueError, match="cache_kind"):
+        ServeConfig(slots=1, max_new=2, cache_kind="flat")
