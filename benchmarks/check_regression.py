@@ -10,8 +10,10 @@ reported but are not failures (benchmarks grow contenders), unless
 ``--require-keys`` is set.
 
 This is the ROADMAP perf-trajectory gate's comparison engine: CI runs the
-serving bench and diffs it against the checked-in ``BENCH_serving.json``.
-CPU-container timings are noisy, so the CI leg passes a generous
+serving bench and diffs it against the checked-in ``BENCH_serving.json``,
+and the segmented-scan kernel bench against the checked-in
+``BENCH_segmented_scan.json`` (keyed by contender row + segment size).
+CPU-container timings are noisy, so the CI legs pass a generous
 tolerance — the gate's job until real-hardware rows land is catching
 collapses (a scheduler stall, an accidental recompile per tick), not
 single-digit-percent drift.
@@ -27,16 +29,18 @@ import json
 import sys
 
 # identity fields, in display order (a row is keyed by those it carries)
-KEY_FIELDS = ("bench", "scheduler", "contender", "name", "workload",
+KEY_FIELDS = ("bench", "scheduler", "contender", "name", "algo", "workload",
               "cache_kind", "policy", "offered_load", "op", "backend",
-              "band", "dtype", "shape", "n", "mesh", "process_count")
+              "band", "dtype", "shape", "n", "segment_size", "n_segments",
+              "seq_len", "mesh", "process_count")
 
 # metric direction: regression = lower for these ...
 HIGHER_BETTER = ("throughput_tok_s", "achieved_gbps", "pct_peak",
-                 "gflops", "tokens_per_s")
+                 "gflops", "tokens_per_s", "belems_s", "ktok_s")
 # ... and higher for these
 LOWER_BETTER = ("p50_ms", "p99_ms", "p25_ms", "p75_ms", "iqr_ms",
-                "median_us", "mean_us", "makespan_s", "peak_pages_in_use")
+                "median_us", "mean_us", "makespan_s", "peak_pages_in_use",
+                "us_per_call", "iqr_us", "ms_per_call")
 
 
 def row_key(row: dict) -> tuple:

@@ -89,6 +89,18 @@ def select_paths(labels: dict[str, str]) -> dict[str, str]:
             print(f"# skip {name}: path={path!r} downgrades to the Pallas "
                   "interpreter here (no native lowering)")
             continue
+        if resolved == "tile_logdepth":
+            # the label survives resolution even off-accelerator (only its
+            # local block kernels drop to the interpreter), so the
+            # downgrade is detected by re-probing under the strict policy
+            try:
+                dataclasses.replace(
+                    probe, interpret_fallback="error").resolve(explicit=path)
+            except RuntimeError:
+                print(f"# skip {name}: path={path!r} runs its local block "
+                      "kernels through the Pallas interpreter here (no "
+                      "native lowering)")
+                continue
         out[name] = path
     return out
 
@@ -119,7 +131,8 @@ def tuning_label(path: str, op: str, n: int | None = None,
                                  explicit=None if path == "auto" else path)
     except (RuntimeError, ValueError):
         return "-"
-    if resolved not in ("tile_tpu", "tile_gpu", "interpret"):
+    if resolved not in ("tile_tpu", "tile_gpu", "tile_logdepth",
+                        "interpret"):
         return "-"
     spec = resolved.tuning
     return spec.label() if spec is not None else "-"

@@ -2,8 +2,9 @@
 
 Contenders (one switch, repro.core.dispatch): the matmul-form scan
 (path="fused") vs XLA's native ``jnp.cumsum`` (path="baseline", the Thrust
-stand-in) vs the explicit Pallas kernel (path="tile" — TPU or Triton,
-skipped where no native lowering exists). Fixed 2^22-element input.
+stand-in) vs the explicit Pallas kernel (path="tile") vs the log-depth
+MatMulScan kernel (path="tile_logdepth") — the Pallas rows are skipped
+where no native lowering exists. Fixed 2^22-element input.
 
 Scan reads and writes every element, so the minimal-traffic roofline model
 is 2x the input bytes; each row carries the median/IQR over ``iters``
@@ -24,6 +25,7 @@ CONTENDERS = {
     "tcu_scan": "fused",
     "baseline_cumsum": "baseline",
     "tile_kernel": "tile",
+    "logdepth_kernel": "tile_logdepth",
 }
 
 

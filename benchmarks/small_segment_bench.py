@@ -30,6 +30,7 @@ CONTENDERS = {
     "base_scan": ("scan", "baseline"),
     "auto_scan": ("scan", "auto"),
     "tile_scan": ("scan", "tile"),
+    "logdepth_scan": ("scan", "tile_logdepth"),
 }
 
 

@@ -20,6 +20,7 @@ CONTENDERS = {
     "ssd_chunked_matmul": "fused",
     "ssd_sequential": "baseline",
     "ssd_tile_kernel": "tile",   # Pallas kernel (TPU/Triton); skipped off-accelerator
+    "ssd_logdepth_kernel": "tile_logdepth",  # log-depth MatMulScan glue
 }
 
 

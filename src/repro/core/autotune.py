@@ -167,7 +167,7 @@ def invalidate_cache() -> None:
 def _valid_paths() -> tuple[str, ...]:
     # dispatch-level paths minus "auto" (a table must be fully resolved)
     return ("fused", "xla_tile", "tile", "tile_tpu", "tile_gpu",
-            "interpret", "baseline")
+            "tile_logdepth", "interpret", "baseline")
 
 
 def _check_entries(entries: Any, where: str) -> None:
@@ -411,7 +411,7 @@ def heuristic(op: str, n: int, dtype: Any = None,
 # "xla_tile") live in repro.core and have no kernel-registry twin.
 _KERNEL_EQUIV = {"baseline": "fused", "tile": "tile",
                  "tile_tpu": "tile_tpu", "tile_gpu": "tile_gpu",
-                 "interpret": "interpret"}
+                 "tile_logdepth": "tile_logdepth", "interpret": "interpret"}
 
 
 def _backend_compatible(path: str) -> bool:
@@ -549,12 +549,18 @@ def measure_table(
     policy (``op_tuning={op: spec}``, autotune off); the best one becomes
     the recorded ``tile`` timing and the entry persists it as
     ``"tuning"`` (plus the full per-spec timings as ``"sweep"``).
-    ``sweep_interpret=True`` runs the same sweep through the Pallas
-    interpreter on hosts with no native lowering — validation-speed, for
-    the CI tiny-sweep smoke leg only. Merge the result into a
-    multi-backend file with :func:`merge_tables` (what ``--write`` does) —
-    measuring on a GPU host adds/refreshes the ``gpu`` section without
-    touching the others.
+    For the ops with a log-depth MatMulScan contender (``scan``,
+    ``weighted_scan``) the same sweep also times ``tile_logdepth`` across
+    ``layout.logdepth_candidate_tuning`` — its per-spec timings land in
+    the entry's ``"sweep"`` under ``tile_logdepth:``-prefixed keys (the
+    linear tile keys stay unprefixed, so existing tables keep their
+    meaning) and the faster tile-family contender's spec is the one
+    persisted as ``"tuning"``. ``sweep_interpret=True`` runs the same
+    sweeps through the Pallas interpreter on hosts with no native
+    lowering — validation-speed, for the CI tiny-sweep smoke leg only.
+    Merge the result into a multi-backend file with :func:`merge_tables`
+    (what ``--write`` does) — measuring on a GPU host adds/refreshes the
+    ``gpu`` section without touching the others.
     """
     from repro.core import dispatch  # deferred: dispatch imports us
     from repro.kernels import layout
@@ -569,15 +575,23 @@ def measure_table(
     native = backend.native_tile_backend()
     tile_path = "tile" if native else \
         ("interpret" if sweep_interpret else None)
+    # tile_logdepth keeps its label on every host (interpreted off-
+    # accelerator); it is swept only where the linear tile contender is
+    # (native host, or the CI interpret smoke) so a plain-CPU --write
+    # leaves the checked-in default table's contents unchanged
+    ld_path = "tile_logdepth" if (native or sweep_interpret) else None
     axis = "gpu" if native == "tile_gpu" else "tpu"
     entries: dict[str, dict] = {}
     rng = jax.random.PRNGKey(0)
     for op in ops:
         contenders = OP_CONTENDERS[op]
         specs = layout.candidate_tuning(axis, op) if sweep else []
+        ld_specs = layout.logdepth_candidate_tuning(axis, op) if sweep else []
         if max_candidates is not None:
             specs = specs[:max_candidates]
+            ld_specs = ld_specs[:max_candidates]
         sweep_op = bool(specs) and tile_path is not None
+        sweep_ld = bool(ld_specs) and ld_path is not None
         for dtype in dtypes:
             for b in bands:
                 n = 1 << b
@@ -596,6 +610,7 @@ def measure_table(
                     return _time_fn(fn, *args, iters=iters)
 
                 timings = {path: timed(path) for path in contenders}
+                rows = args[0].shape[0] if args[0].ndim > 1 else None
                 best_spec = sweep_us = None
                 if native and tile_path and not sweep_op and \
                         op in ("reduce", "scan", "weighted_scan"):
@@ -612,7 +627,6 @@ def measure_table(
                     # axis only — row-axis knobs reflect the probe input's
                     # row count, which real calls in this bucket won't
                     # share (their glue re-clamps per call).
-                    rows = args[0].shape[0] if args[0].ndim > 1 else None
                     fitted: list[tuple[dict, dict]] = []
                     for spec in specs:
                         ex = layout.clamp_spec(axis, op, spec, n=n,
@@ -634,6 +648,40 @@ def measure_table(
                     best = min(sweep_us, key=sweep_us.get)
                     best_spec = persist[best]
                     timings[tile_path] = sweep_us[best]
+                if sweep_ld:
+                    # the log-depth contender rides the same clamp/dedupe
+                    # discipline; its sweep keys carry a "tile_logdepth:"
+                    # prefix so they never collide with the linear tile
+                    # labels in the entry's "sweep" record
+                    fitted_ld: list[tuple[dict, dict]] = []
+                    for spec in ld_specs:
+                        ex = layout.clamp_spec(axis, op, spec, n=n,
+                                               rows=rows)
+                        if all(ex != e for e, _ in fitted_ld):
+                            fitted_ld.append(
+                                (ex, layout.clamp_spec(axis, op, spec,
+                                                       n=n)))
+                    ld_us = {}
+                    ld_persist = {}
+                    for ex, keep in fitted_ld:
+                        pol = kpolicy.KernelPolicy(
+                            path=ld_path, autotune="off",
+                            op_tuning={op: ex},
+                            interpret_fallback="silent")
+                        label = ("tile_logdepth:"
+                                 + kpolicy.TuneSpec(op, ex).label())
+                        ld_us[label] = timed(pol)
+                        ld_persist[label] = keep
+                    ld_best = min(ld_us, key=ld_us.get)
+                    timings[ld_path] = ld_us[ld_best]
+                    sweep_us = dict(sweep_us or {}, **ld_us)
+                    # persist the spec of the faster tile-family
+                    # contender — that is the one tuning_for will feed
+                    # whichever label the bucket resolves onto
+                    linear_us = (timings.get(tile_path, math.inf)
+                                 if tile_path else math.inf)
+                    if best_spec is None or ld_us[ld_best] < linear_us:
+                        best_spec = ld_persist[ld_best]
                 winner = min(timings, key=timings.get)
                 ent = {
                     "path": winner,

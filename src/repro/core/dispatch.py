@@ -12,6 +12,10 @@ comparison from a single ``path=`` argument instead of ad-hoc imports:
                  (Pallas-TPU on TPU, Pallas-Triton on GPU)
   ``tile_tpu``   force the Pallas-TPU kernel (raises off-TPU)
   ``tile_gpu``   force the Pallas-Triton kernel (raises off-GPU)
+  ``tile_logdepth``  log-depth MatMulScan contender (scan/weighted_scan/
+                 ssd only): carry-free local block kernels + an O(log)
+                 tree combine of batched MMAs — the linear-vs-log-depth
+                 crossover is swept into the v3 autotune tables
   ``interpret``  Pallas kernel body through the interpreter (CPU validation)
   ``baseline``   XLA's native vector op (jnp.sum / jnp.cumsum / segment_sum
                  / sequential scan)
@@ -55,21 +59,6 @@ def _resolve(op: str, n: int | None, dtype, policy, path: str | None) -> str:
     """Per-op entry into the policy resolver (dispatch level)."""
     return kpolicy.as_policy(policy).resolve(op=op, n=n, dtype=dtype,
                                              explicit=path)
-
-
-def resolve_path(path: str | None = None, *, op: str | None = None,
-                 n: int | None = None, dtype=None) -> str:
-    """Deprecated: delegate to the active :class:`~repro.core.policy.
-    KernelPolicy` (dispatch level — admits ``xla_tile``/``baseline``).
-    New code resolves via ``repro.core.policy.get_policy().resolve(...)``
-    or passes ``policy=`` to the ops."""
-    kpolicy.warn_once(
-        "deprecated:dispatch.resolve_path",
-        "repro.core.dispatch.resolve_path is deprecated; resolution lives "
-        "on repro.core.policy.KernelPolicy.resolve (pass policy= to the "
-        "ops, or call get_policy().resolve(...))")
-    return kpolicy.get_policy().resolve(op=op, n=n, dtype=dtype,
-                                        explicit=path)
 
 
 def reduce(x: jax.Array, *, policy=None, path: str | None = None

@@ -19,10 +19,9 @@ re-read at call sites. This module replaces all of that with one object:
   GPU ``num_warps``/``num_stages``) as data instead of constants, each
   knob validated against :data:`KNOB_SCHEMA` the way ``op_paths``
   validates against :data:`KNOWN_OPS`.
-* :meth:`KernelPolicy.resolve` — THE resolution algorithm. Both legacy
-  entry points (``dispatch.resolve_path``, ``backend.resolve_path``)
-  delegate here with a one-time deprecation warning; nothing else in the
-  repo decides which formulation runs. It returns a :class:`ResolvedPath`
+* :meth:`KernelPolicy.resolve` — THE resolution algorithm; nothing else
+  in the repo decides which formulation runs (the pre-policy
+  ``resolve_path`` delegates are gone). It returns a :class:`ResolvedPath`
   — a plain ``str`` path label that also carries the resolved
   :class:`TuneSpec` (defaults from ``repro.kernels.layout``, overlaid by
   the autotune table's swept winner, overlaid by ``op_tuning``), so every
@@ -67,10 +66,13 @@ ENV_TABLE = "REPRO_AUTOTUNE_TABLE"     # explicit autotune table file
 # Path labels by level. "dispatch" admits the algorithm-level contenders
 # the paper compares (xla_tile, baseline); "kernel" is the
 # implementation-level subset the Pallas registry understands.
+# "tile_logdepth" is the log-depth MatMulScan contender (scan-family only):
+# backend-agnostic like "tile" — it runs the host's native local kernels
+# plus an XLA tree combine, or the interpreter off-accelerator.
 DISPATCH_PATHS = ("auto", "fused", "xla_tile", "tile", "tile_tpu",
-                  "tile_gpu", "interpret", "baseline")
+                  "tile_gpu", "tile_logdepth", "interpret", "baseline")
 KERNEL_PATHS = ("auto", "fused", "tile", "tile_tpu", "tile_gpu",
-                "interpret")
+                "tile_logdepth", "interpret")
 _DISPATCH_ONLY = ("xla_tile", "baseline")
 
 BACKENDS = ("cpu", "gpu", "tpu")
@@ -97,13 +99,14 @@ OP_ALIASES = {"segmented_reduce": "reduce", "segmented_scan": "scan",
 # override string can serve both backends.
 KNOB_SCHEMA = {
     "reduce": ("block_s", "block_n", "num_warps", "num_stages"),
-    "scan": ("block_s", "block_n", "num_warps", "num_stages"),
-    "weighted_scan": ("q", "num_warps", "num_stages"),
+    "scan": ("block_s", "block_n", "radix", "fan_in",
+             "num_warps", "num_stages"),
+    "weighted_scan": ("q", "radix", "fan_in", "num_warps", "num_stages"),
     "ragged_reduce": (),     # no Pallas kernel yet (XLA matmul form)
     "ragged_scan": (),
     "rmsnorm": ("row_block", "block_d", "num_warps", "num_stages"),
     "attention": ("block_q", "block_k", "num_warps", "num_stages"),
-    "ssd": ("q", "num_warps", "num_stages"),
+    "ssd": ("q", "radix", "fan_in", "num_warps", "num_stages"),
 }
 
 
@@ -141,6 +144,28 @@ def _warn_tile_downgrade() -> None:
         f"{jax.default_backend()!r} backend (tile_tpu needs a TPU, tile_gpu "
         "a GPU with Pallas-Triton); running the kernel body through the "
         "Pallas interpreter instead. Pass path='interpret' explicitly to "
+        "silence this one-time warning.",
+        UserWarning, stacklevel=5)
+
+
+_LOGDEPTH_DOWNGRADE_WARNED = False
+
+
+def _warn_logdepth_downgrade() -> None:
+    """One-time notice that ``tile_logdepth``'s local kernels will run
+    through the interpreter (the label is kept — the log-depth algorithm
+    still runs, only its Pallas block passes are interpreted)."""
+    global _LOGDEPTH_DOWNGRADE_WARNED
+    if _LOGDEPTH_DOWNGRADE_WARNED:
+        return
+    _LOGDEPTH_DOWNGRADE_WARNED = True
+    import jax
+
+    warnings.warn(
+        f"path='tile_logdepth' has no native Pallas lowering on the "
+        f"{jax.default_backend()!r} backend; the log-depth tree combine "
+        "still runs as XLA matmuls but the local block kernels go through "
+        "the Pallas interpreter. Set interpret_fallback='silent' to "
         "silence this one-time warning.",
         UserWarning, stacklevel=5)
 
@@ -483,7 +508,16 @@ class KernelPolicy:
             return TuneSpec(op)
         from repro.kernels import layout  # deferred: avoids a cycle
 
-        bk = "gpu" if label == "tile_gpu" else "tpu"
+        if label == "tile_gpu":
+            bk = "gpu"
+        elif label == "tile_logdepth":
+            # backend-agnostic label: read the defaults of whichever
+            # backend's local kernels will actually run
+            from repro.kernels import backend as kb
+
+            bk = "gpu" if kb.native_tile_backend() == "tile_gpu" else "tpu"
+        else:
+            bk = "tpu"
         knobs = layout.default_tuning(bk, op)
         if n is not None and self.autotune != "off":
             from repro.core import autotune  # deferred: imports us
@@ -504,9 +538,9 @@ class KernelPolicy:
                 explicit: str | None = None) -> "ResolvedPath":
         """Resolve one call to a concrete execution path.
 
-        This is the repo's ONLY resolution algorithm; the legacy
-        ``dispatch.resolve_path`` / ``backend.resolve_path`` entry points
-        delegate here.
+        This is the repo's ONLY resolution algorithm (grep-guarded; the
+        pre-policy ``resolve_path`` delegates were removed once every
+        caller migrated).
 
         ``op``/``n``/``dtype`` describe the call shape: with them,
         ``auto`` consults the measured per-shape crossover table
@@ -609,7 +643,7 @@ class KernelPolicy:
                     choice = autotune.choose(
                         op, n, dtype,
                         candidates=("fused", "tile", "tile_tpu", "tile_gpu",
-                                    "interpret"),
+                                    "tile_logdepth", "interpret"),
                         level="kernel", policy=self,
                         use_heuristic=(canon
                                        not in autotune.FUSED_DEFAULT_OPS))
@@ -642,6 +676,23 @@ class KernelPolicy:
                 return "interpret"   # nothing to compile the tile kernel for
             else:
                 return native
+        if label == "tile_logdepth":
+            # backend-agnostic like "tile", but the label survives: the
+            # log-depth algorithm still runs off-accelerator — only its
+            # local Pallas block passes drop to the interpreter (decided
+            # by the registry via native_tile_backend()).
+            if native is None and self.backend != "cpu":
+                if self.interpret_fallback == "error":
+                    import jax
+
+                    raise RuntimeError(
+                        "path='tile_logdepth' has no native Pallas lowering "
+                        f"on the {jax.default_backend()!r} backend and this "
+                        "policy's interpret_fallback='error' forbids the "
+                        "interpreter downgrade of its local block kernels")
+                if self.interpret_fallback == "warn":
+                    _warn_logdepth_downgrade()
+            return label
         if label == "tile_tpu" and native != "tile_tpu":
             import jax
 
@@ -679,12 +730,19 @@ def default_policy() -> KernelPolicy:
     raw = (os.environ.get(ENV_PATH, ""), os.environ.get(ENV_AUTOTUNE, ""),
            os.environ.get(ENV_TABLE, ""))
     if raw not in _DEFAULT_CACHE:
-        path = raw[0].strip().lower() or "auto"
         mode = "off" if raw[1].strip().lower() in (
             "off", "0", "static", "false") else "on"
         table = raw[2].strip() or None
-        _DEFAULT_CACHE[raw] = KernelPolicy(path=path, autotune=mode,
-                                           autotune_table=table)
+        pol = KernelPolicy(autotune=mode, autotune_table=table)
+        spec = raw[0].strip()
+        if spec:
+            # full from_spec grammar: a bare path label, an
+            # "op=path,op.knob=value" shorthand, or JSON field overrides
+            # (JSON is case-sensitive; the simple forms stay lowercased)
+            if not spec.startswith("{"):
+                spec = spec.lower()
+            pol = KernelPolicy.from_spec(spec, base=pol)
+        _DEFAULT_CACHE[raw] = pol
     return _DEFAULT_CACHE[raw]
 
 

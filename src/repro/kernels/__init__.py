@@ -10,6 +10,8 @@ call via ``policy=``/``path=``, or process-wide; the stable façade is
   backend.py          version shim + capability probes + pallas_op dispatch
   tcu_reduce.py       matmul-form segmented reduction   (paper §4)
   tcu_scan.py         matmul-form segmented scan        (paper §5)
+  matmul_scan.py      log-depth MatMulScan: carry-free local kernels +
+                      O(log) tree combine (``tile_logdepth``; beyond-paper)
   fused_rmsnorm.py    RMSNorm with MXU Σx²              (paper §8 future work)
   ssd_scan.py         Mamba-2 SSD = weighted tile scan  (beyond-paper)
   flash_attention.py  blocked attention, matmul-form ℓ  (beyond-paper)
@@ -24,7 +26,6 @@ from repro.kernels.backend import (
     available_ops,
     compiler_params,
     pallas_op,
-    resolve_path,
 )
 from repro.kernels.ops import (
     attention,
@@ -41,7 +42,6 @@ __all__ = [
     "backend",
     "compiler_params",
     "pallas_op",
-    "resolve_path",
     "rmsnorm",
     "segmented_reduce",
     "segmented_scan",

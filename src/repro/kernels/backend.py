@@ -19,6 +19,10 @@ switch:
                  with a one-time warning (there is nothing to compile for)
   ``tile_tpu``   force the Pallas-TPU kernel — raises off-TPU
   ``tile_gpu``   force the Pallas-Triton kernel — raises off-GPU
+  ``tile_logdepth``  the log-depth MatMulScan contender (scan family):
+                 the host backend's carry-free local block kernels + an
+                 O(log) XLA tree combine; off-accelerator the local
+                 kernels run through the interpreter (the label survives)
   ``interpret``  the Pallas kernel body through the interpreter — how the
                  kernels are validated on CPU
   ``auto``       ``tile`` on TPU/GPU, ``fused`` otherwise
@@ -59,7 +63,8 @@ from repro.obs import runtime as _obs
 
 # the env var's *name*; it is parsed only by repro.core.policy
 ENV_PATH = "REPRO_KERNEL_PATH"
-PATHS = ("auto", "fused", "tile", "tile_tpu", "tile_gpu", "interpret")
+PATHS = ("auto", "fused", "tile", "tile_tpu", "tile_gpu", "tile_logdepth",
+         "interpret")
 
 
 # ---------------------------------------------------------------------------
@@ -155,8 +160,9 @@ def compiler_params(backend: str = "tpu", **kwargs: Any):
 
 
 # ---------------------------------------------------------------------------
-# path resolution — delegated to repro.core.policy (the one resolve
-# implementation in the repo)
+# path resolution — repro.core.policy owns the one resolve implementation
+# in the repo; this module only folds the legacy use_pallas bool into a
+# label before handing the call to it
 
 
 def _merge_use_pallas(path: str | None,
@@ -184,26 +190,6 @@ def _merge_use_pallas(path: str | None,
     return path
 
 
-def resolve_path(path: str | None = None, *,
-                 use_pallas: bool | None = None,
-                 op: str | None = None, n: int | None = None,
-                 dtype: Any = None) -> str:
-    """Deprecated: delegate to the active :class:`~repro.core.policy.
-    KernelPolicy` (kernel level). Kept for callers of the pre-policy API;
-    new code resolves via ``repro.core.policy.get_policy().resolve(...,
-    level="kernel")`` or simply passes ``policy=`` to the ops."""
-    from repro.core import policy as kpolicy
-
-    kpolicy.warn_once(
-        "deprecated:backend.resolve_path",
-        "repro.kernels.backend.resolve_path is deprecated; resolution "
-        "lives on repro.core.policy.KernelPolicy.resolve (pass policy= to "
-        "the ops, or call get_policy().resolve(..., level='kernel'))")
-    path = _merge_use_pallas(path, use_pallas)
-    return kpolicy.get_policy().resolve(op=op, n=n, dtype=dtype,
-                                        level="kernel", explicit=path)
-
-
 # ---------------------------------------------------------------------------
 # op registry — the single pallas_call front door
 
@@ -216,7 +202,11 @@ class PallasOp:
 
     ``tile`` is the Pallas-TPU entry (also the body the ``interpret`` path
     runs); ``tile_gpu`` the Pallas-Triton twin, or None while a family has
-    no GPU kernel yet. ``knobs`` declares the family's tuning-knob schema
+    no GPU kernel yet. ``tile_logdepth``/``tile_logdepth_gpu`` are the
+    log-depth MatMulScan contenders per backend (scan family only; None
+    elsewhere) — each must accept ``interpret=`` like the linear entries,
+    which is how the label survives off-accelerator with interpreted
+    local kernels. ``knobs`` declares the family's tuning-knob schema
     (from ``repro.core.policy.KNOB_SCHEMA``, keyed by the canonical op
     name); the default and sweep-candidate knob *values* live in
     ``repro.kernels.layout`` and are exposed here per backend so autotune
@@ -227,6 +217,8 @@ class PallasOp:
     tile: Callable[..., Any]
     fused: Callable[..., Any]
     tile_gpu: Callable[..., Any] | None = None
+    tile_logdepth: Callable[..., Any] | None = None
+    tile_logdepth_gpu: Callable[..., Any] | None = None
     knobs: tuple = ()
 
     def _canonical(self) -> str:
@@ -252,11 +244,16 @@ _REGISTRY: dict[str, PallasOp] = {}
 
 def register_op(name: str, *, tile: Callable[..., Any],
                 fused: Callable[..., Any],
-                tile_gpu: Callable[..., Any] | None = None) -> PallasOp:
+                tile_gpu: Callable[..., Any] | None = None,
+                tile_logdepth: Callable[..., Any] | None = None,
+                tile_logdepth_gpu: Callable[..., Any] | None = None
+                ) -> PallasOp:
     from repro.core import policy as kpolicy  # deferred: avoids a cycle
 
     canon = kpolicy.OP_ALIASES.get(name, name)
     op = PallasOp(name=name, tile=tile, fused=fused, tile_gpu=tile_gpu,
+                  tile_logdepth=tile_logdepth,
+                  tile_logdepth_gpu=tile_logdepth_gpu,
                   knobs=tuple(kpolicy.KNOB_SCHEMA.get(canon, ())))
     _REGISTRY[name] = op
     return op
@@ -351,4 +348,16 @@ def pallas_op(name: str, *args: Any, policy: Any = None,
                 f"{name}: no Pallas-Triton (GPU) kernel registered for this "
                 "op; use path='tile_tpu', 'interpret', or 'fused'")
         return op.tile_gpu(*args, interpret=False, **kwargs)
+    if p == "tile_logdepth":
+        native = native_tile_backend()
+        fn = op.tile_logdepth_gpu if native == "tile_gpu" \
+            else op.tile_logdepth
+        if fn is None:
+            raise RuntimeError(
+                f"{name}: no log-depth MatMulScan kernel registered for "
+                "this op (tile_logdepth covers the scan family: scan, "
+                "weighted_scan, ssd); use path='tile' or 'fused'")
+        # off-accelerator the local block kernels run interpreted; the
+        # tree combine is plain XLA either way
+        return fn(*args, interpret=(native is None), **kwargs)
     return op.tile(*args, interpret=(p == "interpret"), **kwargs)

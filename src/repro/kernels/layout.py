@@ -54,25 +54,28 @@ KV_PAGE_ROWS = 2 * SUBLANES
 DEFAULT_TUNING = {
     "tpu": {
         "reduce": {"block_s": 128, "block_n": 128},
-        "scan": {"block_s": 128, "block_n": 128},
-        "weighted_scan": {"q": 128},
+        "scan": {"block_s": 128, "block_n": 128,
+                 "radix": 16, "fan_in": 16},
+        "weighted_scan": {"q": 128, "radix": 16, "fan_in": 16},
         "rmsnorm": {"row_block": 128},
         "attention": {"block_q": 128, "block_k": 128},
-        "ssd": {"q": 128},
+        "ssd": {"q": 128, "radix": 16, "fan_in": 16},
         "ragged_reduce": {},
         "ragged_scan": {},
     },
     "gpu": {
         "reduce": {"block_s": 32, "block_n": 64,
                    "num_warps": 4, "num_stages": 2},
-        "scan": {"block_s": 32, "block_n": 64,
+        "scan": {"block_s": 32, "block_n": 64, "radix": 16, "fan_in": 16,
                  "num_warps": 4, "num_stages": 2},
-        "weighted_scan": {"q": 64, "num_warps": 4, "num_stages": 2},
+        "weighted_scan": {"q": 64, "radix": 16, "fan_in": 16,
+                          "num_warps": 4, "num_stages": 2},
         "rmsnorm": {"row_block": 16, "block_d": 128,
                     "num_warps": 8, "num_stages": 2},
         "attention": {"block_q": 64, "block_k": 64,
                       "num_warps": 4, "num_stages": 2},
-        "ssd": {"q": 64, "num_warps": 4, "num_stages": 2},
+        "ssd": {"q": 64, "radix": 16, "fan_in": 16,
+                "num_warps": 4, "num_stages": 2},
         "ragged_reduce": {},
         "ragged_scan": {},
     },
@@ -121,6 +124,40 @@ CANDIDATE_TUNING = {
 }
 
 
+# Candidate specs for the log-depth MatMulScan contender (its own table:
+# the linear sweep's clamp-dedupe compares executed dicts, and mixing
+# radix/fan_in into CANDIDATE_TUNING would make identical linear
+# geometries look distinct and get timed as phantoms). radix is the tree
+# branching factor, fan_in the base-case width finished with one
+# triangular matmul — both sized around the MMA fragment edge.
+LOGDEPTH_CANDIDATE_TUNING = {
+    "tpu": {
+        "scan": ({"block_s": 128, "block_n": 128,
+                  "radix": 16, "fan_in": 16},
+                 {"block_s": 128, "block_n": 128,
+                  "radix": 16, "fan_in": 64}),
+        "weighted_scan": ({"q": 128, "radix": 16, "fan_in": 16},
+                          {"q": 128, "radix": 32, "fan_in": 32}),
+        "ssd": ({"q": 128, "radix": 16, "fan_in": 16},
+                {"q": 128, "radix": 32, "fan_in": 32}),
+    },
+    "gpu": {
+        "scan": ({"block_s": 32, "block_n": 64, "radix": 16, "fan_in": 16,
+                  "num_warps": 4, "num_stages": 2},
+                 {"block_s": 32, "block_n": 64, "radix": 16, "fan_in": 64,
+                  "num_warps": 4, "num_stages": 2}),
+        "weighted_scan": ({"q": 64, "radix": 16, "fan_in": 16,
+                           "num_warps": 4, "num_stages": 2},
+                          {"q": 64, "radix": 32, "fan_in": 32,
+                           "num_warps": 4, "num_stages": 2}),
+        "ssd": ({"q": 64, "radix": 16, "fan_in": 16,
+                 "num_warps": 4, "num_stages": 2},
+                {"q": 64, "radix": 32, "fan_in": 32,
+                 "num_warps": 4, "num_stages": 2}),
+    },
+}
+
+
 def default_tuning(backend: str, op: str) -> dict:
     """The default knob values for ``op`` on ``backend`` (a fresh dict)."""
     return dict(DEFAULT_TUNING.get(backend, {}).get(op, {}))
@@ -129,6 +166,13 @@ def default_tuning(backend: str, op: str) -> dict:
 def candidate_tuning(backend: str, op: str) -> list[dict]:
     """The sweepable candidate specs for ``op`` on ``backend``."""
     return [dict(c) for c in CANDIDATE_TUNING.get(backend, {}).get(op, ())]
+
+
+def logdepth_candidate_tuning(backend: str, op: str) -> list[dict]:
+    """The sweepable candidate specs for ``op``'s ``tile_logdepth``
+    contender on ``backend`` (empty for families without one)."""
+    return [dict(c)
+            for c in LOGDEPTH_CANDIDATE_TUNING.get(backend, {}).get(op, ())]
 
 
 # Which hardware multiple each clampable block knob carries, split by the

@@ -1,12 +1,14 @@
 """Public wrappers for the Pallas kernels, dispatched through
 ``repro.kernels.backend``.
 
-Every op registers a (tile, fused[, tile_gpu]) triple with
-:func:`backend.register_op`: the *tile* entry is the padding/layout glue in
-this module feeding the shape-strict, MXU-aligned Pallas-TPU kernel (native
-on TPU, interpret mode on CPU); the *tile_gpu* entry is the Pallas-Triton
-twin's glue (``repro.kernels.triton.ops``, native on GPU); the *fused*
-entry is the pure-jnp oracle in ``ref.py``. The execution path is chosen
+Every op registers its path entries with :func:`backend.register_op`: the
+*tile* entry is the padding/layout glue in this module feeding the
+shape-strict, MXU-aligned Pallas-TPU kernel (native on TPU, interpret mode
+on CPU); the *tile_gpu* entry is the Pallas-Triton twin's glue
+(``repro.kernels.triton.ops``, native on GPU); the scan family also
+registers *tile_logdepth* entries per backend (carry-free local kernels +
+the ``matmul_scan`` tree combine); the *fused* entry is the pure-jnp
+oracle in ``ref.py``. The execution path is chosen
 per call (``policy=`` / ``path=`` / legacy ``use_pallas=``) or by the
 active ``repro.core.policy.KernelPolicy`` (whose process default follows
 ``REPRO_KERNEL_PATH``) — see the backend module docstring for precedence;
@@ -27,6 +29,7 @@ from repro.kernels.layout import pad_axis as _pad_axis
 from repro.kernels.layout import ssd_fold, ssd_unfold
 
 if backend.has_pallas_tpu():
+    from repro.kernels import matmul_scan as _mm_scan
     from repro.kernels.flash_attention import flash_attention as _flash_kernel
     from repro.kernels.fused_rmsnorm import fused_rmsnorm as _rmsnorm_kernel
     from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_kernel
@@ -35,7 +38,7 @@ if backend.has_pallas_tpu():
     from repro.kernels.tcu_scan import tcu_segmented_scan_tn as _scan_kernel
 else:  # pragma: no cover — JAX without the Pallas-TPU lowering
     _flash_kernel = _rmsnorm_kernel = _ssd_kernel = None
-    _reduce_kernel = _scan_kernel = None
+    _reduce_kernel = _scan_kernel = _mm_scan = None
 
 if backend.has_pallas_triton():
     from repro.kernels.triton import ops as triton_ops
@@ -110,6 +113,33 @@ def _scan_tile(x: jax.Array, *, tuning=None,
     return out[:rows, :n].reshape(*lead, n)
 
 
+def _scan_tile_logdepth(x: jax.Array, *, tuning=None,
+                        interpret: bool = False) -> jax.Array:
+    """Log-depth MatMulScan: carry-free local block scans (fully parallel
+    Pallas grid) + an O(log_radix nblocks) tree combine of batched MMAs
+    over the block totals (``repro.kernels.matmul_scan``)."""
+    mm = _require_pallas(_mm_scan, "segmented_scan[tile_logdepth]")
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    rows = _nrows(lead)
+    bs = layout.fit_block(rows, _knob(tuning, "block_s", "scan"), SUBLANES)
+    bn = layout.fit_block(n, _knob(tuning, "block_n", "scan"), LANES)
+    flat = _pad_axis(_pad_axis(x.reshape(-1, n), 0, bs), 1, bn)
+    local = mm.matmul_local_scan(flat, block_s=bs, block_n=bn,
+                                 interpret=interpret)
+    s_pad, n_pad = local.shape
+    nchunks = n_pad // bn
+    if nchunks > 1:
+        totals = local[:, bn - 1::bn]                    # (s_pad, nchunks)
+        carry = mm.tree_scan(totals,
+                             radix=_knob(tuning, "radix", "scan"),
+                             fan_in=_knob(tuning, "fan_in", "scan"))
+        exc = jnp.pad(carry, ((0, 0), (1, 0)))[:, :-1]   # exclusive
+        local = (local.reshape(s_pad, nchunks, bn)
+                 + exc[..., None]).reshape(s_pad, n_pad)
+    return local[:rows, :n].reshape(*lead, n)
+
+
 def segmented_scan(x: jax.Array, *, policy=None, path: str | None = None,
                    use_pallas: bool | None = None) -> jax.Array:
     """Inclusive prefix-sum over the last axis -> f32, same shape."""
@@ -138,6 +168,36 @@ def _weighted_scan_tile(x: jax.Array, log_a: jax.Array, *, tuning=None,
     y, _ = _require_pallas(_ssd_kernel, "weighted_scan")(
         xp, lap, e1, e1, q=q, interpret=interpret)
     return y[:, :n, 0].reshape(*lead, n)
+
+
+def _weighted_scan_tile_logdepth(x: jax.Array, log_a: jax.Array, *,
+                                 tuning=None,
+                                 interpret: bool = False) -> jax.Array:
+    """Log-depth weighted scan: per-block 1-semiseparable local passes +
+    a decay-folded tree combine over the block boundary states."""
+    mm = _require_pallas(_mm_scan, "weighted_scan[tile_logdepth]")
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    rows = _nrows(lead)
+    q = layout.fit_block(n, _knob(tuning, "q", "weighted_scan"), LANES)
+    xf = x.reshape(rows, n).astype(jnp.float32)
+    la = log_a.reshape(rows, n).astype(jnp.float32)
+    xp = _pad_axis(xf, 1, q)
+    lap = _pad_axis(la, 1, q)      # pad with 0 ⇒ decay 1, input 0: harmless
+    local = mm.matmul_local_weighted(xp, lap, q=q, interpret=interpret)
+    nchunks = xp.shape[1] // q
+    if nchunks > 1:
+        lg = lap.reshape(rows, nchunks, q)
+        # block boundary recurrence H_j = exp(Σλ_j)·H_{j-1} + h_j[last]
+        carry = mm.tree_weighted(
+            jnp.sum(lg, axis=-1), local[:, q - 1::q, None],
+            radix=_knob(tuning, "radix", "weighted_scan"),
+            fan_in=_knob(tuning, "fan_in", "weighted_scan"))[..., 0]
+        exc = jnp.pad(carry, ((0, 0), (1, 0)))[:, :-1]   # (rows, nchunks)
+        local = (local.reshape(rows, nchunks, q)
+                 + jnp.exp(jnp.cumsum(lg, axis=-1)) * exc[..., None]
+                 ).reshape(rows, -1)
+    return local[:, :n].reshape(*lead, n)
 
 
 def weighted_scan(x: jax.Array, log_a: jax.Array, *, policy=None,
@@ -246,6 +306,53 @@ def _ssd_tile(
                       return_state=return_state)
 
 
+def _ssd_tile_logdepth(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)    positive step sizes
+    a: jax.Array,       # (H,)         negative decay rates
+    b: jax.Array,       # (B, L, G, N)
+    c: jax.Array,       # (B, L, G, N)
+    *,
+    return_state: bool = False,
+    tuning=None,
+    interpret: bool = False,
+):
+    """Log-depth SSD: carry-free per-chunk passes emit (y_local, S_j);
+    the chunk-state recurrence ``H_j = exp(Σλ_j)·H_{j-1} + S_j`` runs as
+    the weighted tree combine and the inter-chunk term
+    ``(C ∘ exp(Λ)) @ H_{j-1}`` is one batched matmul per chunk."""
+    mm = _require_pallas(_mm_scan, "ssd_scan[tile_logdepth]")
+    bsz, seqlen, nheads, hdim = x.shape
+    nstate = b.shape[3]
+    q = layout.fit_block(seqlen, _knob(tuning, "q", "ssd"), LANES)
+    xdt, lam, bb, cc = ssd_fold(x, dt, a, b, c)
+    xdt = _pad_axis(_pad_axis(xdt, 2, LANES), 1, q)
+    lam = _pad_axis(lam, 1, q)
+    bb = _pad_axis(_pad_axis(bb, 2, SUBLANES), 1, q)
+    cc = _pad_axis(_pad_axis(cc, 2, SUBLANES), 1, q)
+    y, s = mm.matmul_local_ssd(xdt, lam, bb, cc, q=q, interpret=interpret)
+    bh, l_pad, p_pad = xdt.shape
+    n_pad = bb.shape[2]
+    nchunks = l_pad // q
+    lg = lam.reshape(bh, nchunks, q)
+    # pad chunks have λ = 0 and S = 0: identity steps, H passes through
+    h_inc = mm.tree_weighted(
+        jnp.sum(lg, axis=-1), s.reshape(bh, nchunks, n_pad * p_pad),
+        radix=_knob(tuning, "radix", "ssd"),
+        fan_in=_knob(tuning, "fan_in", "ssd"))
+    h_exc = jnp.pad(h_inc, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    h_exc = h_exc.reshape(bh, nchunks, n_pad, p_pad)
+    cdec = (cc.reshape(bh, nchunks, q, n_pad)
+            * jnp.exp(jnp.cumsum(lg, axis=-1))[..., None])
+    y = (y.reshape(bh, nchunks, q, p_pad)
+         + jnp.einsum("bjqn,bjnp->bjqp", cdec, h_exc)
+         ).reshape(bh, l_pad, p_pad)
+    state = h_inc[:, -1].reshape(bh, n_pad, p_pad)
+    return ssd_unfold(y, state, bsz=bsz, nheads=nheads, seqlen=seqlen,
+                      hdim=hdim, nstate=nstate, out_dtype=x.dtype,
+                      return_state=return_state)
+
+
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
              c: jax.Array, *, policy=None, path: str | None = None,
              use_pallas: bool | None = None, return_state: bool = False):
@@ -340,13 +447,24 @@ backend.register_op("segmented_scan",
                     tile=_diff_via_ref(_scan_tile, ref.segmented_scan_ref),
                     fused=ref.segmented_scan_ref,
                     tile_gpu=_diff_via_ref(_gpu_entry("scan_tile_gpu"),
-                                           ref.segmented_scan_ref))
+                                           ref.segmented_scan_ref),
+                    tile_logdepth=_diff_via_ref(_scan_tile_logdepth,
+                                                ref.segmented_scan_ref),
+                    tile_logdepth_gpu=_diff_via_ref(
+                        _gpu_entry("scan_tile_logdepth_gpu"),
+                        ref.segmented_scan_ref))
 backend.register_op("weighted_scan",
                     tile=_diff_via_ref(_weighted_scan_tile,
                                        ref.weighted_scan_ref),
                     fused=ref.weighted_scan_ref,
                     tile_gpu=_diff_via_ref(
                         _gpu_entry("weighted_scan_tile_gpu"),
+                        ref.weighted_scan_ref),
+                    tile_logdepth=_diff_via_ref(
+                        _weighted_scan_tile_logdepth,
+                        ref.weighted_scan_ref),
+                    tile_logdepth_gpu=_diff_via_ref(
+                        _gpu_entry("weighted_scan_tile_logdepth_gpu"),
                         ref.weighted_scan_ref))
 # rmsnorm carries its own custom VJP (all paths share it) — no wrapper
 backend.register_op("rmsnorm", tile=_rmsnorm_tile, fused=_rmsnorm_fused,
@@ -356,7 +474,12 @@ backend.register_op("ssd_scan",
                     tile=_diff_via_ref(_ssd_tile, ref.ssd_scan_ref),
                     fused=ref.ssd_scan_ref,
                     tile_gpu=_diff_via_ref(_gpu_entry("ssd_tile_gpu"),
-                                           ref.ssd_scan_ref))
+                                           ref.ssd_scan_ref),
+                    tile_logdepth=_diff_via_ref(_ssd_tile_logdepth,
+                                                ref.ssd_scan_ref),
+                    tile_logdepth_gpu=_diff_via_ref(
+                        _gpu_entry("ssd_tile_logdepth_gpu"),
+                        ref.ssd_scan_ref))
 backend.register_op("attention",
                     tile=_diff_via_ref(_attention_tile,
                                        ref.flash_attention_ref),

@@ -1,0 +1,218 @@
+"""Pallas-Triton kernels: MatMulScan local (level-0) block scans — the GPU
+twins of ``repro.kernels.matmul_scan`` for the ``tile_logdepth`` path.
+
+The linear Triton kernels thread the inter-block carry through an
+in-kernel ``fori_loop`` (CUDA grids are parallel and cannot carry state),
+so their depth is ``n / block``. The log-depth path deletes that loop
+entirely: each program scans one block with a single triangular MMA and
+emits its block total/state; the ``O(log_radix nblocks)`` tree combine
+over those totals (``tree_scan`` / ``tree_weighted`` — pure batched XLA
+matmuls against the constant ``U_s``/``B_s`` matrices) runs outside the
+kernel and is shared with the TPU glue.
+
+Single-row fragments (the weighted scan walks one decay row per program)
+ride the same broadcast trick the linear SSD twin uses: replicate the row
+to a 16-row fragment so ``tl.dot``'s ``M >= 16`` shape rule holds, then
+collapse the identical rows without arithmetic.
+
+Launch geometry is caller-supplied (a resolved ``TuneSpec``); defaults
+live in ``repro.kernels.layout``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import backend
+from repro.kernels.layout import MMA_TILE as TILE
+from repro.kernels.layout import default_tuning
+from repro.kernels.matmul_scan import upper_tri_ones
+
+
+def _local_scan_kernel(x_ref, o_ref):
+    a = x_ref[...].astype(jnp.float32)
+    bn = a.shape[1]
+    o_ref[...] = jax.lax.dot_general(
+        a, upper_tri_ones(bn), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "block_n", "num_warps",
+                                    "num_stages", "interpret"))
+def triton_local_scan(x: jax.Array, *, block_s: int | None = None,
+                      block_n: int | None = None,
+                      num_warps: int | None = None,
+                      num_stages: int | None = None,
+                      interpret: bool = False) -> jax.Array:
+    """Per-block inclusive scan: (s, n) -> (s, n) f32, every
+    ``block_s x block_n`` block independent (no carry loop — the tree
+    combine adds it). Grid is fully parallel in both dimensions."""
+    spec = default_tuning("gpu", "scan")
+    block_s = block_s or spec["block_s"]
+    block_n = block_n or spec["block_n"]
+    s, n = x.shape
+    if s % block_s or n % block_n:
+        raise ValueError(
+            f"dims must be multiples of {(block_s, block_n)}, got {x.shape}")
+    return pl.pallas_call(
+        _local_scan_kernel,
+        grid=(s // block_s, n // block_n),
+        in_specs=[pl.BlockSpec((block_s, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_s, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        compiler_params=backend.compiler_params(
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
+        interpret=interpret,
+        name="triton_local_scan",
+    )(x)
+
+
+def _local_weighted_kernel(x_ref, lam_ref, o_ref, *, q: int):
+    x = x_ref[...].astype(jnp.float32)                   # (q,)
+    lam = lam_ref[...].astype(jnp.float32)               # (q,)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    u = (rows <= cols).astype(jnp.float32)
+
+    # Λ = λ @ U on a 16-row fragment (rows identical, tl.dot needs M >= 16)
+    lam16 = jnp.broadcast_to(lam[None, :], (TILE, q))
+    cum16 = jax.lax.dot_general(
+        lam16, u, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    cum = jnp.max(cum16, axis=0)                         # (q,)
+
+    # M[t, τ] = exp(Λ_t − Λ_τ) for τ ≤ t; y_t = Σ_τ M[t, τ] x_τ on the
+    # same replicated-fragment trick, collapsing identical rows after.
+    diff = cum[:, None] - cum[None, :]
+    m = jnp.where(rows >= cols, jnp.exp(diff), 0.0)      # (q, q)
+    x16 = jnp.broadcast_to(x[None, :], (TILE, q))
+    y16 = jax.lax.dot_general(
+        x16, m, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (16, q) identical
+    o_ref[...] = jnp.max(y16, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "num_warps", "num_stages",
+                                             "interpret"))
+def triton_local_weighted(x: jax.Array, lam: jax.Array, *,
+                          q: int | None = None,
+                          num_warps: int | None = None,
+                          num_stages: int | None = None,
+                          interpret: bool = False) -> jax.Array:
+    """Per-block weighted scan: x, lam (rows, n) -> (rows, n) f32 with
+    ``h_t = exp(lam_t) h_{t-1} + x_t`` restarted at every ``q``-block
+    boundary. Fully parallel grid."""
+    spec = default_tuning("gpu", "weighted_scan")
+    q = q or spec["q"]
+    rows, n = x.shape
+    if n % q:
+        raise ValueError(f"n={n} must be a multiple of q={q}")
+    return pl.pallas_call(
+        functools.partial(_local_weighted_kernel, q=q),
+        grid=(rows, n // q),
+        in_specs=[
+            pl.BlockSpec((None, q), lambda i, j: (i, j)),
+            pl.BlockSpec((None, q), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((None, q), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        compiler_params=backend.compiler_params(
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
+        interpret=interpret,
+        name="triton_local_weighted",
+    )(x, lam)
+
+
+def _local_ssd_kernel(xdt_ref, lam_ref, b_ref, c_ref, y_ref, s_ref, *,
+                      q: int):
+    xdt = xdt_ref[...].astype(jnp.float32)               # (q, P)
+    lam = lam_ref[...].astype(jnp.float32)               # (q,)
+    bmat = b_ref[...].astype(jnp.float32)                # (q, N)
+    cmat = c_ref[...].astype(jnp.float32)                # (q, N)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    u = (rows <= cols).astype(jnp.float32)
+
+    lam16 = jnp.broadcast_to(lam[None, :], (TILE, q))
+    cum16 = jax.lax.dot_general(
+        lam16, u, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    cum = jnp.max(cum16, axis=0)                         # (q,)
+    total = jnp.sum(lam)
+
+    # Intra-chunk only: Y_local = ((C Bᵀ) ∘ M) @ (dt∘X); the inter-chunk
+    # H term is added by the glue after the tree combine.
+    diff = cum[:, None] - cum[None, :]
+    m = jnp.where(rows >= cols, jnp.exp(diff), 0.0)
+    cb = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[...] = jax.lax.dot_general(
+        cb * m, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # Per-chunk state contribution S = (B ∘ w)ᵀ @ (dt∘X), w_τ = exp(Σλ − Λ_τ)
+    bw = bmat * jnp.exp(total - cum)[:, None]
+    s_ref[...] = jax.lax.dot_general(
+        bw, xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "num_warps", "num_stages",
+                                             "interpret"))
+def triton_local_ssd(
+    xdt: jax.Array,     # (BH, L, P)  dt-weighted inputs, P % 16 == 0
+    lam: jax.Array,     # (BH, L)     per-step log decay
+    b: jax.Array,       # (BH, L, N)  N % 16 == 0
+    c: jax.Array,       # (BH, L, N)
+    *,
+    q: int | None = None,
+    num_warps: int | None = None,
+    num_stages: int | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Carry-free SSD chunk pass on a fully parallel grid. Returns
+    ``(y_local (BH, L, P), s (BH, nchunks*N, P))``."""
+    spec = default_tuning("gpu", "ssd")
+    q = q or spec["q"]
+    bh, seqlen, hdim = xdt.shape
+    nstate = b.shape[-1]
+    if seqlen % q:
+        raise ValueError(f"L={seqlen} must be a multiple of {q}")
+    if nstate % TILE or hdim % TILE:
+        raise ValueError(
+            f"N={nstate}, P={hdim} must be multiples of {TILE} (MMA shape)")
+    nchunks = seqlen // q
+    return pl.pallas_call(
+        functools.partial(_local_ssd_kernel, q=q),
+        grid=(bh, nchunks),
+        in_specs=[
+            pl.BlockSpec((None, q, hdim), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, q), lambda i, j: (i, j)),
+            pl.BlockSpec((None, q, nstate), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, q, nstate), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, q, hdim), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, nstate, hdim), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seqlen, hdim), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nchunks * nstate, hdim), jnp.float32),
+        ],
+        compiler_params=backend.compiler_params(
+            backend="gpu",
+            num_warps=num_warps or spec["num_warps"],
+            num_stages=num_stages or spec["num_stages"]),
+        interpret=interpret,
+        name="triton_local_ssd",
+    )(xdt, lam, b, c)

@@ -27,8 +27,14 @@ from repro.kernels import backend, layout, ref
 from repro.kernels.layout import MMA_TILE as TILE
 from repro.kernels.layout import fit_block, nrows, pad_axis, ssd_fold, \
     ssd_unfold
+from repro.kernels.matmul_scan import tree_scan, tree_weighted
 from repro.kernels.triton.flash_attention import triton_flash_attention
 from repro.kernels.triton.fused_rmsnorm import triton_fused_rmsnorm
+from repro.kernels.triton.matmul_scan import (
+    triton_local_scan,
+    triton_local_ssd,
+    triton_local_weighted,
+)
 from repro.kernels.triton.ssd_scan import triton_ssd_chunk_scan
 from repro.kernels.triton.tcu_reduce import triton_segmented_reduce
 from repro.kernels.triton.tcu_scan import triton_segmented_scan
@@ -90,6 +96,33 @@ def scan_tile_gpu(x: jax.Array, *, tuning=None,
     return out[:rows, :n].reshape(*lead, n)
 
 
+def scan_tile_logdepth_gpu(x: jax.Array, *, tuning=None,
+                           interpret: bool = False) -> jax.Array:
+    """Log-depth MatMulScan: carry-free local block scans (fully parallel
+    grid, no ``fori_loop``) + the shared O(log_radix nblocks) tree combine
+    of batched MMAs over block totals."""
+    _require_gpu(interpret, "segmented_scan[tile_logdepth]")
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    rows = nrows(lead)
+    bs = fit_block(rows, _knob(tuning, "block_s", "scan"), TILE)
+    bn = fit_block(n, _knob(tuning, "block_n", "scan"), TILE)
+    flat = pad_axis(pad_axis(x.reshape(-1, n), 0, bs), 1, bn)
+    local = triton_local_scan(flat, block_s=bs, block_n=bn,
+                              interpret=interpret,
+                              **_launch(tuning, "scan"))
+    s_pad, n_pad = local.shape
+    nchunks = n_pad // bn
+    if nchunks > 1:
+        carry = tree_scan(local[:, bn - 1::bn],
+                          radix=_knob(tuning, "radix", "scan"),
+                          fan_in=_knob(tuning, "fan_in", "scan"))
+        exc = jnp.pad(carry, ((0, 0), (1, 0)))[:, :-1]
+        local = (local.reshape(s_pad, nchunks, bn)
+                 + exc[..., None]).reshape(s_pad, n_pad)
+    return local[:rows, :n].reshape(*lead, n)
+
+
 # ---------------------------------------------------------------------------
 # weighted scan (the SSD kernel degenerated to N = P = 1, B = C = 1)
 
@@ -112,6 +145,36 @@ def weighted_scan_tile_gpu(x: jax.Array, log_a: jax.Array, *, tuning=None,
     y, _ = triton_ssd_chunk_scan(xp, lap, e1, e1, q=q, interpret=interpret,
                                  **_launch(tuning, "weighted_scan"))
     return y[:, :n, 0].reshape(*lead, n)
+
+
+def weighted_scan_tile_logdepth_gpu(x: jax.Array, log_a: jax.Array, *,
+                                    tuning=None,
+                                    interpret: bool = False) -> jax.Array:
+    """Log-depth weighted scan: per-block 1-semiseparable local passes +
+    the decay-folded tree combine over block boundary states."""
+    _require_gpu(interpret, "weighted_scan[tile_logdepth]")
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    rows = nrows(lead)
+    q = fit_block(n, _knob(tuning, "q", "weighted_scan"), TILE)
+    xf = x.reshape(rows, n).astype(jnp.float32)
+    la = log_a.reshape(rows, n).astype(jnp.float32)
+    xp = pad_axis(xf, 1, q)
+    lap = pad_axis(la, 1, q)       # pad with 0 ⇒ decay 1, input 0: harmless
+    local = triton_local_weighted(xp, lap, q=q, interpret=interpret,
+                                  **_launch(tuning, "weighted_scan"))
+    nchunks = xp.shape[1] // q
+    if nchunks > 1:
+        lg = lap.reshape(rows, nchunks, q)
+        carry = tree_weighted(
+            jnp.sum(lg, axis=-1), local[:, q - 1::q, None],
+            radix=_knob(tuning, "radix", "weighted_scan"),
+            fan_in=_knob(tuning, "fan_in", "weighted_scan"))[..., 0]
+        exc = jnp.pad(carry, ((0, 0), (1, 0)))[:, :-1]
+        local = (local.reshape(rows, nchunks, q)
+                 + jnp.exp(jnp.cumsum(lg, axis=-1)) * exc[..., None]
+                 ).reshape(rows, -1)
+    return local[:, :n].reshape(*lead, n)
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +227,53 @@ def ssd_tile_gpu(
     y, state = triton_ssd_chunk_scan(xdt, lam, bb, cc, q=q,
                                      interpret=interpret,
                                      **_launch(tuning, "ssd"))
+    return ssd_unfold(y, state, bsz=bsz, nheads=nheads, seqlen=seqlen,
+                      hdim=hdim, nstate=nstate, out_dtype=x.dtype,
+                      return_state=return_state)
+
+
+def ssd_tile_logdepth_gpu(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)    positive step sizes
+    a: jax.Array,       # (H,)         negative decay rates
+    b: jax.Array,       # (B, L, G, N)
+    c: jax.Array,       # (B, L, G, N)
+    *,
+    return_state: bool = False,
+    tuning=None,
+    interpret: bool = False,
+):
+    """Log-depth SSD: carry-free per-chunk passes emit (y_local, S_j);
+    the chunk-state recurrence runs as the weighted tree combine and the
+    inter-chunk term is one batched matmul per chunk."""
+    _require_gpu(interpret, "ssd_scan[tile_logdepth]")
+    bsz, seqlen, nheads, hdim = x.shape
+    nstate = b.shape[3]
+    q = fit_block(seqlen, _knob(tuning, "q", "ssd"), TILE)
+    xdt, lam, bb, cc = ssd_fold(x, dt, a, b, c)
+    xdt = pad_axis(pad_axis(xdt, 2, TILE), 1, q)
+    lam = pad_axis(lam, 1, q)
+    bb = pad_axis(pad_axis(bb, 2, TILE), 1, q)
+    cc = pad_axis(pad_axis(cc, 2, TILE), 1, q)
+    y, s = triton_local_ssd(xdt, lam, bb, cc, q=q, interpret=interpret,
+                            **_launch(tuning, "ssd"))
+    bh, l_pad, p_pad = xdt.shape
+    n_pad = bb.shape[2]
+    nchunks = l_pad // q
+    lg = lam.reshape(bh, nchunks, q)
+    # pad chunks have λ = 0 and S = 0: identity steps, H passes through
+    h_inc = tree_weighted(
+        jnp.sum(lg, axis=-1), s.reshape(bh, nchunks, n_pad * p_pad),
+        radix=_knob(tuning, "radix", "ssd"),
+        fan_in=_knob(tuning, "fan_in", "ssd"))
+    h_exc = jnp.pad(h_inc, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    h_exc = h_exc.reshape(bh, nchunks, n_pad, p_pad)
+    cdec = (cc.reshape(bh, nchunks, q, n_pad)
+            * jnp.exp(jnp.cumsum(lg, axis=-1))[..., None])
+    y = (y.reshape(bh, nchunks, q, p_pad)
+         + jnp.einsum("bjqn,bjnp->bjqp", cdec, h_exc)
+         ).reshape(bh, l_pad, p_pad)
+    state = h_inc[:, -1].reshape(bh, n_pad, p_pad)
     return ssd_unfold(y, state, bsz=bsz, nheads=nheads, seqlen=seqlen,
                       hdim=hdim, nstate=nstate, out_dtype=x.dtype,
                       return_state=return_state)

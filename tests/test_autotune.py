@@ -9,8 +9,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import autotune, dispatch
+from repro.core import autotune, dispatch  # noqa: F401 (dispatch: ops)
+from repro.core import policy as kpolicy
 from repro.kernels import backend
+
+
+def _resolve(level="dispatch", explicit=None, **kw):
+    """The exact resolver every dispatch/kernel op calls (the pre-policy
+    ``resolve_path`` delegates are gone)."""
+    return kpolicy.get_policy().resolve(level=level, explicit=explicit, **kw)
 
 
 @pytest.fixture(autouse=True)
@@ -79,10 +86,8 @@ def test_table_roundtrip_auto_flips_across_buckets(tmp_path, monkeypatch):
     assert loaded["backends"][bk]["entries"]["reduce/f32/4"]["path"] == \
         "fused"
     # the exact resolver every dispatch op calls:
-    assert dispatch.resolve_path(op="reduce", n=16,
-                                 dtype=jnp.float32) == "fused"
-    assert dispatch.resolve_path(op="reduce", n=4096,
-                                 dtype=jnp.float32) == "baseline"
+    assert _resolve(op="reduce", n=16, dtype=jnp.float32) == "fused"
+    assert _resolve(op="reduce", n=4096, dtype=jnp.float32) == "baseline"
     # and the results still agree regardless of which path auto picked
     small = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
     big = jax.random.normal(jax.random.PRNGKey(1), (2, 4096))
@@ -140,10 +145,9 @@ def test_autotune_off_restores_static_heuristic(tmp_path, monkeypatch):
     autotune.invalidate_cache()
     assert autotune.choose("reduce", 4096, jnp.float32) is None
     # static auto off-TPU = fused, table and heuristic both bypassed
-    assert dispatch.resolve_path(op="reduce", n=4096,
-                                 dtype=jnp.float32) == "fused"
-    assert backend.resolve_path(op="segmented_reduce", n=4096,
-                                dtype=jnp.float32) == "fused"
+    assert _resolve(op="reduce", n=4096, dtype=jnp.float32) == "fused"
+    assert _resolve(op="segmented_reduce", n=4096, dtype=jnp.float32,
+                    level="kernel") == "fused"
 
 
 def test_explicit_path_beats_table(tmp_path, monkeypatch):
@@ -151,8 +155,8 @@ def test_explicit_path_beats_table(tmp_path, monkeypatch):
     _write_table(path, {"reduce/f32/4": {"path": "baseline", "us": {}}})
     monkeypatch.setenv(autotune.ENV_TABLE, str(path))
     autotune.invalidate_cache()
-    assert dispatch.resolve_path("xla_tile", op="reduce", n=16,
-                                 dtype=jnp.float32) == "xla_tile"
+    assert _resolve(op="reduce", n=16, dtype=jnp.float32,
+                    explicit="xla_tile") == "xla_tile"
 
 
 # ---------------------------------------------------------------------------
@@ -180,8 +184,7 @@ def test_other_backend_section_never_consulted(tmp_path, monkeypatch):
     assert autotune.current_entries() is None   # no section for this host
     # falls through to the heuristic (fused for a small reduce off-TPU)
     assert autotune.choose("reduce", 16, jnp.float32) == "fused"
-    assert dispatch.resolve_path(op="reduce", n=16,
-                                 dtype=jnp.float32) == "fused"
+    assert _resolve(op="reduce", n=16, dtype=jnp.float32) == "fused"
 
 
 def test_env_table_unknown_backend_fails_loudly(tmp_path, monkeypatch):
@@ -257,7 +260,7 @@ def test_merge_tables_keeps_other_sections(tmp_path):
 
 
 def test_kernel_level_auto_consults_table(tmp_path, monkeypatch):
-    """backend.resolve_path('auto') is shape-aware too, with the table's
+    """Kernel-level 'auto' resolution is shape-aware too, with the table's
     dispatch-level labels translated onto the kernel registry's
     implementations (backend's "fused" = the native-op ref = the dispatch
     layer's "baseline"; the matmul forms have no kernel twin)."""
@@ -280,14 +283,14 @@ def test_kernel_level_auto_consults_table(tmp_path, monkeypatch):
     monkeypatch.delenv(backend.ENV_PATH, raising=False)
     monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
     autotune.invalidate_cache()
-    assert backend.resolve_path(op="segmented_reduce", n=16,
-                                dtype=jnp.float32) == "interpret"
-    assert backend.resolve_path(op="segmented_reduce", n=4096,
-                                dtype=jnp.float32) == "fused"
-    assert backend.resolve_path(op="segmented_reduce", n=256,
-                                dtype=jnp.float32) == "interpret"
-    assert backend.resolve_path(op="segmented_reduce", n=1024,
-                                dtype=jnp.float32) == "fused"
+    assert _resolve(op="segmented_reduce", n=16, dtype=jnp.float32,
+                    level="kernel") == "interpret"
+    assert _resolve(op="segmented_reduce", n=4096, dtype=jnp.float32,
+                    level="kernel") == "fused"
+    assert _resolve(op="segmented_reduce", n=256, dtype=jnp.float32,
+                    level="kernel") == "interpret"
+    assert _resolve(op="segmented_reduce", n=1024, dtype=jnp.float32,
+                    level="kernel") == "fused"
 
 
 def test_model_ops_keep_fused_default():

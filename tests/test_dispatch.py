@@ -119,15 +119,19 @@ def test_no_make_mesh_outside_parallel():
 # path resolution
 
 
-def test_resolve_path_defaults_off_tpu(monkeypatch):
+def test_kernel_resolution_defaults_off_tpu(monkeypatch):
     monkeypatch.delenv(backend.ENV_PATH, raising=False)
     if backend.native_tile_backend() is not None:
         pytest.skip("CPU-only expectations")
-    assert backend.resolve_path() == "fused"
-    assert backend.resolve_path("tile") == "interpret"   # nothing to compile
-    assert backend.resolve_path("interpret") == "interpret"
-    assert backend.resolve_path(use_pallas=True) == "interpret"
-    assert backend.resolve_path(use_pallas=False) == "fused"
+    silent = dataclasses.replace(kpolicy.get_policy(),
+                                 interpret_fallback="silent")
+    resolve = lambda p=None: silent.resolve(level="kernel", explicit=p)
+    assert resolve() == "fused"
+    assert resolve("tile") == "interpret"   # nothing to compile
+    assert resolve("interpret") == "interpret"
+    # the legacy use_pallas bool folds into a label before resolution
+    assert resolve(backend._merge_use_pallas(None, True)) == "interpret"
+    assert resolve(backend._merge_use_pallas(None, False)) == "fused"
 
 
 def test_tile_downgrade_warns_once_then_stays_silent(monkeypatch):
@@ -170,33 +174,36 @@ def test_explicit_tile_backend_labels_are_strict():
     """tile_tpu / tile_gpu force a backend and must raise clearly on the
     wrong host (the generic 'tile' is the lenient spelling)."""
     native = backend.native_tile_backend()
+    resolve = lambda p: kpolicy.get_policy().resolve(level="kernel",
+                                                     explicit=p)
     if native != "tile_tpu":
         with pytest.raises(RuntimeError, match="tile_tpu"):
-            backend.resolve_path("tile_tpu")
+            resolve("tile_tpu")
         with pytest.raises(RuntimeError, match="requires a TPU"):
             dispatch.reduce(jnp.ones((2, 64)), path="tile_tpu")
     if native != "tile_gpu":
         with pytest.raises(RuntimeError, match="tile_gpu"):
-            backend.resolve_path("tile_gpu")
+            resolve("tile_gpu")
     if native is not None:
-        assert backend.resolve_path("tile") == native
+        assert resolve("tile") == native
 
 
-def test_resolve_path_env_override(monkeypatch):
+def test_resolution_env_override(monkeypatch):
     monkeypatch.setenv(backend.ENV_PATH, "interpret")
-    assert backend.resolve_path() == "interpret"
-    assert dispatch.resolve_path() == "interpret"
+    assert kpolicy.get_policy().resolve(level="kernel") == "interpret"
+    assert kpolicy.get_policy().resolve() == "interpret"
     # explicit per-call choice beats the env var
-    assert backend.resolve_path("fused") == "fused"
+    assert kpolicy.get_policy().resolve(level="kernel",
+                                        explicit="fused") == "fused"
     monkeypatch.setenv(backend.ENV_PATH, "baseline")
-    assert dispatch.resolve_path() == "baseline"
+    assert kpolicy.get_policy().resolve() == "baseline"
 
 
-def test_resolve_path_rejects_unknown():
+def test_resolution_rejects_unknown():
     with pytest.raises(ValueError):
-        backend.resolve_path("cuda")
+        kpolicy.get_policy().resolve(level="kernel", explicit="cuda")
     with pytest.raises(ValueError):
-        dispatch.resolve_path("warp")
+        kpolicy.get_policy().resolve(explicit="warp")
 
 
 def test_pallas_op_unknown_name():
@@ -358,20 +365,24 @@ def test_legacy_use_pallas_kwarg_still_works():
 def test_conflicting_path_and_use_pallas_warns_path_wins():
     x = jnp.ones((2, 100))
     with pytest.warns(UserWarning, match="path= takes precedence"):
-        assert backend.resolve_path("fused", use_pallas=True) == "fused"
+        assert backend._merge_use_pallas("fused", True) == "fused"
     with pytest.warns(UserWarning, match="path= takes precedence"):
         got = ops.segmented_reduce(x, path="fused", use_pallas=True)
     np.testing.assert_allclose(np.asarray(got), 100.0)
     with pytest.warns(UserWarning):
-        assert backend.resolve_path("tile", use_pallas=False) in (
-            "tile", "interpret")
+        assert backend._merge_use_pallas("tile", False) == "tile"
 
 
 def test_agreeing_path_and_use_pallas_no_warning(recwarn):
     # interpret runs the same kernel body -> not a conflict with
     # use_pallas=True; matching values never warn
-    assert backend.resolve_path("interpret", use_pallas=True) == "interpret"
-    assert backend.resolve_path("fused", use_pallas=False) == "fused"
+    assert backend._merge_use_pallas("interpret", True) == "interpret"
+    assert backend._merge_use_pallas("fused", False) == "fused"
+    silent = dataclasses.replace(kpolicy.get_policy(),
+                                 interpret_fallback="silent")
+    assert silent.resolve(
+        level="kernel",
+        explicit=backend._merge_use_pallas(None, False)) == "fused"
     assert not [w for w in recwarn.list
                 if issubclass(w.category, UserWarning)]
 

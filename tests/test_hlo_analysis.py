@@ -135,3 +135,80 @@ def test_memory_model_slices_not_full_buffers():
     h = analyse(lowered.compile().as_text())
     full_buffer_per_iter = t * (t * d * 4)       # the wrong accounting
     assert h["memory_bytes"] < full_buffer_per_iter / 4
+
+
+# ---------------------------------------------------------------------------
+# carry-depth structure of the scan kernel paths (jaxpr-level, no timing):
+# the linear tile path serialises its inter-block carry as an 'arbitrary'
+# grid dimension whose extent grows with n, while tile_logdepth keeps every
+# Pallas grid fully parallel and pays only O(log_radix n) tree-combine
+# matmuls at the XLA level.
+
+
+def _subjaxprs(v):
+    if isinstance(v, jax.core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jax.core.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _subjaxprs(item)
+
+
+def _walk_eqns(jaxpr):
+    for e in jaxpr.eqns:
+        yield e
+        for v in e.params.values():
+            for sub in _subjaxprs(v):
+                yield from _walk_eqns(sub)
+
+
+def _scan_structure(path, n):
+    """(serialised pallas grid steps, dot_general count) of a lowering."""
+    import dataclasses
+
+    from repro.core import policy as kpolicy
+    from repro.kernels import ops
+
+    pol = dataclasses.replace(kpolicy.get_policy(),
+                              interpret_fallback="silent")
+    x = jnp.ones((8, n), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a: ops.segmented_scan(a, policy=pol, path=path))(x).jaxpr
+    serial, dots, semantics = 1, 0, []
+    for e in _walk_eqns(jaxpr):
+        if e.primitive.name == "dot_general":
+            dots += 1
+        if e.primitive.name != "pallas_call":
+            continue
+        grid = e.params["grid_mapping"].grid
+        cp = e.params.get("compiler_params") or {}
+        sem = (cp.get("mosaic") or {}).get("dimension_semantics") or ()
+        semantics.extend(sem)
+        for g, s in zip(grid, sem):
+            if s == "arbitrary":
+                serial *= g
+    return serial, dots, semantics
+
+
+def test_linear_tile_path_serialises_carry_with_n():
+    base, _, sem = _scan_structure("interpret", 1024)
+    quad, _, _ = _scan_structure("interpret", 4096)
+    big, _, _ = _scan_structure("interpret", 16384)
+    assert "arbitrary" in sem          # the carry dimension is sequential
+    assert base >= 2
+    assert quad == 4 * base            # serial steps scale linearly in n
+    assert big == 16 * base
+
+
+def test_logdepth_path_has_parallel_grids_and_log_combines():
+    s1, d1, sem1 = _scan_structure("tile_logdepth", 1024)
+    s2, d2, sem2 = _scan_structure("tile_logdepth", 16384)
+    # local block kernels carry nothing between grid steps
+    assert sem1 and set(sem1) == {"parallel"}
+    assert sem2 and set(sem2) == {"parallel"}
+    assert s1 == 1 and s2 == 1
+    # a 16x larger input costs at most a couple more tree rounds, nothing
+    # like the 16x serial-step growth of the linear path
+    assert d1 >= 1
+    assert d2 <= d1 + 4

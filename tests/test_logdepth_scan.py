@@ -1,0 +1,246 @@
+"""Log-depth MatMulScan (``tile_logdepth``) tests: the pure tree
+combines, both backends' glue (TPU/Pallas and Triton twins, interpret
+mode on CPU), exactness vs the ``ref.py`` oracles across pow2 / non-pow2
+/ lane-unaligned shapes and dtypes, exclusive scans through dispatch,
+autodiff via the ref twin, and the policy/knob plumbing (label survives
+resolution; ``radix``/``fan_in`` ride ``KNOB_SCHEMA``; the env shorthand
+steers the scan family)."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.core import policy as kpolicy
+from repro.kernels import backend, matmul_scan, ops, ref
+from repro.kernels.triton import ops as tops
+
+
+def _cumsum(x):
+    return np.cumsum(np.asarray(x, np.float64), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# the tree combines (pure XLA, no Pallas involved)
+
+
+@pytest.mark.parametrize("m", [1, 3, 16, 17, 64, 257, 1024])
+@pytest.mark.parametrize("radix", [2, 4, 16])
+def test_tree_scan_matches_cumsum(m, radix):
+    x = jax.random.normal(jax.random.PRNGKey(m), (5, m))
+    got = matmul_scan.tree_scan(x, radix=radix, fan_in=radix)
+    np.testing.assert_allclose(np.asarray(got), _cumsum(x),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m", [1, 7, 16, 100, 512])
+def test_tree_weighted_matches_sequential(m):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m))
+    t = jax.random.normal(k1, (3, m))
+    logp = -jax.random.uniform(k2, (3, m))
+    # t carries a trailing feature axis (F=1 for the scalar scans)
+    got = matmul_scan.tree_weighted(logp, t[..., None],
+                                    radix=4, fan_in=4)[..., 0]
+    want = ref.weighted_scan_ref(t, logp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_tree_weighted_trailing_features():
+    # the SSD glue runs the weighted tree over flattened (N*P) features
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    t = jax.random.normal(k1, (2, 33, 12))
+    logp = -jax.random.uniform(k2, (2, 33))
+    got = matmul_scan.tree_weighted(logp, t, radix=4, fan_in=4)
+    want = jnp.stack([
+        ref.weighted_scan_ref(t[..., j], logp) for j in range(t.shape[-1])
+    ], axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# exactness vs the oracles through the registry (both backends' glue)
+
+
+SHAPES = [(4, 100), (3, 1024), (2, 700), (8, 4096), (5,)]
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_scan_tile_logdepth_matches_ref_f32(shape):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    got = ops.segmented_scan(x, path="tile_logdepth")
+    np.testing.assert_allclose(np.asarray(got), _cumsum(x),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_scan_tile_logdepth_bf16_loose():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 512), jnp.bfloat16)
+    got = ops.segmented_scan(x, path="tile_logdepth")
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), _cumsum(x),
+                               rtol=2e-2, atol=2e-1)
+
+
+@pytest.mark.parametrize("n", [100, 1024])
+def test_dispatch_scan_exclusive_logdepth(n):
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, n))
+    got = dispatch.scan(x, path="tile_logdepth", exclusive=True)
+    want = np.concatenate(
+        [np.zeros((3, 1)), _cumsum(x)[:, :-1]], axis=-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [100, 700, 2048])
+def test_weighted_scan_tile_logdepth_matches_ref(n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    x = jax.random.normal(k1, (3, n))
+    la = -jax.random.uniform(k2, (3, n))
+    got = ops.weighted_scan(x, la, path="tile_logdepth")
+    want = ref.weighted_scan_ref(x, la)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def _ssd_case(L, key=5):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    b, h, p, g, n = 2, 4, 32, 2, 16
+    x = 0.2 * jax.random.normal(ks[0], (b, L, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+    a = -jnp.exp(0.2 * jax.random.normal(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (b, L, g, n)) / jnp.sqrt(float(n))
+    cc = jax.random.normal(ks[4], (b, L, g, n)) / jnp.sqrt(float(n))
+    return x, dt, a, bb, cc
+
+
+@pytest.mark.parametrize("L", [200, 384])
+def test_ssd_tile_logdepth_matches_ref(L):
+    args = _ssd_case(L)
+    y, h = ops.ssd_scan(*args, path="tile_logdepth", return_state=True)
+    yr, hr = ref.ssd_scan_ref(*args, return_state=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-3, atol=1e-3)
+
+
+# the Triton twins, kernel bodies through the interpreter on CPU
+
+
+def test_triton_scan_logdepth_twin():
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 300))
+    got = tops.scan_tile_logdepth_gpu(x, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _cumsum(x),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_triton_weighted_logdepth_twin():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(k1, (3, 200))
+    la = -jax.random.uniform(k2, (3, 200))
+    got = tops.weighted_scan_tile_logdepth_gpu(x, la, interpret=True)
+    want = ref.weighted_scan_ref(x, la)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_triton_ssd_logdepth_twin():
+    args = _ssd_case(200, key=8)
+    y, h = tops.ssd_tile_logdepth_gpu(*args, return_state=True,
+                                      interpret=True)
+    yr, hr = ref.ssd_scan_ref(*args, return_state=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# autodiff rides the ref twin
+
+
+def test_tile_logdepth_differentiates_like_ref():
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 130))
+    g_ld = jax.grad(lambda a: ops.segmented_scan(
+        a, path="tile_logdepth").sum())(x)
+    g_ref = jax.grad(lambda a: jnp.cumsum(
+        a.astype(jnp.float32), axis=-1).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_ld), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# policy / knob plumbing
+
+
+def test_label_survives_resolution_and_strict_fallback():
+    if backend.native_tile_backend() is not None:
+        pytest.skip("off-accelerator expectations")
+    silent = dataclasses.replace(kpolicy.get_policy(),
+                                 interpret_fallback="silent")
+    r = silent.resolve(explicit="tile_logdepth")
+    assert r == "tile_logdepth"          # label kept, unlike 'tile'
+    assert silent.resolve(level="kernel",
+                          explicit="tile_logdepth") == "tile_logdepth"
+    strict = dataclasses.replace(silent, interpret_fallback="error")
+    with pytest.raises(RuntimeError, match="tile_logdepth"):
+        strict.resolve(explicit="tile_logdepth")
+
+
+def test_logdepth_downgrade_warns_once(monkeypatch):
+    if backend.native_tile_backend() is not None:
+        pytest.skip("downgrade only happens off-accelerator")
+    monkeypatch.setattr(kpolicy, "_LOGDEPTH_DOWNGRADE_WARNED", False)
+    resolve = kpolicy.get_policy().resolve
+    with pytest.warns(UserWarning, match="tile_logdepth"):
+        assert resolve(explicit="tile_logdepth") == "tile_logdepth"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve(explicit="tile_logdepth") == "tile_logdepth"
+
+
+def test_radix_fan_in_ride_knob_schema():
+    for op in ("scan", "weighted_scan", "ssd"):
+        assert "radix" in kpolicy.KNOB_SCHEMA[op]
+        assert "fan_in" in kpolicy.KNOB_SCHEMA[op]
+    pol = kpolicy.KernelPolicy(path="tile_logdepth",
+                               op_tuning={"scan": {"radix": 4, "fan_in": 8}},
+                               interpret_fallback="silent")
+    spec = pol.resolve(op="scan", n=1024, dtype=jnp.float32).tuning
+    assert spec.get("radix") == 4 and spec.get("fan_in") == 8
+    # the overridden knobs steer the glue without changing results
+    x = jax.random.normal(jax.random.PRNGKey(10), (3, 1024))
+    got = ops.segmented_scan(x, policy=pol)
+    np.testing.assert_allclose(np.asarray(got), _cumsum(x),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_env_shorthand_steers_scan_family(monkeypatch):
+    spec = "scan=tile_logdepth,weighted_scan=tile_logdepth,ssd=tile_logdepth"
+    monkeypatch.setenv(kpolicy.ENV_PATH, spec)
+    pol = kpolicy.get_policy()
+    silent = dataclasses.replace(pol, interpret_fallback="silent")
+    assert silent.resolve(op="scan", n=1024,
+                          dtype=jnp.float32) == "tile_logdepth"
+    assert silent.resolve(op="weighted_scan", n=1024,
+                          dtype=jnp.float32) == "tile_logdepth"
+    assert silent.resolve(op="ssd", n=1024,
+                          dtype=jnp.float32) == "tile_logdepth"
+    # other ops keep their default resolution
+    assert silent.resolve(op="reduce", n=16,
+                          dtype=jnp.float32) != "tile_logdepth"
+
+
+def test_logdepth_registered_for_scan_family_only():
+    reg = backend.available_ops()
+    for name in ("segmented_scan", "weighted_scan", "ssd_scan"):
+        op = backend._REGISTRY[name]
+        assert op.tile_logdepth is not None, name
+        assert op.tile_logdepth_gpu is not None, name
+    with pytest.raises(RuntimeError, match="no log-depth"):
+        backend.pallas_op("segmented_reduce", jnp.ones((2, 64)),
+                          path="tile_logdepth")
+    assert "segmented_reduce" in reg

@@ -225,32 +225,26 @@ def test_per_call_string_overlays_active_policy():
 
 
 # ---------------------------------------------------------------------------
-# exactly one resolve implementation; the old entry points delegate
+# exactly one resolve implementation; the old entry points are gone
 
 
-def test_old_resolve_path_entry_points_delegate_with_deprecation():
-    kpolicy._WARNED.discard("deprecated:dispatch.resolve_path")
-    kpolicy._WARNED.discard("deprecated:backend.resolve_path")
-    with pytest.warns(DeprecationWarning, match="dispatch.resolve_path"):
-        assert dispatch.resolve_path("xla_tile") == "xla_tile"
-    with pytest.warns(DeprecationWarning, match="backend.resolve_path"):
-        assert backend.resolve_path("fused") == "fused"
-    # warn ONCE: a second call stays silent
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        assert dispatch.resolve_path("baseline") == "baseline"
-        assert backend.resolve_path("interpret") == "interpret"
-    # and they agree with the one true implementation
+def test_legacy_resolve_path_entry_points_removed():
+    """The PR-4 warn-once ``resolve_path`` delegates have been deleted:
+    resolution has exactly one entry point, ``KernelPolicy.resolve`` (per
+    call via ``path=``/``policy=`` on the ops themselves)."""
+    assert not hasattr(dispatch, "resolve_path")
+    assert not hasattr(backend, "resolve_path")
+    # the one true implementation covers both levels the delegates served
     pol = kpolicy.get_policy()
-    assert dispatch.resolve_path("fused") == pol.resolve(explicit="fused")
-    assert backend.resolve_path("fused") == \
-        pol.resolve(level="kernel", explicit="fused")
+    assert pol.resolve(explicit="xla_tile") == "xla_tile"
+    assert pol.resolve(explicit="baseline") == "baseline"
+    assert pol.resolve(level="kernel", explicit="fused") == "fused"
+    assert pol.resolve(level="kernel", explicit="interpret") == "interpret"
 
 
 def test_single_resolve_implementation_grep_guard():
-    """Both legacy ``resolve_path`` functions must be thin delegates: no
-    module outside core/policy.py re-implements resolution (= consults
-    native_tile_backend to map the generic 'tile' label)."""
+    """No module outside core/policy.py re-implements resolution
+    (= consults native_tile_backend to map the generic 'tile' label)."""
     pat = re.compile(r"native_tile_backend\(\)")
     offenders = []
     for p in sorted(SRC.rglob("*.py")):

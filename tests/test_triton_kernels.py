@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import dispatch
+from repro.core import policy as kpolicy
 from repro.kernels import backend, ops, ref
 from repro.kernels.triton import ops as tops
 from repro.kernels.triton.fused_rmsnorm import triton_fused_rmsnorm
@@ -226,7 +227,7 @@ def test_triton_attention_glue_unaligned_falls_back():
 def test_tile_gpu_off_gpu_raises_clear_error():
     x = jnp.ones((2, 100))
     with pytest.raises(RuntimeError, match="tile_gpu"):
-        backend.resolve_path("tile_gpu")
+        kpolicy.get_policy().resolve(level="kernel", explicit="tile_gpu")
     with pytest.raises(RuntimeError, match="requires a GPU"):
         ops.segmented_reduce(x, path="tile_gpu")
     with pytest.raises(RuntimeError, match="requires a GPU"):
@@ -240,11 +241,12 @@ def test_tile_gpu_off_gpu_raises_clear_error():
 def test_auto_never_selects_tile_gpu_off_gpu(monkeypatch):
     monkeypatch.delenv(backend.ENV_PATH, raising=False)
     for n in (16, 512, 1 << 14):
-        p = backend.resolve_path(op="segmented_reduce", n=n,
-                                 dtype=jnp.float32)
+        pol = kpolicy.get_policy()
+        p = pol.resolve(op="segmented_reduce", n=n, dtype=jnp.float32,
+                        level="kernel")
         assert p != "tile_gpu"
-        assert dispatch.resolve_path(op="reduce", n=n,
-                                     dtype=jnp.float32) != "tile_gpu"
+        assert pol.resolve(op="reduce", n=n,
+                           dtype=jnp.float32) != "tile_gpu"
 
 
 def test_registry_has_gpu_twins_for_all_five():

@@ -451,7 +451,9 @@ def test_sweep_deterministic_structure_on_cpu_interpret():
     noise may move the argmin, never the structure. At a tiny bucket the
     candidates collapse onto ONE executed geometry and the sweep must
     dedupe to a single timing (a 'winner' between identical executions
-    would be pure noise)."""
+    would be pure noise). The scan family sweeps a SECOND contender
+    family — log-depth MatMulScan specs under 'tile_logdepth:'-prefixed
+    keys — deduped and persisted by exactly the same rules."""
     kw = dict(ops=("reduce", "scan"), bands=(4,), dtypes=(jnp.float32,),
               iters=1, sweep_interpret=True, max_candidates=2)
     t1 = autotune.measure_table(**kw)
@@ -471,10 +473,20 @@ def test_sweep_deterministic_structure_on_cpu_interpret():
             if ex not in execs:
                 execs.append(ex)
                 persisted.append(layout.clamp_spec(axis, op, c, n=16))
-        assert len(e1[key]["sweep"]) == len(execs)
+        ld_execs, ld_persisted = [], []
+        for c in layout.logdepth_candidate_tuning(axis, op)[:2]:
+            ex = layout.clamp_spec(axis, op, c, n=16, rows=rows)
+            if ex not in ld_execs:
+                ld_execs.append(ex)
+                ld_persisted.append(layout.clamp_spec(axis, op, c, n=16))
+        assert len(e1[key]["sweep"]) == len(execs) + len(ld_execs)
+        prefixed = [s for s in e1[key]["sweep"]
+                    if s.startswith("tile_logdepth:")]
+        assert len(prefixed) == len(ld_execs)   # reduce sweeps none
         for t in (e1, e2):
             assert t[key]["tuning"] in [
-                {k: v for k, v in sorted(c.items())} for c in persisted]
+                {k: v for k, v in sorted(c.items())}
+                for c in persisted + ld_persisted]
 
 
 def test_sweep_persists_bucket_axis_clamp_only():
@@ -520,8 +532,8 @@ def test_no_literal_geometry_constants_outside_layout():
         r"^(?:Q|ROW_BLOCK|SSD_Q|BLOCK_[A-Z0-9_]+|LANES|SUBLANES|TILE"
         r"|MMA_TILE)\s*=\s*\d+", re.MULTILINE)
     kwarg_pat = re.compile(
-        r"\b(?:block_[a-z0-9]+|row_block|num_warps|num_stages|q)\s*"
-        r"(?::\s*[^=,()\n]+)?=\s*\d+")
+        r"\b(?:block_[a-z0-9]+|row_block|num_warps|num_stages|q|radix"
+        r"|fan_in)\s*(?::\s*[^=,()\n]+)?=\s*\d+")
     offenders = []
     for p in sorted((SRC / "kernels").rglob("*.py")):
         rel = p.relative_to(SRC)
